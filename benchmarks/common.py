@@ -1,0 +1,52 @@
+"""Shared benchmark infrastructure.
+
+Canonical contention setup (validated against paper §7.3 orderings):
+Qwen2.5-14B-class platform, 640-block KV pool, 20 Code-Writer apps — the
+regime where stalled caches average ~17% of the pool (peak ~88%, paper
+reports 18.5% peaks) and memory is the binding constraint.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.costmodel import (A100_PCIE, H20_QWEN32, H20X2_QWEN72,
+                                  PLATFORMS, TPU_V5E)
+from repro.core.engine import Engine, EngineConfig
+from repro.data.workloads import build_workload
+
+DEFAULTS = dict(gpu_blocks=640, max_running=64)
+
+
+def run_engine(mode: str, app: str = "code_writer", dataset: str = "d1",
+               qps: float = 1.0, n_apps: int = 20, seed: int = 1,
+               platform=A100_PCIE, max_time: float = 30000.0,
+               num_devices: int = 1, **engine_kw) -> dict:
+    kw = dict(DEFAULTS)
+    kw.update(engine_kw)
+    eng = Engine(EngineConfig.preset(mode, num_devices=num_devices, **kw),
+                 platform)
+    for t, g in build_workload(app, dataset, qps=qps, n_apps=n_apps,
+                               seed=seed):
+        eng.submit_app(g, t)
+    rep = eng.run(max_time=max_time)
+    rep["mode"] = mode
+    rep["qps"] = qps
+    rep["app"] = app
+    rep["dataset"] = dataset
+    rep["platform"] = platform.name
+    return rep
+
+
+class CsvWriter:
+    """Prints ``name,us_per_call,derived`` rows (benchmarks/run.py contract)
+    plus free-form derived columns."""
+
+    def __init__(self, out=None):
+        self.out = out or sys.stdout
+        self.rows = []
+
+    def row(self, name: str, us_per_call: float, derived: str = ""):
+        line = f"{name},{us_per_call:.3f},{derived}"
+        self.rows.append(line)
+        print(line, file=self.out, flush=True)

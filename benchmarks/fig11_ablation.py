@@ -1,0 +1,33 @@
+"""§7.3 / Fig. 11 — component analysis: baseline / agent / offload / full.
+
+Paper (Qwen2.5-14B Code-Writer, 20 apps, 1.0 QPS): agent alone -15.4%
+total; offload alone lowers total but not avg (2x swap volume of full);
+TokenCake lowest on every metric with 51% fewer swapped blocks than
+offload-alone. Also load dependence at 0.2 / 0.5 QPS.
+"""
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+
+MODES = ["baseline", "agent", "offload", "tokencake"]
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    qps_points = [1.0] if quick else [0.2, 0.5, 1.0]
+    for qps in qps_points:
+        swaps = {}
+        for mode in MODES:
+            rep = run_engine(mode, qps=qps, platform=A100_PCIE)
+            out[(qps, mode)] = rep
+            swaps[mode] = rep["swap_blocks"]
+            csv.row(f"fig11.qps{qps}.{mode}", rep["avg_latency"] * 1e6,
+                    f"total_s={rep['total_latency']:.1f};"
+                    f"avg_s={rep['avg_latency']:.1f};"
+                    f"p90_s={rep['p90_latency']:.1f};"
+                    f"tput_rps={rep['throughput_rps']:.4f};"
+                    f"offloads={rep['offloads']};"
+                    f"swap_blocks={rep['swap_blocks']}")
+        if swaps.get("offload"):
+            red = (1 - swaps["tokencake"] / max(swaps["offload"], 1)) * 100
+            csv.row(f"fig11.qps{qps}.swap_reduction_pct", red,
+                    "tokencake_vs_offload_swap_volume")
+    return out

@@ -1,0 +1,22 @@
+"""Fig. 12 — remote-KV-cache baseline (Mooncake) comparison.
+
+Paper: at 0.2 QPS Mooncake helps (-24.8% vs vLLM) but TokenCake is 4.8%
+better; at 0.5 QPS the gap widens (TokenCake -28% vs Mooncake). Offload
+alone is worse than Mooncake at both loads.
+"""
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+
+MODES = ["baseline", "mooncake", "offload", "tokencake"]
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    for qps in ([0.5] if quick else [0.2, 0.5]):
+        for mode in MODES:
+            rep = run_engine(mode, qps=qps, platform=A100_PCIE)
+            out[(qps, mode)] = rep
+            csv.row(f"fig12.qps{qps}.{mode}", rep["avg_latency"] * 1e6,
+                    f"avg_s={rep['avg_latency']:.1f};"
+                    f"tput_rps={rep['throughput_rps']:.4f};"
+                    f"cpu_prefix_hits={rep['cpu_prefix_hits']}")
+    return out

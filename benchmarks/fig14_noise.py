@@ -1,0 +1,24 @@
+"""Fig. 14 — tool-time prediction noise sensitivity.
+
+Paper: non-monotonic. Zero noise: TokenCake -14.8% vs agent-only. Noise
+0.25: +8.3% regression (marginal errors pass the gate but migrations
+mistime). Noise 0.5: recovers -3.4% (feasibility checks reject outright).
+"""
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+
+NOISE = [0.0, 0.25, 0.5]
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    for s in (NOISE if not quick else [0.0, 0.5]):
+        agent = run_engine("agent", qps=1.0, platform=A100_PCIE,
+                           tool_noise=s)
+        tc = run_engine("tokencake", qps=1.0, platform=A100_PCIE,
+                        tool_noise=s)
+        delta = (tc["avg_latency"] / agent["avg_latency"] - 1) * 100
+        out[s] = (agent, tc, delta)
+        csv.row(f"fig14.noise{s}", delta,
+                f"tokencake_vs_agent_pct={delta:.1f};"
+                f"offloads={tc['offloads']}")
+    return out

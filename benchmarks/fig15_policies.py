@@ -1,0 +1,23 @@
+"""Fig. 15 — request-selection policy for the opportunistic gate.
+
+Paper: first_fit best overall (preserves spatial queue order);
+priority_first lowest mean but inflated tail; best_fit worst.
+"""
+import dataclasses
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+from repro.core.temporal import TemporalConfig
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    for policy in ["first_fit", "best_fit", "priority_first"]:
+        rep = run_engine(
+            "tokencake", qps=1.0, platform=A100_PCIE,
+            temporal=TemporalConfig(selection_policy=policy))
+        out[policy] = rep
+        csv.row(f"fig15.{policy}", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"p95_s={rep['p95_latency']:.1f};"
+                f"tput_rps={rep['throughput_rps']:.4f};"
+                f"offloads={rep['offloads']}")
+    return out

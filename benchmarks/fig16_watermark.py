@@ -1,0 +1,32 @@
+"""Fig. 16 — spatial pressure watermark sensitivity.
+
+Paper: 0.05 / 0.06 trigger offloads frequently (similar latency); 0.08
+rejects all offload candidates at that load and is fastest there.
+
+Reproduction note: in our engine the low-watermark regime is flat and the
+HIGH watermark (0.15) is mildly WORSE — deferring early offloads lets
+stalled caches pile up and later triggers a burst of churnier migrations.
+The paper's "rejecting marginal offloads wins" result does not reproduce
+because our admission control already refuses to lend freed blocks to
+requests that cannot return them before the upload (the pending-upload-debt
+lien, §3.2) — marginal offloads are therefore harmless here. Selectivity
+still shows up as the 2-4x lower swap volume vs offload-only (Fig 11).
+"""
+import dataclasses
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+from repro.core.temporal import TemporalConfig
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    # larger pool + moderate load so waiting pressure spans the published
+    # 0.05-0.08 range (with a shrunken pool the queue always exceeds 8%)
+    out = {}
+    for wm in [0.0, 0.02, 0.05, 0.08, 0.15]:
+        rep = run_engine(
+            "tokencake", qps=0.3, n_apps=30, platform=A100_PCIE,
+            gpu_blocks=4096, max_running=192,
+            temporal=TemporalConfig(pressure_watermark=wm))
+        out[wm] = rep
+        csv.row(f"fig16.watermark{wm}", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};offloads={rep['offloads']}")
+    return out

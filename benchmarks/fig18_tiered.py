@@ -1,0 +1,36 @@
+"""Beyond-paper: tiered offload destinations (paper §9 future work).
+
+The paper suggests the Temporal Scheduler could target a neighbor device
+over NVLink (GPU) / ICI (TPU) as a faster offload tier than host memory.
+Here the whole policy stack is transfer-model-agnostic, so implementing the
+suggestion is a cost-model swap: ICI-tier per-block constants (~10x PCIe).
+
+Expected effect: the Alg.-1 hard gate ``T_fc <= T_transfer`` admits much
+shorter stalls (file I/O at ~100 ms becomes offloadable), so offload counts
+rise and latency drops further — bounded by the lien-protected admission.
+"""
+import dataclasses
+
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+
+ICI_TIER = dataclasses.replace(
+    A100_PCIE, name="a100_ici_tier",
+    offload_ms_per_block=0.012, upload_ms_per_block=0.012,
+    transfer_fixed_ms=0.02)
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    for name, plat in [("host_tier", A100_PCIE), ("ici_tier", ICI_TIER)]:
+        rep = run_engine("tokencake", qps=1.0, platform=plat)
+        out[name] = rep
+        csv.row(f"fig18.{name}", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"offloads={rep['offloads']};"
+                f"p90_s={rep['p90_latency']:.1f}")
+    base = run_engine("baseline", qps=1.0, platform=A100_PCIE)
+    d_host = (1 - out["host_tier"]["avg_latency"] / base["avg_latency"]) * 100
+    d_ici = (1 - out["ici_tier"]["avg_latency"] / base["avg_latency"]) * 100
+    csv.row("fig18.delta_vs_vllm", d_ici,
+            f"host_tier_pct={d_host:.1f};ici_tier_pct={d_ici:.1f}")
+    return out

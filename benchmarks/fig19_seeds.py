@@ -1,0 +1,25 @@
+"""Beyond-paper: seed robustness of the §7.3 component ordering.
+
+The paper reports one workload draw; here the full ablation runs across
+five Poisson/length seeds to show the ordering is structural, not sampled.
+"""
+from benchmarks.common import A100_PCIE, CsvWriter, run_engine
+
+MODES = ["baseline", "agent", "offload", "tokencake"]
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    seeds = [1, 2, 3] if quick else [1, 2, 3, 4, 5]
+    wins = 0
+    out = {}
+    for seed in seeds:
+        res = {m: run_engine(m, qps=1.0, seed=seed) for m in MODES}
+        out[seed] = res
+        best = min(MODES, key=lambda m: res[m]["avg_latency"])
+        wins += best == "tokencake"
+        csv.row(f"fig19.seed{seed}", res["tokencake"]["avg_latency"] * 1e6,
+                ";".join(f"{m}_s={res[m]['avg_latency']:.1f}"
+                         for m in MODES) + f";best={best}")
+    csv.row("fig19.tokencake_win_rate", 100.0 * wins / len(seeds),
+            f"wins={wins}/{len(seeds)}")
+    return out

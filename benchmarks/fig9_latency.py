@@ -1,0 +1,43 @@
+"""Fig. 9 — end-to-end latency vs QPS.
+
+Paper: TokenCake lowest across all configurations; at low QPS TokenCake ~=
+vLLM (no contention); the gap widens with load (47.06% at 1.0 QPS on
+Qwen2.5-14B Code-Writer D1). Three platforms x two apps, systems:
+vLLM / vLLM-Prefix / Mooncake / TokenCake.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (A100_PCIE, H20_QWEN32, H20X2_QWEN72,
+                               CsvWriter, run_engine)
+
+QPS_GRID = [0.05, 0.2, 0.5, 1.0]
+SYSTEMS = ["baseline", "vllm_prefix", "mooncake", "tokencake"]
+PANELS = [
+    (A100_PCIE, "code_writer", "d1", 1),
+    (A100_PCIE, "deep_research", "d1", 1),
+    (H20_QWEN32, "code_writer", "d2", 1),
+    (H20X2_QWEN72, "code_writer", "d2", 2),   # TP2 (paper 72B config)
+]
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    qps_grid = QPS_GRID if not quick else [0.2, 1.0]
+    panels = PANELS if not quick else PANELS[:1]
+    results = {}
+    for plat, app, ds, ndev in panels:
+        for qps in qps_grid:
+            base = None
+            for mode in SYSTEMS:
+                rep = run_engine(mode, app=app, dataset=ds, qps=qps,
+                                 platform=plat, num_devices=ndev)
+                results[(plat.name, app, qps, mode)] = rep
+                if mode == "baseline":
+                    base = rep["avg_latency"]
+                delta = (1 - rep["avg_latency"] / base) * 100 if base else 0
+                csv.row(f"fig9.{plat.name}.{app}.{ds}.qps{qps}.{mode}",
+                        rep["avg_latency"] * 1e6,
+                        f"avg_s={rep['avg_latency']:.1f};"
+                        f"p90_s={rep['p90_latency']:.1f};"
+                        f"vs_vllm_pct={delta:.1f};"
+                        f"apps={rep['apps_finished']}")
+    return results

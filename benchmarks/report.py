@@ -1,0 +1,129 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md.
+
+Reads results/dryrun/*.json, results/dryrun_perf/*.json and
+results/bench/summary.csv; rewrites the blocks between
+``<!-- BEGIN:<name> -->`` / ``<!-- END:<name> -->`` markers.
+
+    PYTHONPATH=src:. python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import (RooflinePoint, load_all, load_point,
+                                 model_flops)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | status | args/chip GiB | temp GiB | "
+            "HLO GFLOPs/chip (scan-corr) | collective GiB/chip |",
+            "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(ROOT, "results/dryrun/*.json"))):
+        r = json.load(open(p))
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | - | - | - | - |")
+            continue
+        cc = r.get("cost_scan_corrected", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['memory']['argument_bytes']/2**30:.2f} | "
+            f"{r['memory']['temp_bytes']/2**30:.2f} | "
+            f"{cc.get('flops', 0)/1e9:.1f} | "
+            f"{r['collectives']['total']/2**30:.3f} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    pts = load_all()
+    rows = ["| arch | shape | mesh | compute s | memory s (HLO ub) | "
+            "collective s | dominant | MODEL_FLOPS/HLO | next move |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(pts, key=lambda p: (p.arch, p.shape, p.mesh)):
+        rows.append(
+            f"| {p.arch} | {p.shape} | {p.mesh} | {p.compute_s:.3e} | "
+            f"{p.memory_s:.3e} | {p.collective_s:.3e} | {p.dominant} | "
+            f"{p.useful_ratio:.2f} | {p.advice()} |")
+    return "\n".join(rows)
+
+
+def perf_table() -> str:
+    rows = ["| pair | metric | paper-faithful baseline | optimized | delta |",
+            "|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(ROOT,
+                                           "results/dryrun_perf/*.json"))):
+        opt = json.load(open(p))
+        base_path = os.path.join(ROOT, "results/dryrun",
+                                 os.path.basename(p))
+        if not os.path.exists(base_path) or opt["status"] != "ok":
+            continue
+        base = json.load(open(base_path))
+        pair = f"{opt['arch']} x {opt['shape']} ({opt['mesh']})"
+        for metric, get in [
+            ("args bytes/chip", lambda r: r["memory"]["argument_bytes"]),
+            ("HLO flops/chip", lambda r: r.get("cost_scan_corrected",
+                                               {}).get("flops", 0)),
+            ("HLO bytes/chip", lambda r: r.get("cost_scan_corrected",
+                                               {}).get("bytes", 0)),
+            ("collective bytes/chip",
+             lambda r: r["collectives"]["total"]),
+        ]:
+            b, o = get(base), get(opt)
+            if not b:
+                continue
+            rows.append(f"| {pair} | {metric} | {b:.3e} | {o:.3e} | "
+                        f"{(o/b - 1)*100:+.1f}% |")
+    return "\n".join(rows)
+
+
+def bench_section(prefix: str) -> str:
+    path = os.path.join(ROOT, "results/bench/summary.csv")
+    if not os.path.exists(path):
+        return "(run benchmarks first)"
+    out = [l for l in open(path).read().splitlines()
+           if l.startswith(prefix)]
+    return "```\n" + "\n".join(out) + "\n```"
+
+
+SECTIONS = {
+    "dryrun_table": dryrun_table,
+    "roofline_table": roofline_table,
+    "perf_table": perf_table,
+    "fig9": lambda: bench_section("fig9"),
+    "fig10": lambda: bench_section("fig10"),
+    "fig11": lambda: bench_section("fig11"),
+    "fig12": lambda: bench_section("fig12"),
+    "fig13": lambda: bench_section("fig13"),
+    "fig14": lambda: bench_section("fig14"),
+    "fig15": lambda: bench_section("fig15"),
+    "fig16": lambda: bench_section("fig16"),
+    "fig17": lambda: bench_section("fig17"),
+    "fig18": lambda: bench_section("fig18"),
+}
+
+
+def main():
+    text = open(EXP).read()
+    for name, fn in SECTIONS.items():
+        begin, end = f"<!-- BEGIN:{name} -->", f"<!-- END:{name} -->"
+        if begin not in text:
+            continue
+        try:
+            body = fn()
+        except Exception as e:  # noqa: BLE001
+            body = f"(generation failed: {e})"
+        pattern = re.compile(re.escape(begin) + ".*?" + re.escape(end),
+                             re.DOTALL)
+        text = pattern.sub(begin + "\n" + body + "\n" + end, text)
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` runs a reduced
+grid (CI-sized); default reproduces every paper figure at benchmark scale.
+Results also land in results/bench/summary.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import CsvWriter  # noqa: E402
+
+FIGURES = [
+    ("fig9_latency", "Fig 9 e2e latency vs QPS"),
+    ("fig10_utilization", "Fig 10 KV utilization"),
+    ("fig11_ablation", "Fig 11 / §7.3 component analysis"),
+    ("fig12_mooncake", "Fig 12 Mooncake comparison"),
+    ("fig13_parrot", "Fig 13 Parrot comparison"),
+    ("fig14_noise", "Fig 14 tool-time noise"),
+    ("fig15_policies", "Fig 15 selection policies"),
+    ("fig16_watermark", "Fig 16 pressure watermark"),
+    ("fig17_transfer", "Fig 17 transfer overhead"),
+    ("fig18_tiered", "Beyond-paper: tiered offload (paper §9)"),
+    ("fig19_seeds", "Beyond-paper: seed robustness of the ablation"),
+    ("roofline", "Roofline terms from dry-run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure module names")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    csv = CsvWriter()
+    t_all = time.time()
+    for mod_name, desc in FIGURES:
+        if only and mod_name not in only:
+            continue
+        print(f"# === {mod_name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(csv, quick=args.quick)
+        except Exception:  # noqa: BLE001 — keep the suite going
+            print(f"# {mod_name} FAILED:\n{traceback.format_exc()}",
+                  flush=True)
+            csv.row(f"{mod_name}.FAILED", 0.0, "exception")
+        print(f"# --- {mod_name} took {time.time()-t0:.0f}s", flush=True)
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "summary.csv"), "w") as f:
+        f.write("\n".join(csv.rows) + "\n")
+    print(f"# total {time.time()-t_all:.0f}s, "
+          f"{len(csv.rows)} rows -> results/bench/summary.csv", flush=True)
+
+
+if __name__ == "__main__":
+    main()

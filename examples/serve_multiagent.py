@@ -1,0 +1,66 @@
+"""End-to-end serving driver with REAL compute (the paper's kind of system).
+
+A tiny GQA model serves batched multi-agent requests through the full
+TokenCake stack: paged KV cache in device arrays, Pallas paged-attention
+decode (interpret mode on CPU), real host offload/upload through the Pallas
+gather/scatter migration kernels, both schedulers live.
+
+    PYTHONPATH=src python examples/serve_multiagent.py [--apps 3]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import get_smoke_config
+from repro.core.backend import JaxBackend
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.temporal import TemporalConfig
+from repro.data.workloads import build_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apps", type=int, default=3)
+    ap.add_argument("--arch", default="glm4_9b",
+                    help="any assigned arch id (reduced smoke variant)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    ecfg = EngineConfig.preset(
+        "tokencake", gpu_blocks=128, host_blocks=256, max_running=8,
+        temporal=TemporalConfig(score_threshold=-1.0, pressure_watermark=0.0))
+    backend = JaxBackend(cfg, ecfg, A100_PCIE)
+    eng = Engine(ecfg, A100_PCIE, backend=backend)
+
+    print(f"serving {args.apps} deep-research apps on {cfg.name} "
+          f"({cfg.num_layers}L d{cfg.d_model}) with real paged KV + "
+          f"Pallas kernels...\n")
+    for t, g in build_workload("deep_research", qps=2.0, n_apps=args.apps,
+                               seed=0):
+        for n in g.nodes.values():   # shrink for the 128-block pool
+            n.prompt_len = min(n.prompt_len, 64)
+            n.decode_segments = [min(s, 16) for s in n.decode_segments]
+        eng.submit_app(g, t)
+
+    t0 = time.perf_counter()
+    rep = eng.run(max_time=5000)
+    wall = time.perf_counter() - t0
+    print(f"apps finished      {rep['apps_finished']}/{args.apps}")
+    print(f"decoded tokens     {rep['decoded_tokens']}")
+    print(f"offload cycles     {rep['offloads']} "
+          f"(real D2H/H2D through the Pallas migration kernels)")
+    print(f"virtual latency    avg {rep['avg_latency']:.1f}s")
+    print(f"wall time          {wall:.1f}s (interpret-mode CPU)")
+    # prove generations exist
+    some = list(backend.generated.items())[:3]
+    for rid, toks in some:
+        print(f"  {rid}: generated {len(toks)} tokens, tail {toks[-5:]}")
+
+
+if __name__ == "__main__":
+    main()

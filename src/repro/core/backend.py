@@ -1,0 +1,141 @@
+"""Execution backends.
+
+The scheduling core is backend-agnostic (DESIGN.md §2): the engine calls
+``decode`` / ``prefill`` / ``copy_out`` / ``copy_in`` and charges time from
+the platform cost model. ``SimBackend`` is a no-op data plane (pure
+discrete-event simulation — the benchmark harness). ``JaxBackend`` runs real
+JAX compute against a real paged KV cache with the Pallas kernels, used by
+integration tests and the serving example; it validates that the scheduler's
+block accounting is coherent with an actual data plane (offloaded caches
+really leave the device and come back bit-exact).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache.paged import PagedKVCache
+from repro.models import model as M
+
+
+class SimBackend:
+    """Cost-model-only backend (the default for benchmarks)."""
+
+    def prefill(self, reqs):
+        pass
+
+    def decode(self, reqs):
+        pass
+
+    def copy_out(self, req):
+        pass
+
+    def copy_in(self, req):
+        pass
+
+
+class JaxBackend:
+    """Real compute: tiny model, real paged KV, real host offload.
+
+    Each engine request maps to a row in a fixed-capacity batch of block
+    tables. Decode runs the Pallas paged-attention kernel per layer.
+    """
+
+    def __init__(self, cfg, engine_cfg, platform, key=None):
+        self.cfg = cfg
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = M.init_params(cfg, self.key)
+        self.cache = PagedKVCache(cfg, engine_cfg.gpu_blocks,
+                                  platform.block_tokens,
+                                  host_blocks=engine_cfg.host_blocks)
+        self.block_tokens = platform.block_tokens
+        self.generated: Dict[str, List[int]] = {}
+        self._prefilled: set = set()
+
+    # -- engine hooks ----------------------------------------------------------
+    def decode(self, reqs):
+        reqs = [r for r in reqs if r.num_gpu_blocks > 0]
+        if not reqs:
+            return
+        for r in reqs:
+            if r.rid not in self._prefilled:
+                self._prefill_one(r)
+        self._decode_batch(reqs)
+
+    def copy_out(self, req):
+        self.cache.offload(req.gpu_blocks, req.host_blocks)
+
+    def copy_in(self, req):
+        self.cache.upload(req.host_blocks, req.reserved_upload_blocks)
+
+    # -- internals --------------------------------------------------------------
+    def _prefill_one(self, req):
+        toks = [t % self.cfg.vocab_size for t in req.prompt_tokens]
+        toks += self.generated.get(req.rid, [])
+        batch = {"tokens": jnp.asarray([toks], jnp.int32)}
+        if self.cfg.arch_type == "vlm":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.num_patch_tokens, self.cfg.d_model))
+        if self.cfg.arch_type == "audio":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.encoder_frames, self.cfg.d_model))
+        _, cache = M.prefill(self.cfg, self.params, batch)
+        if "k" in cache:
+            # cache k: (L, 1, S, Hkv, D) -> write into the paged pool
+            self.cache.write_prefill(req.gpu_blocks, cache["k"][:, 0],
+                                     cache["v"][:, 0])
+        self._prefilled.add(req.rid)
+
+    def _decode_batch(self, reqs):
+        if self.cfg.arch_type == "ssm":
+            return  # SSM decode state handled by dense path in examples
+        bt_len = max(len(r.gpu_blocks) for r in reqs)
+        tables = np.zeros((len(reqs), bt_len), np.int32)
+        lens = np.zeros((len(reqs),), np.int32)
+        toks = np.zeros((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            tables[i, :len(r.gpu_blocks)] = r.gpu_blocks
+            lens[i] = min(r.context_len,
+                          len(r.gpu_blocks) * self.block_tokens)
+            prev = self.generated.get(r.rid) or [t % self.cfg.vocab_size
+                                                 for t in r.prompt_tokens[-1:]]
+            toks[i] = prev[-1]
+        logits = self._forward_decode(jnp.asarray(toks), jnp.asarray(tables),
+                                      jnp.asarray(lens))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i, r in enumerate(reqs):
+            self.generated.setdefault(r.rid, []).append(int(nxt[i]))
+
+    def _forward_decode(self, tokens, tables, lens):
+        """Greedy single-token decode using the paged pool per layer."""
+        from repro.models import layers as L
+        cfg, params = self.cfg, self.params
+        x = params["embed"][tokens][:, None, :]           # (B, 1, d)
+        stacked = params["layers"]
+        nl = cfg.num_layers
+        for l in range(nl):
+            lp = jax.tree.map(lambda a: a[l], stacked)
+            if "attn_norm" in lp:
+                xn = L.rms_norm(x, lp["attn_norm"])
+                q, k, v = L.qkv_project(cfg, lp, xn)
+                pos = lens[:, None]                       # (B, 1)
+                q = L.apply_rope(q, pos, cfg.rope_theta)
+                k = L.apply_rope(k, pos, cfg.rope_theta)
+                # write the new token's KV then attend over the pages
+                for i in range(tokens.shape[0]):
+                    bid = tables[i, lens[i] // self.block_tokens]
+                    off = lens[i] % self.block_tokens
+                    self.cache.k = self.cache.k.at[l, bid, off].set(
+                        k[i, 0].astype(self.cache.k.dtype))
+                    self.cache.v = self.cache.v.at[l, bid, off].set(
+                        v[i, 0].astype(self.cache.v.dtype))
+                out = self.cache.decode_attention(
+                    l, q[:, 0], tables, lens + 1)
+                x = x + L.attn_out(lp, out[:, None])
+                if "w1" in lp:
+                    x = x + L.mlp(lp, L.rms_norm(x, lp["mlp_norm"]))
+        h = L.rms_norm(x, params["final_norm"])
+        return (h @ params["unembed"])[:, 0]

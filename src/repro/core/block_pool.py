@@ -1,0 +1,227 @@
+"""Paged KV block pools (paper §6.3 CPU Migration Infrastructure).
+
+Two pools:
+ * ``DevicePool`` — GPU/TPU KV blocks. Supports a *reserved* partition
+   managed by the Spatial Scheduler (§5.1) on top of a shared free list.
+ * ``HostPool``  — CPU offload destination with a lightweight free list that
+   recycles fixed-size blocks without returning them to the OS allocator
+   (the paper measures this cutting worst-case allocation latency from ~1 s
+   to sub-millisecond).
+
+The pool owns the GPU<->CPU block mapping, block hashes, and the prefix-cache
+indices. Blocks issued to an in-flight transfer are marked *pending-free*:
+they return to the free list only when the transfer-complete callback fires,
+preventing reallocation of blocks still being read (§6.3).
+
+This module tracks *identifiers and metadata only* — actual tensor movement
+belongs to the execution backend, keeping the scheduling logic identical
+between the simulator and the JAX engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class BlockMeta:
+    block_id: int
+    owner: Optional[str] = None      # request id
+    hash_key: Optional[Tuple] = None
+
+
+class DevicePool:
+    """Fixed-size device KV block pool with reserved-capacity accounting."""
+
+    def __init__(self, num_blocks: int, device: int = 0):
+        self.device = device
+        self.num_blocks = num_blocks
+        self.free_list: List[int] = list(range(num_blocks))
+        self.meta: Dict[int, BlockMeta] = {
+            i: BlockMeta(i) for i in range(num_blocks)}
+        self.pending_free: Set[int] = set()
+        # prefix cache: hash -> block id (valid cached content, owner freed)
+        self.prefix_index: Dict[Tuple, int] = {}
+        self.cached_blocks: Set[int] = set()
+        # spatial reservations: agent_type -> guaranteed block floor.
+        # Semantics (§5.1, floor interpretation): a type's reservation counts
+        # blocks it ALREADY holds, so protected-but-busy types do not idle
+        # capacity; only the unmet part of a floor is held back from the
+        # shared pool.
+        self.reserved_quota: Dict[str, int] = {}
+        self.type_held: Dict[str, int] = {}    # live blocks per agent type
+
+    # ---- accounting ---------------------------------------------------------
+    @property
+    def used(self) -> int:
+        return (self.num_blocks - len(self.free_list)
+                - len(self.pending_free) - len(self.cached_blocks))
+
+    @property
+    def free(self) -> int:
+        """Blocks allocatable right now (cached blocks are reclaimable)."""
+        return len(self.free_list) + len(self.cached_blocks)
+
+    @property
+    def usage(self) -> float:
+        return 1.0 - self.free / max(self.num_blocks, 1)
+
+    def reserved_total(self) -> int:
+        return sum(self.reserved_quota.values())
+
+    def reserved_free(self, agent_type: str) -> int:
+        """Unmet part of this type's floor (usable only by this type)."""
+        return max(0, self.reserved_quota.get(agent_type, 0)
+                   - self.type_held.get(agent_type, 0))
+
+    def shared_free(self) -> int:
+        """Free blocks not spoken for by unmet reservation floors."""
+        outstanding = sum(max(0, q - self.type_held.get(t, 0))
+                          for t, q in self.reserved_quota.items())
+        return max(0, self.free - outstanding)
+
+    # ---- allocation ---------------------------------------------------------
+    def _pop_free(self) -> int:
+        if self.free_list:
+            return self.free_list.pop()
+        if self.cached_blocks:  # reclaim a prefix-cached block (LRU-ish)
+            bid = self.cached_blocks.pop()
+            m = self.meta[bid]
+            if m.hash_key is not None:
+                self.prefix_index.pop(m.hash_key, None)
+                m.hash_key = None
+            return bid
+        raise OutOfBlocks(f"device {self.device} pool exhausted")
+
+    def allocate(self, n: int, owner: str,
+                 agent_type: Optional[str] = None) -> List[int]:
+        if n > self.free:
+            raise OutOfBlocks(
+                f"need {n}, free {self.free} (device {self.device})")
+        blocks = []
+        for _ in range(n):
+            bid = self._pop_free()
+            self.meta[bid].owner = owner
+            blocks.append(bid)
+        if agent_type is not None:
+            self.type_held[agent_type] = \
+                self.type_held.get(agent_type, 0) + n
+        return blocks
+
+    def release(self, blocks: Sequence[int], agent_type: Optional[str] = None,
+                cache: bool = False) -> None:
+        """Free blocks. ``cache=True`` keeps content in the prefix index."""
+        for bid in blocks:
+            m = self.meta[bid]
+            m.owner = None
+            if cache and m.hash_key is not None:
+                self.prefix_index[m.hash_key] = bid
+                self.cached_blocks.add(bid)
+            else:
+                m.hash_key = None
+                self.free_list.append(bid)
+        if agent_type is not None and blocks:
+            self.type_held[agent_type] = max(
+                0, self.type_held.get(agent_type, 0) - len(blocks))
+
+    # ---- pending-free (async transfer in flight) ----------------------------
+    def mark_pending_free(self, blocks: Sequence[int],
+                          agent_type: Optional[str] = None) -> None:
+        for bid in blocks:
+            self.meta[bid].owner = None
+            self.pending_free.add(bid)
+        if agent_type is not None and blocks:
+            self.type_held[agent_type] = max(
+                0, self.type_held.get(agent_type, 0) - len(blocks))
+
+    def complete_pending_free(self, blocks: Sequence[int]) -> None:
+        for bid in blocks:
+            if bid in self.pending_free:
+                self.pending_free.remove(bid)
+                self.free_list.append(bid)
+
+    # ---- prefix cache --------------------------------------------------------
+    def set_hashes(self, blocks: Sequence[int], hashes: Sequence[Tuple]):
+        for bid, h in zip(blocks, hashes):
+            self.meta[bid].hash_key = h
+
+    def lookup_prefix(self, hashes: Sequence[Tuple]) -> List[int]:
+        """Longest-prefix hit: cached block ids for a leading run of hashes."""
+        hit = []
+        for h in hashes:
+            bid = self.prefix_index.get(h)
+            if bid is None or bid not in self.cached_blocks:
+                break
+            hit.append(bid)
+        return hit
+
+    def claim_cached(self, blocks: Sequence[int], owner: str) -> None:
+        for bid in blocks:
+            assert bid in self.cached_blocks, bid
+            self.cached_blocks.remove(bid)
+            self.prefix_index.pop(self.meta[bid].hash_key, None)
+            self.meta[bid].owner = owner
+
+
+class HostPool:
+    """CPU offload pool: free-list recycling, CPU prefix-cache index (§6.3)."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self.free_list: List[int] = list(range(num_blocks))
+        self.owner: Dict[int, Optional[str]] = {}
+        self.hash_of: Dict[int, Tuple] = {}
+        self.prefix_index: Dict[Tuple, int] = {}   # CPU prefix cache
+
+    @property
+    def free(self) -> int:
+        return len(self.free_list)
+
+    @property
+    def used(self) -> int:
+        return self.num_blocks - self.free
+
+    def allocate(self, n: int, owner: str) -> List[int]:
+        if n > self.free:
+            raise OutOfBlocks(f"host pool: need {n}, free {self.free}")
+        blocks = [self.free_list.pop() for _ in range(n)]
+        for b in blocks:
+            self.owner[b] = owner
+        return blocks
+
+    def release(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            self.owner.pop(b, None)
+            h = self.hash_of.pop(b, None)
+            if h is not None:
+                self.prefix_index.pop(h, None)
+            self.free_list.append(b)
+
+    def index_hashes(self, blocks: Sequence[int], hashes: Sequence[Tuple]):
+        for b, h in zip(blocks, hashes):
+            self.hash_of[b] = h
+            self.prefix_index[h] = b
+
+    def lookup_prefix(self, hashes: Sequence[Tuple]) -> List[int]:
+        hit = []
+        for h in hashes:
+            b = self.prefix_index.get(h)
+            if b is None:
+                break
+            hit.append(b)
+        return hit
+
+
+def block_hashes(token_ids: Sequence[int], block_tokens: int,
+                 extra: Tuple = ()) -> List[Tuple]:
+    """Chained content hashes per block (vLLM-style prefix keys)."""
+    out, prev = [], hash(("root",) + tuple(extra))
+    for i in range(0, len(token_ids) - len(token_ids) % block_tokens,
+                   block_tokens):
+        prev = hash((prev,) + tuple(token_ids[i:i + block_tokens]))
+        out.append((prev,))
+    return out

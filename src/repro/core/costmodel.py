@@ -1,0 +1,123 @@
+"""Platform cost model (paper §4.2 Eq. 2, calibrated per §7.6).
+
+The Temporal Scheduler's gate needs T_offload/T_upload per block and the
+system decode throughput. Constants are calibrated per platform:
+
+ * ``A100_PCIE`` reproduces the paper's Fig. 17 measurements for
+   Qwen2.5-14B: 16 tok/block, 3 MiB/block bf16; 256 blocks -> 32.0 ms
+   offload / 31.7 ms upload; recompute of 4096 tokens = 1815 ms
+   (28.5x slower than the 63.7 ms round trip).
+ * ``TPU_V5E`` is the target platform: same linear per-block model with the
+   host-DMA bandwidth, plus ICI constants for the multi-pod path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class PlatformModel:
+    name: str
+    block_tokens: int           # tokens per KV block
+    block_bytes: int            # bytes per block (all layers, bf16)
+    offload_ms_per_block: float
+    upload_ms_per_block: float
+    transfer_fixed_ms: float    # per-transfer launch latency
+    prefill_ms_per_token: float # recompute cost (linear regime)
+    decode_ms_fixed: float      # per-iteration fixed cost
+    decode_ms_per_seq: float    # marginal per-sequence cost per iteration
+    hbm_bytes: int              # KV pool budget
+    host_bytes: int             # CPU offload pool budget (paper: 100 GB)
+
+    # ---- Eq. 2: T_transfer = T_offload(N) + T_upload(N) ---------------------
+    def offload_time(self, n_blocks: int) -> float:
+        return (self.transfer_fixed_ms
+                + n_blocks * self.offload_ms_per_block) / 1e3
+
+    def upload_time(self, n_blocks: int) -> float:
+        return (self.transfer_fixed_ms
+                + n_blocks * self.upload_ms_per_block) / 1e3
+
+    def transfer_time(self, n_blocks: int) -> float:
+        return self.offload_time(n_blocks) + self.upload_time(n_blocks)
+
+    def recompute_time(self, n_tokens: int) -> float:
+        return n_tokens * self.prefill_ms_per_token / 1e3
+
+    def decode_iter_time(self, batch_size: int) -> float:
+        return (self.decode_ms_fixed
+                + batch_size * self.decode_ms_per_seq) / 1e3
+
+    def decode_throughput(self, batch_size: int) -> float:
+        """System tokens/s at the given running batch."""
+        if batch_size <= 0:
+            return 1.0
+        return batch_size / self.decode_iter_time(batch_size)
+
+    def per_seq_decode_rate(self, batch_size: int) -> float:
+        """tokens/s a single request progresses at (v_throughput in Alg. 1).
+
+        This is the rate that decides whether a request admitted into freed
+        blocks can COMPLETE within the scheduling window — using the system
+        aggregate here admits long requests that still hold the blocks when
+        the stalled agent's upload fires, causing preemption cascades.
+        """
+        return 1.0 / self.decode_iter_time(max(batch_size, 1))
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_tokens)
+
+
+# Qwen2.5-14B on A100-80GB PCIe — matches paper §7.6 within 1%.
+# 3 MiB / 16-token block => 0.125 ms/block at ~24 GB/s effective PCIe.
+A100_PCIE = PlatformModel(
+    name="a100_pcie_qwen14b",
+    block_tokens=16,
+    block_bytes=3 * 1024 * 1024,
+    offload_ms_per_block=0.1242,
+    upload_ms_per_block=0.1230,
+    transfer_fixed_ms=0.2,
+    prefill_ms_per_token=0.443,      # 1815 ms / 4096 tokens
+    # decode is weight-bandwidth-bound for 14B bf16 on A100 (28 GB / 1.9 TB/s
+    # ~= 15 ms floor); the per-seq slope is the marginal KV-read cost
+    decode_ms_fixed=16.0,
+    decode_ms_per_seq=0.06,
+    hbm_bytes=68 * 1024**3,          # KV pool after weights on 80 GB
+    host_bytes=100 * 1024**3,        # paper reserves 100 GB CPU
+)
+
+# H20 96GB (Qwen2.5-32B single GPU) — lower compute, bigger HBM.
+H20_QWEN32 = replace(
+    A100_PCIE, name="h20_qwen32b",
+    block_bytes=int(1.875 * 1024 * 1024),  # 64L 8kv 128dh 16tok bf16
+    prefill_ms_per_token=0.95,
+    decode_ms_fixed=33.0, decode_ms_per_seq=0.10,
+    hbm_bytes=70 * 1024**3)
+
+# 2xH20 TP2 (Qwen2.5-72B) — per §5 Multi-GPU both devices hold half the heads.
+H20X2_QWEN72 = replace(
+    A100_PCIE, name="2xh20_qwen72b",
+    block_bytes=int(2.5 * 1024 * 1024),
+    prefill_ms_per_token=1.6,
+    decode_ms_fixed=42.0, decode_ms_per_seq=0.15,
+    hbm_bytes=120 * 1024**3)
+
+# TPU v5e target: KV offload rides the host DMA (~40 GB/s effective per
+# chip), recompute uses the 197 TFLOP/s MXU. Blocks are 32 tokens to keep
+# the Pallas paged-attention tiles MXU-aligned (DESIGN.md §2).
+TPU_V5E = PlatformModel(
+    name="tpu_v5e_qwen14b",
+    block_tokens=32,
+    block_bytes=6 * 1024 * 1024,
+    offload_ms_per_block=0.155,
+    upload_ms_per_block=0.155,
+    transfer_fixed_ms=0.05,
+    prefill_ms_per_token=0.30,
+    decode_ms_fixed=5.0,
+    decode_ms_per_seq=0.05,
+    hbm_bytes=12 * 1024**3,          # 16 GB HBM minus weights shard
+    host_bytes=100 * 1024**3,
+)
+
+PLATFORMS = {p.name: p for p in
+             (A100_PCIE, H20_QWEN32, H20X2_QWEN72, TPU_V5E)}

@@ -1,0 +1,804 @@
+"""TokenCake serving engine.
+
+Continuous-batching engine with the paper's 4-phase scheduling step (§3.2):
+
+  1. refresh application metadata, build the pressure snapshot;
+  2. Spatial Scheduler re-partitions reservations if the window expired;
+  3. Temporal Scheduler reserves blocks for imminent uploads, starts ready
+     H2D transfers, and evaluates newly stalled requests for offload;
+  4. Spatial Scheduler forms the next batch under agent-aware admission
+     (shared capacity / reserved capacity / deferral).
+
+The engine is mode-configurable so every evaluation baseline runs on the
+same machinery (§7.3): ``baseline`` (vLLM), ``vllm_prefix``, ``agent``
+(spatial only), ``offload`` (temporal only, agent-unaware), ``tokencake``
+(both), ``mooncake`` (reactive pressure offload + CPU prefix store), and
+``parrot`` (compute-centric priority scheduling, no memory management).
+
+Time is virtual: the execution backend returns per-iteration durations
+(cost model in simulation, wall clock for the JAX backend).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import zlib
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import block_pool as BP
+from repro.core.costmodel import PlatformModel
+from repro.core.forecast import Forecaster
+from repro.core.graph import AppGraph
+from repro.core.pressure import DevicePressure, PressureSnapshot
+from repro.core.request import DEVICE_RESIDENT, Request, ReqState
+from repro.core.spatial import AgentTypeStats, SpatialConfig, SpatialScheduler
+from repro.core.temporal import TemporalConfig, TemporalScheduler
+
+
+# ---------------------------------------------------------------------------
+# configuration / modes
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineConfig:
+    mode: str = "tokencake"
+    num_devices: int = 1
+    gpu_blocks: int = 4096
+    host_blocks: int = 16384
+    max_running: int = 256
+    max_prefill_tokens: int = 16384      # per iteration
+    prefix_cache: bool = False           # device prefix cache (vLLM-Prefix)
+    cpu_prefix_cache: bool = False       # §6.3 CPU prefix index
+    spatial_enabled: bool = True
+    temporal_enabled: bool = True
+    reactive_offload: bool = False       # Mooncake-style pressure offload
+    priority_sched: bool = True          # priority queue vs FCFS
+    tool_noise: float = 0.0              # Fig. 14 multiplicative noise scale
+    seed: int = 0
+    # simulation fidelity: decode tokens per scheduling step. Capped so no
+    # request overshoots a segment boundary and no pending event is skipped;
+    # 1 = schedule every iteration (vLLM-exact), 4 = default speedup.
+    sched_quantum: int = 8
+    spatial: SpatialConfig = field(default_factory=SpatialConfig)
+    temporal: TemporalConfig = field(default_factory=TemporalConfig)
+
+    @staticmethod
+    def preset(mode: str, **kw) -> "EngineConfig":
+        base = dict(mode=mode)
+        presets = {
+            "baseline": dict(spatial_enabled=False, temporal_enabled=False,
+                             priority_sched=False),
+            "vllm_prefix": dict(spatial_enabled=False, temporal_enabled=False,
+                                priority_sched=False, prefix_cache=True),
+            "agent": dict(spatial_enabled=True, temporal_enabled=False),
+            "offload": dict(spatial_enabled=False, temporal_enabled=True,
+                            priority_sched=False,
+                            temporal=TemporalConfig(agent_aware=False,
+                                                    score_threshold=0.0)),
+            "tokencake": dict(spatial_enabled=True, temporal_enabled=True),
+            "mooncake": dict(spatial_enabled=False, temporal_enabled=False,
+                             priority_sched=False, reactive_offload=True,
+                             cpu_prefix_cache=True),
+            "parrot": dict(spatial_enabled=False, temporal_enabled=False,
+                           priority_sched=True),
+        }
+        cfg = dict(base, **presets[mode])
+        cfg.update(kw)
+        return EngineConfig(**cfg)
+
+
+@dataclass
+class AppState:
+    app_id: str
+    graph: AppGraph
+    arrival: float
+    finished_nodes: set = field(default_factory=set)
+    node_request: Dict[int, Request] = field(default_factory=dict)
+    finish_time: Optional[float] = None
+
+    def progress(self) -> float:
+        return len(self.finished_nodes) / max(len(self.graph.nodes), 1)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    def __init__(self, cfg: EngineConfig, platform: PlatformModel,
+                 backend=None):
+        self.cfg = cfg
+        self.platform = platform
+        self.backend = backend           # None => pure cost-model simulation
+        self.clock = 0.0
+        self._seq = itertools.count()
+        self.rng = np.random.default_rng(cfg.seed)
+
+        self.pools = [BP.DevicePool(cfg.gpu_blocks, d)
+                      for d in range(cfg.num_devices)]
+        self.host = BP.HostPool(cfg.host_blocks)
+        self.forecaster = Forecaster()
+        self.spatial = SpatialScheduler(self.pools, cfg.spatial)
+        self.temporal = TemporalScheduler(self.pools, self.host, platform,
+                                          self.forecaster, cfg.temporal)
+
+        self.apps: Dict[str, AppState] = {}
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.stalled: Dict[str, Request] = {}      # resident, on FC
+        self.offloaded: Dict[str, Request] = {}    # incl. pending transfers
+        self.events: List[Tuple[float, int, str, object]] = []
+        self.stream_free_at = 0.0                  # transfer stream
+        self._fresh_stalled: List[Request] = []
+
+        # ---- metrics ----
+        self.metrics = {
+            "offloads": 0, "uploads": 0, "swap_blocks": 0,
+            "preemptions": 0, "critical_inversions": 0,
+            "prefix_hits": 0, "cpu_prefix_hits": 0,
+            "recomputed_tokens": 0, "decoded_tokens": 0,
+        }
+        self.util_samples: List[Tuple[float, float, float]] = []
+        self.app_latencies: List[float] = []
+        self.req_latencies: List[float] = []
+        self.type_stats: Dict[str, AgentTypeStats] = {}
+
+    # ------------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+
+    def submit_app(self, graph: AppGraph, arrival: float,
+                   prompt_tokens: Optional[Dict[int, List[int]]] = None):
+        app_id = f"{graph.name}#{len(self.apps)}"
+        app = AppState(app_id, graph, arrival)
+        self.apps[app_id] = app
+        self._push(arrival, "app_arrival", (app_id, prompt_tokens or {}))
+        return app_id
+
+    def _spawn_ready_nodes(self, app: AppState, prompts: Dict[int, List[int]]):
+        on_cp = app.graph.on_critical_path()
+        for nid, node in app.graph.nodes.items():
+            if nid in app.node_request:
+                continue
+            if all(d in app.finished_nodes for d in node.deps):
+                toks = prompts.get(nid) or self._synth_prompt(app, node)
+                req = Request(rid=f"{app.app_id}/{node.name}",
+                              app_id=app.app_id, node=node, graph=app.graph,
+                              arrival=self.clock, prompt_tokens=toks,
+                              critical=on_cp[nid], enqueue_time=self.clock)
+                app.node_request[nid] = req
+                self.waiting.append(req)
+
+    def _synth_prompt(self, app: AppState, node) -> List[int]:
+        # shared app-level system prefix (prefix caching opportunity) +
+        # agent-specific remainder
+        sys_len = min(512, node.prompt_len // 2)
+        seed_a = zlib.crc32(app.app_id.encode())
+        seed_n = zlib.crc32(f"{app.app_id}/{node.node_id}".encode())
+        sys_prefix = [(seed_a * 31 + i * 2654435761) % 50000
+                      for i in range(sys_len)]
+        rest = [(seed_n * 31 + i * 2654435761) % 50000
+                for i in range(node.prompt_len - sys_len)]
+        return sys_prefix + rest
+
+    # ------------------------------------------------------------ MCP endpoints
+    def call_start(self, req: Request) -> None:
+        """§6.2 call_start endpoint: request enters the stalled state."""
+        fc = req.next_fc()
+        assert fc is not None
+        req.current_fc = fc
+        self.temporal.on_call_start(req, self.clock)
+        self.stalled[req.rid] = req
+        self._fresh_stalled.append(req)
+        # actual tool duration (noise model, Fig. 14) — deterministic per
+        # (app, node, segment) so every engine mode sees identical tool times
+        rng = np.random.default_rng(zlib.crc32(
+            f"{req.app_id}/{req.node.node_id}/{req.segment}/"
+            f"{self.cfg.seed}".encode()))
+        base = fc.predict_time
+        jitter = rng.uniform(-fc.variability, fc.variability) * base
+        actual = max(0.05, base + jitter)
+        if self.cfg.tool_noise > 0:
+            s = self.cfg.tool_noise
+            actual = max(0.05, actual * rng.uniform(1 - s, 1 + s))
+        self._push(self.clock + actual, "call_finish", req.rid)
+
+    def call_finish(self, req: Request) -> None:
+        """§6.2 call_finish endpoint: observed time feeds Eq. 1; resume."""
+        self.temporal.on_call_finish(req, self.clock)
+        if req.state == ReqState.STALLED:
+            req.current_fc = None
+            req.segment += 1
+            req.generated_in_segment = 0
+            self.stalled.pop(req.rid, None)
+            if req.done:
+                self._finish_request(req)
+            else:
+                req.state = ReqState.RUNNING
+                self.running.append(req)
+        # offloaded / transfer in flight: resume via the upload path, which
+        # sees fc_actual_end set and treats the request as overdue
+
+    def _headroom(self) -> int:
+        """Blocks to keep free for decode growth of the running batch,
+        vLLM-watermark style. Two quanta: admission runs before growth in a
+        step, so one quantum of slack is consumed before the next admission
+        round can re-evaluate."""
+        bt = self.platform.block_tokens
+        return max(1, 2 * -(-len(self.running) * self.cfg.sched_quantum // bt))
+
+    # ---------------------------------------------------------------- snapshot
+    def snapshot(self) -> PressureSnapshot:
+        dev = []
+        for p in self.pools:
+            outstanding = sum(max(0, q - p.type_held.get(t, 0))
+                              for t, q in p.reserved_quota.items())
+            dev.append(DevicePressure(
+                p.device, p.num_blocks, p.free, p.reserved_total(),
+                outstanding, p.shared_free()))
+        bt = self.platform.block_tokens
+        # D_critical (Eq. 3) = demand of critical-path requests within the
+        # *admissible frontier* of the priority queue — the blocks the next
+        # admission round would actually hand to critical work. Counting the
+        # whole backlog would zero the upload budget for the entire run.
+        # Agent-agnostic modes (offload ablation, mooncake) see none of it.
+        wd_crit = 0
+        if self.cfg.spatial_enabled and self.waiting:
+            free_now = min(p.free for p in self.pools)
+            acc = 0
+            for r in sorted(self.waiting, key=lambda r: -r.priority):
+                need = r.blocks_needed(bt)
+                if acc + need > free_now:
+                    break
+                acc += need
+                if r.critical:
+                    wd_crit += need
+        wd_tot = sum(r.blocks_needed(bt) for r in self.waiting)
+        stalled_blocks = sum(r.num_gpu_blocks for r in self.stalled.values()
+                             if r.state == ReqState.STALLED)
+        debt = sum(len(r.host_blocks) - len(r.reserved_upload_blocks)
+                   for r in self.offloaded.values()
+                   if r.state in (ReqState.OFFLOADED, ReqState.PENDING_UPLOAD))
+        return PressureSnapshot(
+            time=self.clock, devices=dev,
+            waiting_demand_critical=wd_crit, waiting_demand_total=wd_tot,
+            waiting_count=len(self.waiting),
+            offloadable_stalled_blocks=stalled_blocks,
+            pending_upload_debt=max(debt, 0),
+            host_free_blocks=self.host.free,
+            running_count=len(self.running))
+
+    # ------------------------------------------------------------------- stats
+    def _refresh_type_stats(self):
+        stats: Dict[str, AgentTypeStats] = {}
+        bt = self.platform.block_tokens
+        live = (self.running + self.waiting + list(self.stalled.values())
+                + list(self.offloaded.values()))
+        for r in live:
+            st = stats.setdefault(r.agent_type, AgentTypeStats())
+            if r.state == ReqState.WAITING:
+                st.waiting += 1
+            else:
+                st.active += 1
+            st.preemptions += r.preempt_count
+            st.gpu_blocks += r.num_gpu_blocks
+            st.total_tokens += r.context_len
+            st.total_exec_time += max(self.clock - r.arrival, 0.0)
+            st.total_throughput += r.generated_total / max(
+                self.clock - r.arrival, 1e-3)
+            st.struct_max = max(st.struct_max,
+                                r.graph.struct_score(r.node.node_id)
+                                + (0.5 if r.critical else 0.0))
+            rd = r.graph.remaining_depth()[r.node.node_id]
+            st.depth_sum += rd
+            st.fan_sum += len(r.graph.children[r.node.node_id]) \
+                + len(r.node.deps)
+        # carry preemption history for types with no live requests
+        for a, old in self.type_stats.items():
+            if a not in stats:
+                s = AgentTypeStats()
+                s.preemptions = old.preemptions
+                stats[a] = s
+        self.type_stats = stats
+        return stats
+
+    def _app_progress(self) -> Dict[str, float]:
+        return {a: s.progress() for a, s in self.apps.items()}
+
+    def _branch_progress(self) -> Dict[Tuple[str, int], float]:
+        out = {}
+        for app in self.apps.values():
+            for nid, req in app.node_request.items():
+                out[(app.app_id, nid)] = (1.0 if nid in app.finished_nodes
+                                          else req.completion_frac())
+        return out
+
+    # ---------------------------------------------------------------- transfers
+    def _start_offload(self, req: Request) -> None:
+        n = req.num_gpu_blocks
+        req.host_blocks = self.host.allocate(n, req.rid)
+        bt = self.platform.block_tokens
+        hashes = req.block_hash_keys(bt)[:n]
+        if self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled:
+            self.host.index_hashes(req.host_blocks[:len(hashes)], hashes)
+        for p in self.pools:
+            p.mark_pending_free(req.gpu_blocks_by_device.get(p.device, []),
+                                agent_type=req.agent_type)
+        dur = self.platform.offload_time(n)
+        start = max(self.clock, self.stream_free_at)
+        self.stream_free_at = start + dur
+        req.state = ReqState.PENDING_OFFLOAD
+        self.offloaded[req.rid] = req
+        self.stalled.pop(req.rid, None)
+        self.metrics["offloads"] += 1
+        self.metrics["swap_blocks"] += n
+        self.temporal.offload_count += 1
+        self.temporal.swapped_blocks += n
+        if self.backend is not None:
+            self.backend.copy_out(req)
+        self._push(self.stream_free_at, "offload_done", req.rid)
+
+    def _finish_offload(self, req: Request) -> None:
+        for p in self.pools:
+            p.complete_pending_free(req.gpu_blocks_by_device.get(p.device, []))
+        req.gpu_blocks_by_device = {}
+        req.migration_count += 1
+        if req.state == ReqState.PENDING_OFFLOAD:
+            req.state = ReqState.OFFLOADED
+
+    def _start_upload(self, req: Request) -> None:
+        n = len(req.host_blocks)
+        dur = self.platform.upload_time(n)
+        start = max(self.clock, self.stream_free_at)
+        self.stream_free_at = start + dur
+        req.state = ReqState.PENDING_UPLOAD
+        self.metrics["uploads"] += 1
+        self.metrics["swap_blocks"] += n
+        self.temporal.upload_count += 1
+        self.temporal.swapped_blocks += n
+        if self.backend is not None:
+            self.backend.copy_in(req)
+        self._push(self.stream_free_at, "upload_done", req.rid)
+
+    def _finish_upload(self, req: Request) -> None:
+        # reserved blocks become the live KV blocks
+        for p in self.pools:
+            dest = req.reserved_upload_blocks if p.device == 0 else \
+                req.gpu_blocks_by_device.get(p.device, [])
+            if p.device == 0:
+                req.gpu_blocks_by_device[0] = list(req.reserved_upload_blocks)
+        req.reserved_upload_blocks = []
+        self.host.release(req.host_blocks)
+        req.host_blocks = []
+        req.state = ReqState.UPLOADED
+        self.offloaded.pop(req.rid, None)
+        # resume: if the tool already finished, rejoin the running batch
+        if req.fc_actual_end and req.fc_actual_end <= self.clock:
+            req.current_fc = None
+            req.segment += 1
+            req.generated_in_segment = 0
+            if req.done:
+                self._finish_request(req)
+            else:
+                req.state = ReqState.RUNNING
+                self.running.append(req)
+        else:
+            # early upload: wait (resident) for call_finish
+            req.state = ReqState.STALLED
+            self.stalled[req.rid] = req
+
+    # ----------------------------------------------------------------- finish
+    def _finish_request(self, req: Request) -> None:
+        req.state = ReqState.FINISHED
+        req.finish_time = self.clock
+        self.req_latencies.append(self.clock - req.arrival)
+        cache_it = self.cfg.prefix_cache
+        if cache_it:
+            bt = self.platform.block_tokens
+            hashes = req.block_hash_keys(bt)
+            n = min(len(hashes), req.num_gpu_blocks)
+            self.pools[0].set_hashes(req.gpu_blocks[:n], hashes[:n])
+        self.spatial.release(req, cache=cache_it)
+        app = self.apps[req.app_id]
+        app.finished_nodes.add(req.node.node_id)
+        self._spawn_ready_nodes(app, {})
+        if len(app.finished_nodes) == len(app.graph.nodes):
+            app.finish_time = self.clock
+            self.app_latencies.append(self.clock - app.arrival)
+
+    # -------------------------------------------------------------- preemption
+    def _preempt_for(self, needed: int, victim_pool: List[Request],
+                     requester: Optional[Request]) -> bool:
+        """Evict lowest-priority victims until ``needed`` blocks are free."""
+        if not victim_pool:
+            return False
+        if self.cfg.spatial_enabled:
+            # memory-level protection: evict non-critical victims first,
+            # then by lowest priority (the Spatial Scheduler's whole point)
+            order = sorted(victim_pool,
+                           key=lambda r: (r.critical or r.agent_type
+                                          in self.spatial.critical_types,
+                                          r.priority))
+        else:
+            # compute-centric systems (vLLM, Parrot) are memory-agnostic:
+            # eviction ignores criticality (vLLM preempts newest first)
+            order = list(reversed(victim_pool))
+        freed_any = False
+        for victim in order:
+            if requester is not None and victim.rid == requester.rid:
+                continue
+            if self.pools[0].free >= needed:
+                break
+            self._evict(victim, requester)
+            freed_any = True
+        return freed_any and self.pools[0].free >= needed
+
+    def _evict(self, victim: Request, requester: Optional[Request]) -> None:
+        victim.preempt_count += 1
+        victim.recompute_tokens += victim.context_len
+        self.metrics["preemptions"] += 1
+        if victim.critical and (requester is None or not requester.critical):
+            self.metrics["critical_inversions"] += 1
+        self.spatial.release(victim, cache=False)
+        if victim in self.running:
+            self.running.remove(victim)
+        self.stalled.pop(victim.rid, None)
+        victim.state = ReqState.WAITING
+        victim.enqueue_time = self.clock
+        # generation state survives (tokens regenerate from recompute)
+        self.waiting.append(victim)
+
+    # ------------------------------------------------------------------- phases
+    def schedule_step(self) -> PressureSnapshot:
+        # Phase 1: refresh metadata + pressure snapshot
+        stats = self._refresh_type_stats()
+        snap = self.snapshot()
+
+        # Phase 2: spatial re-partition
+        if self.cfg.spatial_enabled:
+            self.spatial.update_reservations(self.clock, stats)
+
+        # Phase 3: temporal — uploads first, then offload evaluation
+        if self.cfg.temporal_enabled:
+            self._phase_uploads(snap)
+            self._phase_offloads(snap)
+        elif self.cfg.reactive_offload:
+            self._reactive_offload(snap)
+            self._phase_uploads(snap, reactive=True)
+
+        # Phase 4: admission
+        self._phase_admission()
+        return snap
+
+    def _phase_uploads(self, snap: PressureSnapshot, reactive=False):
+        cands = [r for r in self.offloaded.values()
+                 if r.state == ReqState.OFFLOADED]
+        if not cands:
+            return
+        budget = self.temporal.upload_budget(snap)   # Eq. 3
+        scores = self.spatial.scores
+        # rank by P_upload = importance + urgency (§4.3)
+        total = max(max(scores.values(), default=1.0), 1e-9)
+        ranked = sorted(
+            cands, key=lambda r: -self.temporal.upload_priority(
+                r, self.clock, scores.get(r.agent_type, 0.0) / total))
+        for req in ranked:
+            overdue = req.fc_actual_end and req.fc_actual_end <= self.clock
+            if not (overdue or self.temporal.should_start_upload(req, self.clock)):
+                continue
+            n = self.temporal.reserve_step(req, budget)
+            if overdue:  # tool returned early: grab the whole deficit now
+                deficit = len(req.host_blocks) - len(req.reserved_upload_blocks)
+                n = min(deficit, min(p.free for p in self.pools), budget) \
+                    if deficit > 0 else 0
+            if n > 0:
+                for p in self.pools:
+                    blocks = p.allocate(n, req.rid, agent_type=req.agent_type)
+                    if p.device == 0:
+                        req.reserved_upload_blocks.extend(blocks)
+                    else:
+                        req.gpu_blocks_by_device.setdefault(
+                            p.device, []).extend(blocks)
+                budget -= n
+            if self.temporal.upload_ready(req) and \
+                    req.state == ReqState.OFFLOADED:
+                self._start_upload(req)
+
+    def _phase_offloads(self, snap: PressureSnapshot):
+        fresh, self._fresh_stalled = self._fresh_stalled, []
+        for req in fresh:
+            if req.state != ReqState.STALLED:
+                continue
+            top = max(self.spatial.scores.values(), default=1.0) or 1.0
+            norm_scores = {a: s / top for a, s in self.spatial.scores.items()}
+            dec = self.temporal.should_offload(
+                req, self.waiting, snap, norm_scores)
+            if dec.offload:
+                self._start_offload(req)
+            else:
+                self.temporal.rejected_offloads += 1
+
+    def _reactive_offload(self, snap: PressureSnapshot):
+        """Mooncake-style: offload under memory pressure, LRU, FC-blind."""
+        if snap.usage < 0.90:
+            return
+        victims = sorted(self.stalled.values(), key=lambda r: r.fc_start)
+        for req in victims:
+            if self.snapshot().usage < 0.85:
+                break
+            if req.state == ReqState.STALLED and \
+                    self.host.free >= req.num_gpu_blocks:
+                self._start_offload(req)
+
+    def _phase_admission(self):
+        if not self.waiting:
+            return
+        # refresh P_req (Eq. 5) before every batch decision
+        ap = self._app_progress()
+        bp = self._branch_progress()
+        for r in self.waiting:
+            r.priority = self.spatial.request_priority(r, self.clock, ap, bp)
+        if self.cfg.priority_sched or self.cfg.spatial_enabled:
+            self.waiting.sort(key=lambda r: -r.priority)
+        else:
+            self.waiting.sort(key=lambda r: r.enqueue_time)
+
+        bt = self.platform.block_tokens
+        admitted, deferred = [], []
+        prefill_budget = self.cfg.max_prefill_tokens
+        # pending upload debt (§3.2): blocks owed to offloaded agents, with
+        # their predicted return times. A waiting request may only borrow
+        # lien'd blocks if it will release them before the owed upload fires
+        # — otherwise the resume displaces active work (preemption cascade).
+        upload_liens = [
+            (r.fc_predicted_end,
+             len(r.host_blocks) - len(r.reserved_upload_blocks))
+            for r in self.offloaded.values()
+            if r.state in (ReqState.OFFLOADED, ReqState.PENDING_OFFLOAD)]
+        rate = self.platform.per_seq_decode_rate(max(len(self.running), 1))
+        for req in self.waiting:
+            if len(self.running) + len(admitted) >= self.cfg.max_running:
+                deferred.append(req)
+                continue
+            new_tokens = self._uncached_tokens(req)
+            if new_tokens > prefill_budget:
+                deferred.append(req)
+                continue
+            need = req.blocks_needed(bt)
+            cached = self._prefix_hit_blocks(req)
+            need_new = max(need - cached, 0)
+            est_release = self.clock + req.remaining_tokens / rate
+            debt_due = sum(d for due, d in upload_liens
+                           if due <= est_release and d > 0)
+            if self.cfg.spatial_enabled:
+                route = self.spatial.admit(
+                    req, need_new, headroom=self._headroom() + debt_due)
+                if route is None:
+                    deferred.append(req)
+                    continue
+            else:
+                # vLLM-style admission: never preempts; requires free blocks
+                # plus growth headroom for the running batch (+ upload liens
+                # when the temporal scheduler is active)
+                headroom = self._headroom() + debt_due
+                if any(p.free < need_new + headroom for p in self.pools):
+                    deferred.append(req)
+                    if not self.cfg.priority_sched:
+                        deferred.extend(
+                            w for w in self.waiting
+                            if w is not req and w not in deferred
+                            and w not in admitted)
+                        break  # FCFS head-of-line blocking (vLLM)
+                    continue
+                for p in self.pools:
+                    blocks = p.allocate(need_new, req.rid,
+                                        agent_type=req.agent_type)
+                    req.gpu_blocks_by_device.setdefault(
+                        p.device, []).extend(blocks)
+            if cached:
+                self._claim_prefix(req, cached)
+            req.cached_prefix_blocks = cached
+            req.state = ReqState.RUNNING
+            req.prefill_pending = new_tokens
+            prefill_budget -= new_tokens
+            admitted.append(req)
+        self.waiting = [r for r in deferred if r.state == ReqState.WAITING]
+        for r in admitted:
+            self.running.append(r)
+            if r.first_token_time is None:
+                r.first_token_time = self.clock
+
+    def _uncached_tokens(self, req: Request) -> int:
+        bt = self.platform.block_tokens
+        cached = self._prefix_hit_blocks(req)
+        return max(req.context_len - cached * bt, 1)
+
+    def _prefix_hit_blocks(self, req: Request) -> int:
+        if req.generated_total > 0:
+            return 0  # only fresh prompts hit the prefix cache
+        bt = self.platform.block_tokens
+        hashes = req.block_hash_keys(bt)
+        hits = 0
+        if self.cfg.prefix_cache:
+            hits = len(self.pools[0].lookup_prefix(hashes))
+        if self.cfg.cpu_prefix_cache and hits == 0:
+            cpu_hits = len(self.host.lookup_prefix(hashes))
+            if cpu_hits:
+                self.metrics["cpu_prefix_hits"] += cpu_hits
+                return 0  # CPU hits save recompute, modeled as H2D in timing
+        if hits:
+            self.metrics["prefix_hits"] += hits
+        return hits
+
+    def _claim_prefix(self, req: Request, n: int):
+        bt = self.platform.block_tokens
+        hashes = req.block_hash_keys(bt)[:n]
+        blocks = self.pools[0].lookup_prefix(hashes)[:n]
+        if blocks:
+            self.pools[0].claim_cached(blocks, req.rid)
+            req.gpu_blocks_by_device.setdefault(0, [])[:0] = blocks
+
+    # ---------------------------------------------------------------- execute
+    def execute_iteration(self) -> float:
+        """Run one engine step (a quantum of decode iterations).
+
+        Each running request decodes up to ``sched_quantum`` tokens (capped
+        at its own segment boundary); the step lasts a full quantum of batch
+        iterations. Events landing mid-quantum are handled at the next step
+        boundary (max skew = quantum * iter_time, well under tool latency).
+        """
+        prefill_tokens = 0
+        for req in self.running:
+            if req.prefill_pending:
+                prefill_tokens += req.prefill_pending
+                self.metrics["recomputed_tokens"] += max(
+                    req.prefill_pending - len(req.prompt_tokens), 0)
+                req.prefill_pending = 0
+
+        decode_batch = [r for r in self.running]
+        duration = 0.0
+        if prefill_tokens:
+            duration += self.platform.recompute_time(prefill_tokens)
+        if decode_batch:
+            q = self.cfg.sched_quantum
+            duration += q * self.platform.decode_iter_time(len(decode_batch))
+            if self.backend is not None:
+                for _ in range(q):
+                    self.backend.decode(decode_batch)
+            self._post_decode(decode_batch, q)
+        return max(duration, 1e-4)
+
+    def _post_decode(self, batch: List[Request], q_step: int = 1) -> None:
+        bt = self.platform.block_tokens
+        for req in list(batch):
+            if req.state != ReqState.RUNNING:
+                continue
+            q = min(q_step,
+                    max(req.target_in_segment - req.generated_in_segment, 1))
+            # block growth across the quantum
+            have = -(-req.context_len // bt) if req.context_len else 0
+            need = -(-(req.context_len + q) // bt)
+            grow = max(need - have, 0)
+            if grow:
+                # growth of admitted work uses physical free blocks —
+                # reservation floors guard *admission*, not growth (denying
+                # growth would evict the very caches the floors protect)
+                ok = all(p.free >= grow for p in self.pools)
+                if not ok:
+                    ok = self._preempt_for(grow, self.running, req)
+                if ok:
+                    for p in self.pools:
+                        blocks = p.allocate(grow, req.rid,
+                                            agent_type=req.agent_type)
+                        req.gpu_blocks_by_device.setdefault(
+                            p.device, []).extend(blocks)
+                if not ok:
+                    self._evict(req, None)   # self-preempt, recompute later
+                    continue
+            req.generated_in_segment += q
+            req.generated_total += q
+            self.metrics["decoded_tokens"] += q
+            if req.segment_done:
+                self.running.remove(req)
+                if req.next_fc() is not None:
+                    self.call_start(req)
+                elif req.done:
+                    self._finish_request(req)
+                else:
+                    req.segment += 1
+                    req.generated_in_segment = 0
+                    self.running.append(req)
+
+    # --------------------------------------------------------------- main loop
+    def _process_events_until(self, t: float) -> None:
+        while self.events and self.events[0][0] <= t:
+            when, _, kind, payload = heapq.heappop(self.events)
+            self.clock = max(self.clock, when)
+            if kind == "app_arrival":
+                app_id, prompts = payload
+                self._spawn_ready_nodes(self.apps[app_id], prompts)
+            elif kind == "call_finish":
+                req = self._find(payload)
+                if req is not None:
+                    self.call_finish(req)
+            elif kind == "offload_done":
+                req = self._find(payload)
+                if req is not None:
+                    self._finish_offload(req)
+            elif kind == "upload_done":
+                req = self._find(payload)
+                if req is not None:
+                    self._finish_upload(req)
+
+    def _find(self, rid: str) -> Optional[Request]:
+        for coll in (self.stalled, self.offloaded):
+            if rid in coll:
+                return coll[rid]
+        for r in self.running + self.waiting:
+            if r.rid == rid:
+                return r
+        for app in self.apps.values():
+            for r in app.node_request.values():
+                if r.rid == rid:
+                    return r
+        return None
+
+    def _sample_utilization(self):
+        p = self.pools[0]
+        used = 1.0 - p.free / p.num_blocks
+        active_blocks = sum(r.num_gpu_blocks for r in self.running)
+        self.util_samples.append(
+            (self.clock, used, active_blocks / p.num_blocks))
+
+    def run(self, max_time: float = 1e9, max_iters: int = 2_000_000) -> dict:
+        iters = 0
+        while iters < max_iters and self.clock < max_time:
+            iters += 1
+            self._process_events_until(self.clock)
+            if not (self.running or self.waiting):
+                if not self.events and not self.offloaded:
+                    break
+                if not self.events and self.offloaded:
+                    # offloaded requests awaiting upload: run a scheduling
+                    # step so phase 3 can reserve blocks / start transfers
+                    self.schedule_step()
+                    self.clock += 1e-3
+                    continue
+                # idle: jump to next event
+                self.clock = self.events[0][0]
+                continue
+            self.schedule_step()
+            if not self.running and not self.events and self.waiting:
+                break   # genuine starvation: nothing admissible, no events
+            dur = self.execute_iteration()
+            self.clock += dur
+            if not self.running and self.events:
+                # nothing runnable (e.g. pool held by stalled agents):
+                # jump to the next event instead of micro-stepping
+                self.clock = max(self.clock, self.events[0][0])
+            self._sample_utilization()
+        return self.report()
+
+    # ----------------------------------------------------------------- report
+    def report(self) -> dict:
+        lat = sorted(self.app_latencies)
+        pct = lambda q: lat[min(int(q * len(lat)), len(lat) - 1)] if lat else 0.0
+        util = [u for _, u, _ in self.util_samples]
+        eff = [e for _, _, e in self.util_samples]
+        elapsed = max(self.clock, 1e-9)
+        return {
+            "apps_finished": len(lat),
+            "total_latency": sum(lat),
+            "avg_latency": sum(lat) / len(lat) if lat else 0.0,
+            "p50_latency": pct(0.50), "p90_latency": pct(0.90),
+            "p95_latency": pct(0.95), "p99_latency": pct(0.99),
+            "throughput_rps": len(lat) / elapsed,
+            "avg_utilization": float(np.mean(util)) if util else 0.0,
+            "effective_utilization": float(np.mean(eff)) if eff else 0.0,
+            "clock": self.clock,
+            **self.metrics,
+        }

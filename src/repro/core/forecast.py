@@ -1,0 +1,40 @@
+"""Dynamic function-call duration forecasting (paper §4.1, Eq. 1).
+
+Per-function-type estimate lifecycle:
+  no history  -> user's ``predict_time`` (graph metadata), else a
+                 conservative system default;
+  with history -> EWMA of observed durations, blended with the user
+                 estimate: t = alpha * t_user + (1 - alpha) * t_history.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class Forecaster:
+    alpha: float = 0.3          # weight on the user estimate (Eq. 1)
+    ewma_beta: float = 0.5      # EWMA smoothing for t_history
+    default_time: float = 5.0   # conservative system-wide constant
+    history: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    def predict(self, func_type: str,
+                user_estimate: Optional[float] = None) -> float:
+        t_hist = self.history.get(func_type)
+        if t_hist is None:
+            return user_estimate if user_estimate is not None \
+                else self.default_time
+        if user_estimate is None:
+            return t_hist
+        return self.alpha * user_estimate + (1 - self.alpha) * t_hist
+
+    def observe(self, func_type: str, elapsed: float) -> None:
+        prev = self.history.get(func_type)
+        if prev is None:
+            self.history[func_type] = elapsed
+        else:
+            self.history[func_type] = (self.ewma_beta * prev
+                                       + (1 - self.ewma_beta) * elapsed)
+        self.counts[func_type] = self.counts.get(func_type, 0) + 1

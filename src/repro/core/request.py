@@ -1,0 +1,135 @@
+"""Request lifecycle model.
+
+A request is one agent's LLM session: prefill(prompt) then decode segments
+separated by function calls (paper Fig. 2b):
+
+    Inference1 => FunctionCall => Inference2 => ...
+
+State machine (paper §6.2 MCPManager: running, pending-offload, offloaded,
+pending-upload, uploaded — plus queueing/terminal states the engine needs):
+
+    WAITING -> RUNNING -> STALLED -(gate)-> PENDING_OFFLOAD -> OFFLOADED
+       ^          |           |                                   |
+       |          v           +--(call_finish, resident)----------+--> PENDING_UPLOAD
+       +-- PREEMPTED                                                     -> UPLOADED -> RUNNING
+    RUNNING -> FINISHED
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.graph import AgentNode, AppGraph, FuncNode
+
+
+class ReqState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    STALLED = "stalled"                  # function call, cache resident
+    PENDING_OFFLOAD = "pending_offload"  # D2H transfer in flight
+    OFFLOADED = "offloaded"              # cache on host
+    PENDING_UPLOAD = "pending_upload"    # H2D transfer in flight
+    UPLOADED = "uploaded"                # cache back, waiting re-admission
+    PREEMPTED = "preempted"              # evicted; must recompute
+    FINISHED = "finished"
+
+
+# states whose KV cache occupies device blocks
+DEVICE_RESIDENT = (ReqState.RUNNING, ReqState.STALLED, ReqState.UPLOADED)
+
+
+@dataclass
+class Request:
+    rid: str
+    app_id: str
+    node: AgentNode
+    graph: AppGraph
+    arrival: float
+    prompt_tokens: List[int]
+    critical: bool = False               # on app critical path (static)
+
+    state: ReqState = ReqState.WAITING
+    segment: int = 0
+    generated_in_segment: int = 0
+    generated_total: int = 0
+
+    # per-device block ids (TP mirroring, paper §5 Multi-GPU); device 0 is
+    # exposed as ``gpu_blocks`` for the data-plane backend.
+    gpu_blocks_by_device: dict = field(default_factory=dict)
+    host_blocks: List[int] = field(default_factory=list)
+    reserved_upload_blocks: List[int] = field(default_factory=list)
+    from_reserved_pool: int = 0          # blocks drawn from reserved quota
+    cached_prefix_blocks: int = 0        # prefix-cache hits at admission
+
+    current_fc: Optional[FuncNode] = None
+    fc_start: float = 0.0
+    fc_predicted_end: float = 0.0
+    fc_actual_end: float = 0.0
+
+    enqueue_time: float = 0.0            # last time it entered the queue
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    preempt_count: int = 0
+    migration_count: int = 0             # offload+upload round trips
+    recompute_tokens: int = 0            # tokens recomputed after eviction
+
+    priority: float = 0.0                # P_req, refreshed per batch (Eq. 5)
+    prefill_pending: int = 0             # tokens to (re)compute at admission
+
+    # ---- derived -------------------------------------------------------------
+    @property
+    def gpu_blocks(self) -> List[int]:
+        return self.gpu_blocks_by_device.setdefault(0, [])
+
+    @property
+    def num_gpu_blocks(self) -> int:
+        return len(self.gpu_blocks_by_device.get(0, []))
+
+    @property
+    def agent_type(self) -> str:
+        return self.node.agent_type
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt_tokens) + self.generated_total
+
+    @property
+    def target_in_segment(self) -> int:
+        return self.node.decode_segments[self.segment]
+
+    @property
+    def segment_done(self) -> bool:
+        return self.generated_in_segment >= self.target_in_segment
+
+    @property
+    def remaining_tokens(self) -> int:
+        rest = sum(self.node.decode_segments[self.segment + 1:])
+        return rest + self.target_in_segment - self.generated_in_segment
+
+    @property
+    def done(self) -> bool:
+        return (self.segment == len(self.node.decode_segments) - 1
+                and self.segment_done)
+
+    def next_fc(self) -> Optional[FuncNode]:
+        if self.segment < len(self.node.func_calls):
+            return self.node.func_calls[self.segment]
+        return None
+
+    def completion_frac(self) -> float:
+        total = self.node.total_decode or 1
+        return self.generated_total / total
+
+    def blocks_needed(self, block_tokens: int, extra_tokens: int = 0) -> int:
+        return -(-(self.context_len + extra_tokens) // block_tokens)
+
+    _hash_cache: Optional[Tuple[int, list]] = None
+
+    def block_hash_keys(self, block_tokens: int) -> list:
+        """Cached per-block prefix hashes of the prompt."""
+        if self._hash_cache is None or self._hash_cache[0] != block_tokens:
+            from repro.core.block_pool import block_hashes
+            self._hash_cache = (block_tokens,
+                                block_hashes(self.prompt_tokens, block_tokens))
+        return self._hash_cache[1]

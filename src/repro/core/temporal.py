@@ -1,0 +1,187 @@
+"""The Temporal Scheduler (paper §4).
+
+Converts function-call stalls into productive scheduling windows:
+
+ * event-driven offload — ``call_start`` triggers the opportunistic gate
+   (Alg. 1 + hard rejections + soft scoring, §4.2); approved caches move to
+   the host pool asynchronously.
+ * predictive upload — as the forecast completion approaches, destination
+   blocks are reserved *gradually* (at most half the remaining deficit per
+   step, Eq. 4) within a budget that protects critical waiting demand
+   (Eq. 3), ranked by P_upload = importance + urgency.
+ * ``call_finish`` feeds the observed duration back into the forecaster
+   (Eq. 1) and triggers an immediate upload if the tool beat the forecast.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.block_pool import DevicePool, HostPool
+from repro.core.costmodel import PlatformModel
+from repro.core.forecast import Forecaster
+from repro.core.policies import POLICIES
+from repro.core.pressure import PressureSnapshot
+from repro.core.request import Request, ReqState
+
+
+@dataclass
+class TemporalConfig:
+    enabled: bool = True
+    selection_policy: str = "first_fit"      # §7.5 default
+    pressure_watermark: float = 0.05         # min GPU usage to consider offload
+    score_threshold: float = 0.35            # soft-score gate
+    upload_safety: float = 1.25              # start uploads this x T_upload early
+    emergency_usage: float = 0.97            # emergency exception pressure
+    emergency_margin: float = 3.0            # stall/transfer ratio for override
+    agent_aware: bool = True                 # False = "offload-only" ablation
+    # soft score weights (§4.2): positives
+    w_window: float = 0.5                    # stall long relative to transfer
+    w_pressure: float = 0.25
+    w_fit: float = 0.15
+    w_cpu: float = 0.10
+    # penalties
+    w_critical: float = 0.6                  # dominant penalty
+    w_near_done: float = 0.25
+    w_churn: float = 0.15
+
+
+@dataclass
+class OffloadDecision:
+    offload: bool
+    reason: str
+    score: float = 0.0
+    fit_request: Optional[str] = None
+
+
+class TemporalScheduler:
+    def __init__(self, device_pools: List[DevicePool], host_pool: HostPool,
+                 platform: PlatformModel, forecaster: Forecaster,
+                 cfg: Optional[TemporalConfig] = None):
+        self.pools = device_pools
+        self.host = host_pool
+        self.platform = platform
+        self.forecaster = forecaster
+        self.cfg = cfg or TemporalConfig()
+        # counters for the evaluation
+        self.offload_count = 0
+        self.upload_count = 0
+        self.rejected_offloads = 0
+        self.swapped_blocks = 0
+        self.emergency_offloads = 0
+
+    # ------------------------------------------------------------- forecasting
+    def predict_fc(self, req: Request) -> float:
+        fc = req.current_fc
+        return self.forecaster.predict(fc.tool, fc.predict_time)
+
+    # ------------------------------------------------------ Alg. 1 + soft gate
+    def should_offload(self, req: Request, waiting: List[Request],
+                       snapshot: PressureSnapshot,
+                       type_scores: Dict[str, float]) -> OffloadDecision:
+        """``type_scores``: the Spatial Scheduler's S_a normalized to [0,1];
+        the critical penalty scales with it (§4.2: "using the Spatial
+        Scheduler's priority metric")."""
+        c = self.cfg
+        n_blocks = req.num_gpu_blocks
+        if n_blocks == 0:
+            return OffloadDecision(False, "no blocks")
+
+        t_transfer = self.platform.transfer_time(n_blocks)       # Eq. 2
+        t_fc = self.predict_fc(req)
+
+        # ---- hard rejections (§4.2) ----
+        if self.host.free < n_blocks:
+            return OffloadDecision(False, "cpu capacity")
+        if t_fc <= t_transfer:                                   # Alg. 1 l.4
+            return OffloadDecision(False, "stall too short")
+        # spatial pressure watermark (§7.5 Fig. 16): offload only when the
+        # waiting queue actually demands a meaningful fraction of the pool —
+        # freed blocks must be able to admit useful work
+        waiting_pressure = (snapshot.waiting_demand_total
+                            / max(snapshot.total_blocks, 1))
+        if waiting_pressure < c.pressure_watermark:
+            return OffloadDecision(False, "gpu pressure low")
+
+        t_window = t_fc - t_transfer                             # Alg. 1 l.6
+        v = self.platform.per_seq_decode_rate(snapshot.running_count)
+        n_capacity = t_window * v                                # Alg. 1 l.7
+        policy = POLICIES[c.selection_policy]
+        fit = policy(waiting, n_blocks, n_capacity,
+                     self.platform.block_tokens)
+        if fit is None:                                          # Alg. 1 l.8-10
+            return OffloadDecision(False, "no waiting fit")
+
+        # ---- soft scoring ----
+        window_ratio = min(t_window / t_fc, 1.0)
+        fit_quality = fit.blocks_needed(self.platform.block_tokens) / n_blocks
+        cpu_headroom = self.host.free / max(self.host.num_blocks, 1)
+        score = (c.w_window * window_ratio
+                 + c.w_pressure * snapshot.usage
+                 + c.w_fit * min(fit_quality, 1.0)
+                 + c.w_cpu * cpu_headroom)
+        penalty = 0.0
+        if c.agent_aware:
+            importance = type_scores.get(req.agent_type, 0.0)
+            if req.critical:
+                importance = max(importance, 0.8)
+            penalty += c.w_critical * importance
+            penalty += c.w_near_done * req.completion_frac()
+            penalty += c.w_churn * min(req.migration_count / 3.0, 1.0)
+        score -= penalty
+
+        if score <= c.score_threshold:
+            # emergency exception: severe pressure + large stall margin
+            if (snapshot.usage >= c.emergency_usage
+                    and t_fc / t_transfer >= c.emergency_margin):
+                self.emergency_offloads += 1
+                return OffloadDecision(True, "emergency", score, fit.rid)
+            return OffloadDecision(False, f"score {score:.2f}", score)
+        return OffloadDecision(True, "opportunistic", score, fit.rid)
+
+    # -------------------------------------------------------------- events
+    def on_call_start(self, req: Request, now: float) -> None:
+        req.state = ReqState.STALLED
+        req.fc_start = now
+        req.fc_actual_end = 0.0          # reset stale value from previous FC
+        req.fc_predicted_end = now + self.predict_fc(req)
+
+    def on_call_finish(self, req: Request, now: float) -> None:
+        if req.current_fc is not None:
+            self.forecaster.observe(req.current_fc.tool, now - req.fc_start)
+        req.fc_actual_end = now
+
+    # ------------------------------------------------- Eq. 3/4 upload planning
+    def upload_budget(self, snapshot: PressureSnapshot) -> int:
+        """B_upload = max(0, B_free - max(0, D_critical - B_shared_free))."""
+        d_crit = snapshot.waiting_demand_critical
+        b_shared = snapshot.shared_free
+        return max(0, snapshot.free_blocks - max(0, d_crit - b_shared))
+
+    def upload_priority(self, req: Request, now: float,
+                        importance: float) -> float:
+        """P_upload = I + U (importance + urgency)."""
+        horizon = max(req.fc_predicted_end - now, 0.0)
+        t_up = self.platform.upload_time(len(req.host_blocks))
+        urgency = 1.0 / (1.0 + max(horizon - t_up, 0.0))
+        return importance + urgency
+
+    def reserve_step(self, req: Request, budget: int) -> int:
+        """Gradual reservation: at most half the remaining deficit (Eq. 4)."""
+        deficit = len(req.host_blocks) - len(req.reserved_upload_blocks)
+        if deficit <= 0:
+            return 0
+        b_remain = min(p.free for p in self.pools)
+        n = min(b_remain, math.ceil(deficit / 2), budget)
+        return max(n, 0)
+
+    def upload_ready(self, req: Request) -> bool:
+        return (len(req.reserved_upload_blocks) >= len(req.host_blocks)
+                and len(req.host_blocks) > 0)
+
+    def should_start_upload(self, req: Request, now: float) -> bool:
+        """Begin reserving when predicted completion is within the safety
+        margin of the transfer time (predictive upload, §4.3)."""
+        t_up = self.platform.upload_time(len(req.host_blocks))
+        return now + t_up * self.cfg.upload_safety >= req.fc_predicted_end

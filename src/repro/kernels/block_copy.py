@@ -1,0 +1,69 @@
+"""Pallas KV-block gather/scatter — the migration data plane (paper §6.3).
+
+Offload: scattered pool blocks are gathered into a contiguous staging buffer
+(one DMA-friendly slab) before the host transfer. Upload: the staging buffer
+is scattered back into (possibly different) pool blocks. On TPU the gather
+rides ``PrefetchScalarGridSpec`` so the source/destination page of each grid
+step comes from a scalar-prefetched index vector — the same mechanism the
+paged-attention kernel uses for its block tables.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def block_gather(pages, indices, *, interpret: bool = True):
+    """pages: (N, bs, Hkv, D); indices: (M,) -> staging (M, bs, Hkv, D)."""
+    n, bs, hkv, d = pages.shape
+    m = indices.shape[0]
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m,),
+            in_specs=[pl.BlockSpec((1, bs, hkv, d),
+                                   lambda i, idx: (idx[i], 0, 0, 0))],
+            out_specs=pl.BlockSpec((1, bs, hkv, d),
+                                   lambda i, idx: (i, 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, bs, hkv, d), pages.dtype),
+        interpret=interpret,
+    )(indices, pages)
+
+
+def block_scatter(pages, indices, staging, *, interpret: bool = True):
+    """Write staging (M, bs, Hkv, D) into pool blocks ``indices``.
+
+    Returns the updated pool. Uses input/output aliasing so the pool is
+    updated in place on TPU (no full-pool copy).
+    """
+    n, bs, hkv, d = pages.shape
+    m = indices.shape[0]
+
+    def kernel(idx_ref, staging_ref, pages_in_ref, pages_out_ref):
+        pages_out_ref[...] = staging_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m,),
+            in_specs=[
+                pl.BlockSpec((1, bs, hkv, d), lambda i, idx: (i, 0, 0, 0)),
+                pl.BlockSpec((1, bs, hkv, d),
+                             lambda i, idx: (idx[i], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bs, hkv, d),
+                                   lambda i, idx: (idx[i], 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pages.shape, pages.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(indices, staging, pages)

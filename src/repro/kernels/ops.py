@@ -1,0 +1,54 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container (Pallas interpret mode
+executes the kernel body in Python for correctness validation); on a real
+TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
+``REPRO_PALLAS_COMPILE=1`` env var) and the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_copy as _bc
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import swa_attention as _swa
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=())
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens):
+    """Decode attention over the paged KV pool. See kernel docstring."""
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables,
+                               context_lens, interpret=INTERPRET)
+
+
+@jax.jit
+def block_gather(pages, indices):
+    """Gather pool blocks into a contiguous staging buffer (offload)."""
+    return _bc.block_gather(pages, indices, interpret=INTERPRET)
+
+
+@jax.jit
+def block_scatter(pages, indices, staging):
+    """Scatter a staging buffer into pool blocks (upload), in place."""
+    return _bc.block_scatter(pages, indices, staging, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a, b, c, chunk: int = 64):
+    """Chunked Mamba2 SSD scan; returns (y, final_state)."""
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "q_block", "kv_block"))
+def swa_attention(q, k, v, window: int, q_block: int = 128,
+                  kv_block: int = 128):
+    """Sliding-window causal flash attention (prefill)."""
+    return _swa.swa_attention(q, k, v, window, q_block, kv_block,
+                              interpret=INTERPRET)

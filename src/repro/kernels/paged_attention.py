@@ -1,0 +1,113 @@
+"""Pallas TPU paged-decode-attention kernel.
+
+The serving engine's decode hot loop: one query token per sequence attends
+over its paged KV cache through a block table (vLLM-style paging, TPU-native
+execution). This is the TPU adaptation of PagedAttention (DESIGN.md §2):
+
+ * pages are streamed HBM -> VMEM with ``PrefetchScalarGridSpec`` — the
+   block-table entries are scalar-prefetched so the page index map can
+   depend on them (the TPU equivalent of the CUDA gather);
+ * grid = (batch, kv_head, page): the page axis is the innermost sequential
+   dimension, so per-(batch, kv_head) flash accumulators live in VMEM
+   scratch across page iterations;
+ * tiles are MXU-aligned when block_size is a multiple of 128 lanes; the
+   GQA group dim (q heads per kv head) rides the sublane axis.
+
+Correctness oracle: ``repro.kernels.ref.paged_attention_ref`` (validated in
+interpret mode on CPU; see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables_ref, context_lens_ref,   # scalar prefetch
+            q_ref, k_ref, v_ref,                  # VMEM blocks
+            o_ref,                                # output block
+            m_scr, l_scr, acc_scr,                # VMEM scratch
+            *, block_size: int, num_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = context_lens_ref[b]
+    start = p * block_size
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bs, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)         # (bs, D)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    valid = pos < ctx                                  # (1, bs)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    # ---- online softmax (flash) update ----
+    m_prev = m_scr[...]                                # (G, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)    # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # fully-masked pages keep exp() at exactly zero
+    probs = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (G, bs)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + probs.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        probs, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
+                    *, interpret: bool = True):
+    """q: (B, H, D); pools: (N, bs, Hkv, D); tables: (B, P); lens: (B,)."""
+    b, h, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    p = block_tables.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+
+    grid = (b, hkv, p)
+    kernel = functools.partial(_kernel, block_size=bs, num_pages=p)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), lambda b_, kh, p_, bt, cl: (b_, kh, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda b_, kh, p_, bt, cl: (bt[b_, p_], 0, kh, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda b_, kh, p_, bt, cl: (bt[b_, p_], 0, kh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda b_, kh, p_, bt, cl: (b_, kh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, k_pages, v_pages)
+    return out.reshape(b, h, d)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel sweep tests assert against
+(``tests/test_kernels.py``). They are deliberately simple and quadratic —
+no tiling, no online softmax — so that any numerical disagreement points at
+the kernel, not the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """Decode attention over a paged KV pool.
+
+    q:            (B, H, D)       — one query token per sequence
+    k_pages:      (N, bs, Hkv, D) — global block pool
+    v_pages:      (N, bs, Hkv, D)
+    block_tables: (B, P) int32    — page ids per sequence (padded arbitrary)
+    context_lens: (B,)   int32    — valid tokens per sequence
+    returns:      (B, H, D)
+    """
+    b, h, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    p = block_tables.shape[1]
+    g = h // hkv
+
+    # materialize each sequence's KV: (B, P*bs, Hkv, D)
+    k = k_pages[block_tables].reshape(b, p * bs, hkv, d)
+    v = v_pages[block_tables].reshape(b, p * bs, hkv, d)
+
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(p * bs)
+    mask = pos[None, :] < context_lens[:, None]          # (B, T)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def block_gather_ref(pages, indices):
+    """Gather pool blocks into a contiguous staging buffer.
+
+    pages:   (N, bs, Hkv, D);  indices: (M,) int32  ->  (M, bs, Hkv, D)
+    """
+    return pages[indices]
+
+
+def block_scatter_ref(pages, indices, staging):
+    """Scatter a staging buffer back into pool blocks (upload path)."""
+    return pages.at[indices].set(staging)
+
+
+def ssd_scan_ref(x, dt, a, b, c, init_state=None):
+    """Sequential (non-chunked) SSD recurrence — the gold reference.
+
+    x: (B, S, H, P); dt, a: (B, S, H) f32 (a = dt * A, A < 0);
+    b, c: (B, S, N) f32. Returns (y (B,S,H,P) f32, state (B,H,P,N) f32).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, at, bt, ct = inp
+        da = jnp.exp(at)                                 # (B, H)
+        state = state * da[..., None, None] + \
+            jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+    inputs = (xf.swapaxes(0, 1), dt.swapaxes(0, 1), a.swapaxes(0, 1),
+              b.swapaxes(0, 1), c.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, init_state, inputs)
+    return ys.swapaxes(0, 1), state
+
+
+def swa_attention_ref(q, k, v, window):
+    """Causal sliding-window attention (prefill). q,k,v: (B, S, H, D)."""
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) & (j > i - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,108 @@
+"""Pallas Mamba2 SSD chunk-scan kernel. [arXiv:2405.21060]
+
+Grid = (batch, head, chunk) with the chunk axis innermost: TPU grid steps on
+the last axis run sequentially, so the recurrent state (P, N) lives in VMEM
+scratch and flows across chunk iterations — the Pallas analogue of the
+chunked state-passing in the SSD paper, with the intra-chunk quadratic term
+hitting the MXU as (Q x Q) and (Q x N) matmuls.
+
+Oracle: ``ref.ssd_scan_ref`` (token-sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_scr, *, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)   # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32) # (Q,)
+    a = a_ref[0, 0, 0].astype(jnp.float32)   # (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    q = x.shape[0]
+
+    a_cum = jnp.cumsum(a)                                    # (Q,)
+    # intra-chunk: L[i,j] = exp(a_cum[i]-a_cum[j]) for i >= j
+    diff = a_cum[:, None] - a_cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)              # (Q, Q)
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    w = scores * decay * dt[None, :]                         # (Q, Q)
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)    # (Q, P)
+
+    # inter-chunk: contribution of carried state
+    state = state_scr[...]                                   # (P, N)
+    y += jnp.exp(a_cum)[:, None] * jnp.dot(
+        c, state.T, preferred_element_type=jnp.float32)
+
+    # state update
+    rem = jnp.exp(a_cum[-1] - a_cum)                         # (Q,)
+    contrib = jnp.dot(x.T * (dt * rem)[None, :], b,
+                      preferred_element_type=jnp.float32)    # (P, N)
+    state_scr[...] = state * jnp.exp(a_cum[-1]) + contrib
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        state_out_ref[0, 0] = state_scr[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int = 64, *, interpret: bool = True):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt, a: (B, S, H) f32; b, c: (B, S, N) f32.
+    Returns (y (B, S, H, P) f32, final_state (B, H, P, N) f32).
+    S must be a multiple of ``chunk`` (callers pad).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    C = S // chunk
+
+    # chunk-major layouts: (B, H, C, Q, ...) so grid blocks are contiguous
+    xc = x.transpose(0, 2, 1, 3).reshape(B, H, C, chunk, P)
+    dtc = dt.transpose(0, 2, 1).reshape(B, H, C, chunk)
+    ac = a.transpose(0, 2, 1).reshape(B, H, C, chunk)
+    bc = b.reshape(B, C, chunk, N)
+    cc = c.reshape(B, C, chunk, N)
+
+    kernel = functools.partial(_kernel, num_chunks=C)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, C),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b_, h_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b_, h_, c_: (b_, c_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, C, chunk, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, ac, bc, cc)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y, state

@@ -1,0 +1,100 @@
+"""Pallas sliding-window flash-attention (prefill).
+
+Used by the SWA architectures (Mistral/Mixtral/Hymba — and the beyond-paper
+``long_500k`` dense variant). The kv loop only visits blocks inside
+[q_block_start - window, q_block_end): work per query tile is O(window),
+which is what makes the 500k-token serving shape tractable.
+
+Grid = (batch*heads, q_blocks, kv_blocks) with kv innermost; flash
+accumulators persist in VMEM scratch across kv steps. kv blocks fully
+outside the window are masked to zero contribution (Pallas requires a
+static grid; the mask is the correctness guard, the window bound trims the
+work in the fused TPU schedule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, q_block: int, kv_block: int, window: int, num_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (Qb, D)
+    k = k_ref[0].astype(jnp.float32)            # (Kb, D)
+    v = v_ref[0].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    probs = jnp.where(mask, jnp.exp(scores - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * alpha + probs.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        probs, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_kv - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def swa_attention(q, k, v, window: int, q_block: int = 128,
+                  kv_block: int = 128, *, interpret: bool = True):
+    """Causal sliding-window attention. q,k,v: (B, S, H, D) (MHA layout —
+    callers repeat KV heads for GQA). Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    assert s % q_block == 0 and s % kv_block == 0
+    nq, nk = s // q_block, s // kv_block
+
+    # fold batch and heads into one grid axis
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    kernel = functools.partial(_kernel, q_block=q_block, kv_block=kv_block,
+                               window=window, num_kv=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

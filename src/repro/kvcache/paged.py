@@ -1,0 +1,95 @@
+"""Paged KV cache: device pools + host pool, driven by the block ids that
+``repro.core.block_pool`` hands out.
+
+Layout (per model): k/v pools of shape (L, N, bs, Hkv, D). The Pallas
+kernels view a single layer (N, bs, Hkv, D); the migration data plane moves
+whole (L, bs, Hkv, D) block-columns per block id so one logical block id
+covers every layer (that matches vLLM's block granularity accounting with
+3 MiB/block across all layers).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+class PagedKVCache:
+    def __init__(self, cfg, num_blocks: int, block_size: int,
+                 host_blocks: int = 0, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        nl, hkv, dh = cfg.num_layers, max(cfg.num_kv_heads, 1), \
+            max(cfg.head_dim, 1)
+        shape = (nl, num_blocks, block_size, hkv, dh)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        # host pool is numpy (pinned host memory stand-in)
+        hshape = (nl, max(host_blocks, 1), block_size, hkv, dh)
+        self.host_k = np.zeros(hshape, dtype)
+        self.host_v = np.zeros(hshape, dtype)
+
+    # ---- write path ---------------------------------------------------------
+    def write_prefill(self, blocks: List[int], k_seq, v_seq):
+        """k_seq/v_seq: (L, S, Hkv, D) for one request; scatter into blocks."""
+        bs = self.block_size
+        s = k_seq.shape[1]
+        n = -(-s // bs)
+        pad = n * bs - s
+        if pad:
+            k_seq = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_seq = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kb = k_seq.reshape(k_seq.shape[0], n, bs, *k_seq.shape[2:])
+        vb = v_seq.reshape(v_seq.shape[0], n, bs, *v_seq.shape[2:])
+        idx = jnp.asarray(blocks[:n], jnp.int32)
+        self.k = self.k.at[:, idx].set(kb.astype(self.k.dtype))
+        self.v = self.v.at[:, idx].set(vb.astype(self.v.dtype))
+
+    def write_token(self, blocks: List[int], pos: int, k_tok, v_tok):
+        """k_tok/v_tok: (L, Hkv, D); write at absolute position ``pos``."""
+        bs = self.block_size
+        bid = blocks[pos // bs]
+        off = pos % bs
+        self.k = self.k.at[:, bid, off].set(k_tok.astype(self.k.dtype))
+        self.v = self.v.at[:, bid, off].set(v_tok.astype(self.v.dtype))
+
+    # ---- read path ----------------------------------------------------------
+    def gather_seq(self, blocks: List[int], length: int):
+        """Materialize one request's KV: (L, length, Hkv, D)."""
+        idx = jnp.asarray(blocks, jnp.int32)
+        k = self.k[:, idx].reshape(self.k.shape[0], -1, *self.k.shape[3:])
+        v = self.v[:, idx].reshape(self.v.shape[0], -1, *self.v.shape[3:])
+        return k[:, :length], v[:, :length]
+
+    def decode_attention(self, layer: int, q, block_tables, context_lens):
+        """Batched paged decode attention for one layer via the Pallas kernel.
+
+        q: (B, H, D); block_tables: (B, P) int32; context_lens: (B,).
+        """
+        return ops.paged_attention(q, self.k[layer], self.v[layer],
+                                   block_tables, context_lens)
+
+    # ---- migration (paper §6.3) ---------------------------------------------
+    def offload(self, gpu_blocks: List[int], host_blocks: List[int]):
+        """D2H: gather device blocks into staging, copy to the host pool."""
+        idx = jnp.asarray(gpu_blocks, jnp.int32)
+        for pool, host in ((self.k, self.host_k), (self.v, self.host_v)):
+            for l in range(pool.shape[0]):
+                staging = ops.block_gather(pool[l], idx)
+                host[l, host_blocks] = np.asarray(staging)
+
+    def upload(self, host_blocks: List[int], gpu_blocks: List[int]):
+        """H2D: read host blocks, scatter into (possibly new) device blocks."""
+        idx = jnp.asarray(gpu_blocks, jnp.int32)
+        new_k, new_v = self.k, self.v
+        for l in range(self.k.shape[0]):
+            stg_k = jnp.asarray(self.host_k[l, host_blocks])
+            stg_v = jnp.asarray(self.host_v[l, host_blocks])
+            new_k = new_k.at[l].set(ops.block_scatter(new_k[l], idx, stg_k))
+            new_v = new_v.at[l].set(ops.block_scatter(new_v[l], idx, stg_v))
+        self.k, self.v = new_k, new_v

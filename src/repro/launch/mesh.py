@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import, and smoke tests must keep seeing one device.
+
+Target: TPU v5e, 16x16 = 256 chips per pod; multi-pod = 2 pods = 512 chips
+with a leading "pod" data-parallel axis (DCN between pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry batch parallelism (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

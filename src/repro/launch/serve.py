@@ -1,0 +1,100 @@
+"""Serving launcher: the TokenCake engine as a long-running service loop.
+
+Offline-container stand-in for the paper's HTTP frontend (§6.1/§6.2): the
+``MCPFrontend`` below exposes the same three entry points the paper's REST
+API provides — ``register_graph``, ``call_start``, ``call_finish`` — driven
+here by the workload generator instead of network clients. On a real
+deployment these map 1:1 onto the OpenAI-compatible endpoint extensions.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode tokencake \
+        --apps 20 --qps 1.0 [--real-compute]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import get_smoke_config
+from repro.core.costmodel import PLATFORMS, A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.request import ReqState
+from repro.data.workloads import build_workload
+
+
+class MCPFrontend:
+    """§6.2 endpoints, object form. The engine drives call_start/call_finish
+    internally for simulated tools; external tools would POST here."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+
+    def register_graph(self, graph, arrival: float = 0.0,
+                       prompts=None) -> str:
+        return self.engine.submit_app(graph, arrival, prompts)
+
+    def call_start(self, rid: str, estimate: float | None = None):
+        req = self.engine._find(rid)
+        if req is not None and req.state == ReqState.RUNNING:
+            if estimate is not None and req.next_fc() is not None:
+                req.next_fc().predict_time = estimate
+            self.engine.call_start(req)
+
+    def call_finish(self, rid: str, elapsed: float | None = None):
+        req = self.engine._find(rid)
+        if req is not None:
+            self.engine.call_finish(req)
+
+    def states(self) -> dict:
+        out = {}
+        for app in self.engine.apps.values():
+            for r in app.node_request.values():
+                out[r.rid] = r.state.value
+        return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="tokencake",
+                    choices=["baseline", "vllm_prefix", "agent", "offload",
+                             "tokencake", "mooncake", "parrot"])
+    ap.add_argument("--app", default="code_writer")
+    ap.add_argument("--apps", type=int, default=20)
+    ap.add_argument("--qps", type=float, default=1.0)
+    ap.add_argument("--blocks", type=int, default=640)
+    ap.add_argument("--platform", default="a100_pcie_qwen14b",
+                    choices=list(PLATFORMS))
+    ap.add_argument("--real-compute", action="store_true",
+                    help="tiny model + real paged KV + Pallas kernels")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    plat = PLATFORMS[args.platform]
+    ecfg = EngineConfig.preset(args.mode, gpu_blocks=args.blocks,
+                               max_running=64)
+    backend = None
+    if args.real_compute:
+        from repro.core.backend import JaxBackend
+        backend = JaxBackend(get_smoke_config("glm4_9b"), ecfg, plat)
+    eng = Engine(ecfg, plat, backend=backend)
+    front = MCPFrontend(eng)
+
+    for t, g in build_workload(args.app, qps=args.qps, n_apps=args.apps,
+                               seed=1):
+        if args.real_compute:
+            for n in g.nodes.values():
+                n.prompt_len = min(n.prompt_len, 64)
+                n.decode_segments = [min(s, 16) for s in n.decode_segments]
+        front.register_graph(g, t)
+
+    rep = eng.run(max_time=1e6)
+    if args.json:
+        print(json.dumps(rep, indent=1))
+    else:
+        print(f"[{args.mode}] {rep['apps_finished']}/{args.apps} apps, "
+              f"avg {rep['avg_latency']:.1f}s p90 {rep['p90_latency']:.1f}s "
+              f"offloads {rep['offloads']} "
+              f"effective-util {rep['effective_utilization']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

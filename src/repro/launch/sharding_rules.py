@@ -1,0 +1,179 @@
+"""Sharding rules: logical-axis tables + parameter/cache PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+ * training   — FSDP x TP: stacked weights (L, in, out) shard in->data,
+   out->model; experts shard E->data when divisible else cap->data;
+   activations batch->(pod, data).
+ * prefill    — batch->(pod,data), heads/ffn->model.
+ * decode     — batch->(pod,data); KV cache batch->(pod,data).
+ * long decode (batch=1) — context parallelism: cache seq->data; the
+   online-softmax over the sharded seq axis lowers to all-reduce triples.
+
+Dimensions that do not divide their mesh axes are left replicated by
+``logical`` (tiny dims) or padded by GSPMD (large dims) — head counts of
+20/25/36/40 fall back to hidden-dim sharding of the projection matrices.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+
+
+def activation_rules(mesh, shape_kind: str) -> dict:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = dp if len(dp) > 1 else dp[0]
+    rules = {
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "data",      # matches expert-weight FSDP axis (Kimi 384e)
+        "expert_cap": dp,       # used when experts don't divide (Mixtral 8e)
+    }
+    if shape_kind == "long_decode":
+        rules["batch"] = None
+        rules["cache_seq"] = "data"
+    else:
+        rules["cache_seq"] = None
+    return rules
+
+
+def _divides(n: int, mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= dict(zip(mesh.axis_names,
+                         mesh.devices.shape))[a]
+    return n % size == 0 and n >= size
+
+
+def param_spec_tree(cfg, mesh, fsdp: bool = True):
+    """PartitionSpec pytree matching ``M.param_specs(cfg)``."""
+    specs = M.param_specs(cfg)
+    # FSDP/ZeRO axis. The pod axis is folded in ONLY when params+optimizer
+    # would overflow HBM with in-pod sharding (ZeRO-3 over DCN is expensive
+    # — kimi-k2 is the one assigned config that needs it; see EXPERIMENTS.md
+    # §Dry-run for the memory/collective trade).
+    opt_b = 4 if cfg.optimizer_state_dtype == "bfloat16" else 8
+    per_chip = cfg.param_count() * (2 + opt_b) / 256
+    data_ax = ("pod", "data") if ("pod" in mesh.axis_names
+                                  and per_chip > 14 * 2**30) else "data"
+    if cfg.replicate_params:
+        # sub-HBM models (e.g. mamba2-130m): TP resharding collectives cost
+        # more than the weights they save — replicate everything
+        return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), specs)
+
+    def rule(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("embed",):
+            if _divides(shape[0], mesh, "model"):
+                return P("model", None)
+            return P(None, "model" if _divides(shape[1], mesh, "model")
+                     else None)
+        if name in ("unembed",):
+            # vocab rarely divides 16 (e.g. 122753); shard d_model instead
+            if _divides(shape[1], mesh, "model"):
+                return P(None, "model")
+            return P("model" if _divides(shape[0], mesh, "model") else None,
+                     None)
+        if nd <= 2:
+            return P(*([None] * nd))                 # norms, scalars, biases
+        if name in ("we1", "we3", "we2"):            # (L, E, in, out)
+            out_ax = "model" if _divides(shape[3], mesh, "model") else None
+            if _divides(shape[1], mesh, data_ax):
+                return P(None, data_ax if fsdp else None, None, out_ax)
+            in_ax = data_ax if (fsdp and _divides(shape[2], mesh, data_ax)) \
+                else None
+            return P(None, None, in_ax, out_ax)
+        if name == "wr":                             # router (L, d, E)
+            return P(None, None, None)
+        if nd == 3:                                  # (L, in, out) matmuls
+            in_ok = _divides(shape[1], mesh, data_ax)
+            out_ok = _divides(shape[2], mesh, "model")
+            return P(None,
+                     data_ax if (fsdp and in_ok) else None,
+                     "model" if out_ok else None)
+        if nd == 4:                                  # conv (L, W, C) etc.
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def param_shardings(cfg, mesh, fsdp: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_spec_tree(cfg, mesh, fsdp))
+
+
+def cache_shardings(cfg, mesh, batch: int, cache_size: int,
+                    shape_kind: str):
+    specs = M.cache_specs(cfg, batch, cache_size)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    long_ctx = shape_kind == "long_decode"
+
+    def spec_for(name, shape):
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # most assigned archs have kv_heads not divisible by 16
+            # (GQA 2/5/8, MHA 20/36/40) — shard the cache sequence over
+            # "model" instead (flash-decoding style partial softmax)
+            kv_ax = "model" if _divides(shape[3], mesh, "model") else None
+            seq_ax = None
+            if kv_ax is None and _divides(shape[2], mesh, "model"):
+                seq_ax = "model"
+            if long_ctx and name in ("k", "v"):
+                seq = ("data", "model") if (kv_ax is None and seq_ax) \
+                    else "data"
+                if not _divides(shape[2], mesh, seq):
+                    seq = "data" if _divides(shape[2], mesh, "data") else None
+                return P(None, None, seq, kv_ax, None)
+            batch_ax = dp if _divides(shape[1], mesh, dp) else None
+            return P(None, batch_ax, seq_ax, kv_ax, None)
+        if name in ("k_scale", "v_scale"):        # (L, B, S, Hkv)
+            kv_ax = "model" if _divides(shape[3], mesh, "model") else None
+            seq_ax = "model" if (kv_ax is None
+                                 and _divides(shape[2], mesh, "model")) \
+                else None
+            if long_ctx:
+                return P(None, None,
+                         "data" if _divides(shape[2], mesh, "data") else None,
+                         kv_ax)
+            batch_ax = dp if _divides(shape[1], mesh, dp) else None
+            return P(None, batch_ax, seq_ax, kv_ax)
+        if name == "conv":
+            batch_ax = dp if _divides(shape[1], mesh, dp) else None
+            return P(None, batch_ax, None, None)
+        if name == "state":
+            # (L, B, H, P, N): heads rarely divide 16 (mamba2 H=24) — fall
+            # back to sharding the value head_dim P (64/16 = 4) so the
+            # recurrent state and its update compute still split on "model"
+            h_ax = "model" if _divides(shape[2], mesh, "model") else None
+            p_ax = "model" if (h_ax is None
+                               and _divides(shape[3], mesh, "model")) else None
+            batch_ax = dp if _divides(shape[1], mesh, dp) else None
+            return P(None, batch_ax, h_ax, p_ax, None)
+        return P(*([None] * len(shape)))
+
+    return {k: NamedSharding(mesh, spec_for(k, v.shape))
+            for k, v in specs.items()}
+
+
+def batch_shardings(cfg, mesh, batch_specs: dict):
+    """Shardings for a train/prefill input batch dict."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def spec_for(name, shape):
+        batch_ax = dp if _divides(shape[0], mesh, dp) else None
+        return P(batch_ax, *([None] * (len(shape) - 1)))
+
+    return {k: NamedSharding(mesh, spec_for(k, v.shape))
+            for k, v in batch_specs.items()}

@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture x input shape).
+
+No device allocation — these are the lowering inputs for the dry-run.
+Decode shapes build the KV-cache specs (one new token against a cache of
+``seq_len``); modality frontends contribute patch/frame embedding inputs
+(the stubbed encoder per the assignment spec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, config_for_shape
+from repro.models import model as M
+
+
+def _f(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _i(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """Returns the kwargs pytree for the step function of this shape."""
+    shp = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(cfg, shp)
+    B, S = shp.global_batch, shp.seq_len
+
+    if shp.kind == "train":
+        batch = {"tokens": _i((B, S)), "targets": _i((B, S))}
+        if cfg.arch_type == "vlm":
+            batch["patches"] = _f((B, cfg.num_patch_tokens, cfg.d_model))
+        if cfg.arch_type == "audio":
+            batch["frames"] = _f((B, cfg.encoder_frames, cfg.d_model))
+        return {"batch": batch}
+
+    if shp.kind == "prefill":
+        batch = {"tokens": _i((B, S))}
+        if cfg.arch_type == "vlm":
+            batch["patches"] = _f((B, cfg.num_patch_tokens, cfg.d_model))
+        if cfg.arch_type == "audio":
+            batch["frames"] = _f((B, cfg.encoder_frames, cfg.d_model))
+        return {"batch": batch}
+
+    # decode: ONE new token against a cache of seq_len
+    cache = M.cache_specs(cfg, B, S)
+    return {"cache": cache,
+            "tokens": _i((B,)),
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,82 @@
+"""Training launcher.
+
+Two modes:
+ * real run (default): trains the selected architecture at a given scale on
+   the available devices (CPU smoke scale by default; on TPU pass
+   ``--scale full`` to train the published config across the pod with the
+   same sharding rules the dry-run validates);
+ * ``--dry-run``: delegate to repro.launch.dryrun for lower+compile only.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm_2b \
+        --steps 100 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding_rules as SR
+from repro.models import decoder as DEC
+from repro.models.sharding import use_rules
+from repro.train import optimizer as O
+from repro.train.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default="wsd")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.scale == "full" \
+        else get_smoke_config(args.arch)
+    if args.remat or args.scale == "full":
+        DEC.set_remat(True)
+
+    n_dev = len(jax.devices())
+    mesh = rules = None
+    if n_dev > 1:
+        # production sharding on whatever mesh is available
+        import numpy as np
+        shape = (max(n_dev // 16, 1), min(n_dev, 16))
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()).reshape(shape), ("data", "model"))
+        rules = SR.activation_rules(mesh, "train")
+        print(f"mesh {shape} over {n_dev} devices")
+
+    opt = O.AdamWConfig(lr=args.lr, schedule=args.schedule,
+                        warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps,
+                        state_dtype=cfg.optimizer_state_dtype)
+    pipe = TokenPipeline(cfg, args.batch, args.seq, seed=0)
+    print(f"training {cfg.name} for {args.steps} steps "
+          f"(batch {args.batch} x seq {args.seq}, {args.schedule})")
+
+    def go():
+        return train(cfg, opt, iter(pipe), num_steps=args.steps,
+                     log_every=max(args.steps // 20, 1),
+                     checkpoint_path=args.checkpoint,
+                     checkpoint_every=100 if args.checkpoint else 0)
+
+    if mesh is not None:
+        with use_rules(mesh, rules), mesh:
+            _, _, hist = go()
+    else:
+        _, _, hist = go()
+    print(f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder transformer. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is STUBBED per spec: the model
+consumes precomputed frame embeddings (B, frames, d_model). Positional
+information is sinusoidal (computed on the fly — the published learned
+decoder table tops out at 448 positions; the assigned 32k/500k decode shapes
+are synthetic serving stress shapes, see DESIGN.md §4).
+
+Whisper uses LayerNorm (with bias) and GELU MLPs; attention is MHA
+(num_kv_heads == num_heads).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.decoder import stack_scan
+
+
+def sinusoids(length, channels):
+    assert channels % 2 == 0
+    log_timescale = math.log(10000) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    t = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def position_embed(positions, channels):
+    """Sinusoidal embedding for arbitrary integer positions (B,S) or (S,)."""
+    log_timescale = math.log(10000) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    t = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=-1)
+
+
+def _init_ln(nl, d, dtype):
+    return {"w": jnp.ones((nl, d), dtype), "b": jnp.zeros((nl, d), dtype)}
+
+
+def init_encdec(cfg, key, dtype):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    enc = {
+        "attn": L.init_attn(cfg, ks[0], ne, dtype),
+        "ln1": _init_ln(ne, d, dtype),
+        "mlp": L.init_mlp(cfg, ks[1], ne, dtype, gelu=True),
+        "ln2": _init_ln(ne, d, dtype),
+    }
+    dec = {
+        "self_attn": L.init_attn(cfg, ks[2], nd, dtype),
+        "ln1": _init_ln(nd, d, dtype),
+        "cross_attn": L.init_attn(cfg, ks[3], nd, dtype),
+        "ln2": _init_ln(nd, d, dtype),
+        "mlp": L.init_mlp(cfg, ks[4], nd, dtype, gelu=True),
+        "ln3": _init_ln(nd, d, dtype),
+    }
+    return {"encoder": enc, "decoder": dec,
+            "enc_ln_post": {"w": jnp.ones((d,), dtype),
+                            "b": jnp.zeros((d,), dtype)}}
+
+
+def _ln(x, p):
+    return L.layer_norm(x, p["w"], p["b"])
+
+
+def encode(cfg, params, frames):
+    """frames: (B, F, d) precomputed frame embeddings."""
+    x = frames + sinusoids(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    enc = params["encoder"]
+
+    def body(h, lp):
+        xn = _ln(h, lp["ln1"])
+        q, k, v = L.qkv_project(cfg, lp["attn"], xn)
+        pos = jnp.arange(h.shape[1])
+        out = L.full_attention(q, k, v, pos, pos, causal=False)
+        h = h + L.attn_out(lp["attn"], out)
+        h = h + L.mlp(lp["mlp"], _ln(h, lp["ln2"]), gelu=True)
+        return h, None
+
+    x, _ = stack_scan(body, x, enc)
+    return _ln(x, params["enc_ln_post"])
+
+
+def cross_kv(cfg, params, enc_out):
+    """Precompute per-layer cross-attention K/V: (L, B, F, H, Dh)."""
+    dec = params["decoder"]
+
+    def body(_, lp):
+        _, k, v = L.qkv_project(cfg, lp["cross_attn"], enc_out)
+        return None, (k, v)
+
+    _, (k, v) = stack_scan(body, None, dec)
+    return k, v
+
+
+def decode_forward(cfg, params, x, positions, enc_out):
+    """Teacher-forced decoder. x: (B,S,d) token embeds (+pos added here)."""
+    x = x + position_embed(positions, cfg.d_model).astype(x.dtype)
+    dec = params["decoder"]
+    f_pos = jnp.arange(enc_out.shape[1])
+
+    def body(h, lp):
+        xn = _ln(h, lp["ln1"])
+        q, k, v = L.qkv_project(cfg, lp["self_attn"], xn)
+        out = L.chunked_attention(q, k, v, positions, positions)
+        h = h + L.attn_out(lp["self_attn"], out)
+        xn = _ln(h, lp["ln2"])
+        q, ck, cv = L.qkv_project(cfg, lp["cross_attn"], xn)
+        # queries from decoder, keys/values from encoder
+        _, ek, ev = L.qkv_project(cfg, lp["cross_attn"], enc_out)
+        out = L.full_attention(q, ek, ev, positions, f_pos, causal=False)
+        h = h + L.attn_out(lp["cross_attn"], out)
+        h = h + L.mlp(lp["mlp"], _ln(h, lp["ln3"]), gelu=True)
+        return h, None
+
+    h, _ = stack_scan(body, x, dec)
+    return h
+
+
+def decode_prefill(cfg, params, x, positions, enc_out, cache_size):
+    """Prefill decoder: returns hidden + {k,v,cross_k,cross_v} caches."""
+    x = x + position_embed(positions, cfg.d_model).astype(x.dtype)
+    dec = params["decoder"]
+    f_pos = jnp.arange(enc_out.shape[1])
+    B, Sq = x.shape[:2]
+
+    def body(h, lp):
+        xn = _ln(h, lp["ln1"])
+        q, k, v = L.qkv_project(cfg, lp["self_attn"], xn)
+        out = L.chunked_attention(q, k, v, positions, positions)
+        h = h + L.attn_out(lp["self_attn"], out)
+        xn = _ln(h, lp["ln2"])
+        q, _, _ = L.qkv_project(cfg, lp["cross_attn"], xn)
+        _, ek, ev = L.qkv_project(cfg, lp["cross_attn"], enc_out)
+        out = L.full_attention(q, ek, ev, positions, f_pos, causal=False)
+        h = h + L.attn_out(lp["cross_attn"], out)
+        h = h + L.mlp(lp["mlp"], _ln(h, lp["ln3"]), gelu=True)
+        pad = cache_size - k.shape[1]
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, {"k": k, "v": v, "cross_k": ek, "cross_v": ev}
+
+    h, cache = stack_scan(body, x, dec)
+    return h, cache
+
+
+def decode_step(cfg, params, cache, x, cache_len):
+    """One decoder token against self-attn cache + fixed cross-attn cache."""
+    pos = jnp.full((1, 1), cache_len, jnp.int32)
+    x = x + position_embed(pos, cfg.d_model).astype(x.dtype)
+    dec = params["decoder"]
+
+    def body(h, xs):
+        lp, c = xs
+        xn = _ln(h, lp["ln1"])
+        q, k, v = L.qkv_project(cfg, lp["self_attn"], xn)
+        k_c = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype),
+                                           (0, cache_len, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype),
+                                           (0, cache_len, 0, 0))
+        out = L.decode_attention(q, k_c, v_c, cache_len + 1)
+        h = h + L.attn_out(lp["self_attn"], out)
+        xn = _ln(h, lp["ln2"])
+        q, _, _ = L.qkv_project(cfg, lp["cross_attn"], xn)
+        f_pos = jnp.arange(c["cross_k"].shape[1])
+        out = L.full_attention(q, c["cross_k"], c["cross_v"], pos, f_pos,
+                               causal=False)
+        h = h + L.attn_out(lp["cross_attn"], out)
+        h = h + L.mlp(lp["mlp"], _ln(h, lp["ln3"]), gelu=True)
+        return h, {"k": k_c, "v": v_c,
+                   "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    h, new_cache = stack_scan(body, x, (dec, cache))
+    return h, new_cache

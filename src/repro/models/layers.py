@@ -1,0 +1,305 @@
+"""Shared neural-net layers (pure functional JAX, no flax).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays. Per-layer params are STACKED along
+  a leading layer axis and consumed with ``jax.lax.scan`` so the HLO size is
+  O(1) in depth (critical for 61-layer dry-run compiles on one CPU core).
+* Activations default to the config dtype (bf16); softmax/normalization
+  statistics are computed in f32.
+* Attention is GQA throughout; ``sliding_window`` masks are supported in both
+  the quadratic and the query-chunked (flash-style) paths.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,D)  k: (B,T,Hkv,D) -> scores (B,H,S,T) with GQA grouping."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    return scores.reshape(b, hkv * g, s, k.shape[1])
+
+
+def _gqa_values(probs, v):
+    """probs: (B,H,S,T)  v: (B,T,Hkv,D) -> (B,S,H,D)."""
+    b, h, s, t = probs.shape
+    hkv = v.shape[2]
+    g = h // hkv
+    probs = probs.reshape(b, hkv, g, s, t)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def attention_mask(q_pos, k_pos, window: Optional[int], causal: bool = True):
+    """Boolean mask (..., S_q, S_k): True = attend."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def full_attention(q, k, v, q_pos, k_pos, window=None, causal=True):
+    """Quadratic reference attention. q:(B,S,H,D) k/v:(B,T,Hkv,D)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = _gqa_scores(q, k) * scale                       # (B,H,S,T) f32
+    mask = attention_mask(q_pos, k_pos, window, causal)      # (B,S,T) or (S,T)
+    if mask.ndim == 3:
+        mask = mask[:, None]
+    else:
+        mask = mask[None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_values(probs, v).astype(v.dtype)
+
+
+# Cost-analysis mode: bypass the query-chunk scan (XLA counts scan bodies
+# once; the dry-run's flops extrapolation sets this to get true attention
+# flops in the HLO). Never used for real execution at long seq.
+FULL_ATTN = False
+
+
+def set_full_attn(value: bool) -> None:
+    global FULL_ATTN
+    FULL_ATTN = bool(value)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, window=None, causal=True,
+                      q_chunk: int = 1024, causal_skip: bool = False):
+    """Query-chunked attention: O(q_chunk * T) transient memory.
+
+    Flash-style in the sense that full (S,T) scores are never materialized;
+    each query chunk still sees all keys (mask applied), so numerics match
+    ``full_attention`` exactly up to fp summation order.
+
+    ``causal_skip``: unrolled variant that slices KV to the causally (and
+    window-) reachable prefix per query chunk — skips the masked half of
+    the score matrix entirely (~2x attention flops for long prefill, at
+    O(n_chunks) HLO size instead of O(1); EXPERIMENTS.md §Perf P6).
+    """
+    b, s, h, d = q.shape
+    if FULL_ATTN or s <= q_chunk:
+        return full_attention(q, k, v, q_pos, k_pos, window, causal)
+    if causal_skip and causal and k.shape[1] == s:
+        pad = (-s) % q_chunk
+        assert pad == 0, "causal_skip requires chunk-aligned seq"
+        n = s // q_chunk
+        outs = []
+        for i in range(n):
+            hi = (i + 1) * q_chunk
+            lo = 0
+            if window is not None:
+                lo = max(0, (i * q_chunk + 1 - window)
+                         // q_chunk * q_chunk)
+            outs.append(full_attention(
+                q[:, i * q_chunk:hi], k[:, lo:hi], v[:, lo:hi],
+                q_pos[..., i * q_chunk:hi], k_pos[..., lo:hi],
+                window, causal))
+        return jnp.concatenate(outs, axis=1)
+    pad = (-s) % q_chunk
+    if pad:
+        # pad queries (VLM prefix makes seq non-multiples); padded rows are
+        # fully masked garbage and sliced off below
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, [(0, 0)] * (q_pos.ndim - 1) + [(0, pad)],
+                        constant_values=-1)
+    sp = s + pad
+    n = sp // q_chunk
+
+    qc = q.reshape(b, n, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(q_pos.shape[:-1] + (n, q_chunk))
+    pc = jnp.moveaxis(pc, -2, 0)
+
+    def body(_, args):
+        qi, pi = args
+        out = full_attention(qi, k, v, pi, k_pos, window, causal)
+        return _, out
+
+    _, outs = jax.lax.scan(body, None, (qc, pc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, d)
+    return out[:, :s] if pad else out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, window=None):
+    """Single-token decode: q (B,1,H,D) against cache (B,S,Hkv,D).
+
+    ``cache_len`` (scalar or (B,)) marks valid prefix; the new token is
+    assumed already written at position cache_len-1... — positions are
+    [0, cache_len); query position = cache_len - 1.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = _gqa_scores(q, k_cache) * scale                 # (B,H,1,S)
+    s = k_cache.shape[1]
+    kpos = jnp.arange(s)
+    cache_len = jnp.asarray(cache_len)
+    cl = cache_len.reshape(-1, 1) if cache_len.ndim else cache_len
+    valid = kpos[None, :] < jnp.reshape(cl, (-1, 1))         # (B or 1, S)
+    if window is not None:
+        valid &= kpos[None, :] >= jnp.reshape(cl, (-1, 1)) - window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_values(probs, v_cache).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + forward), GQA + optional bias
+# ---------------------------------------------------------------------------
+
+def attn_param_shapes(cfg, prefix_layers: int):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    L = prefix_layers
+    shapes = {
+        "wq": (L, d, h * dh), "wk": (L, d, hkv * dh),
+        "wv": (L, d, hkv * dh), "wo": (L, h * dh, d),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (L, h * dh), "bk": (L, hkv * dh),
+                       "bv": (L, hkv * dh)})
+    return shapes
+
+
+def init_attn(cfg, key, layers: int, dtype):
+    ks = jax.random.split(key, 8)
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (layers, d, h * dh), dtype),
+        "wk": dense_init(ks[1], (layers, d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], (layers, d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], (layers, h * dh, d), dtype,
+                         scale=1.0 / math.sqrt((h * dh) * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((layers, h * dh), dtype)
+        p["bk"] = jnp.zeros((layers, hkv * dh), dtype)
+        p["bv"] = jnp.zeros((layers, hkv * dh), dtype)
+    return p
+
+
+def qkv_project(cfg, lp, x):
+    """lp: one layer's attn params (unstacked). x: (B,S,d)."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    return (q.reshape(b, s, h, dh), k.reshape(b, s, hkv, dh),
+            v.reshape(b, s, hkv, dh))
+
+
+def attn_out(lp, o):
+    b, s = o.shape[:2]
+    return o.reshape(b, s, -1) @ lp["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU; whisper uses GELU variant)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, layers: int, dtype, gelu: bool = False):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"w1": dense_init(ks[0], (layers, d, f), dtype),
+         "w2": dense_init(ks[1], (layers, f, d), dtype,
+                          scale=1.0 / math.sqrt(f * cfg.num_layers))}
+    if not gelu:
+        p["w3"] = dense_init(ks[2], (layers, d, f), dtype)
+    if gelu:
+        p["b1"] = jnp.zeros((layers, f), dtype)
+        p["b2"] = jnp.zeros((layers, d), dtype)
+    return p
+
+
+def mlp(lp, x, gelu: bool = False):
+    if gelu:
+        h = jax.nn.gelu((x @ lp["w1"] + lp["b1"]).astype(jnp.float32))
+        return (h.astype(x.dtype) @ lp["w2"]) + lp["b2"]
+    return (jax.nn.silu((x @ lp["w1"]).astype(jnp.float32)).astype(x.dtype)
+            * (x @ lp["w3"])) @ lp["w2"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """logits (..., V) f32-safe cross entropy; labels int; mask optional."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

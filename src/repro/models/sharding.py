@@ -1,0 +1,82 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names; the
+launch layer installs a mapping from logical names to mesh axes. With no
+rules installed (unit tests, smoke tests, single device) every annotation
+is the identity, so model code never depends on a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: dict = {}
+_MESH: Optional[Mesh] = None
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[dict]):
+    global _RULES, _MESH
+    _RULES = dict(rules or {})
+    _MESH = mesh
+
+
+def get_rules():
+    return _MESH, dict(_RULES)
+
+
+@contextlib.contextmanager
+def use_rules(mesh, rules):
+    old = get_rules()
+    set_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        set_rules(*old)
+
+
+def spec(*names) -> P:
+    """Translate logical axis names to a PartitionSpec under current rules."""
+    return P(*[_RULES.get(n) if n is not None else None for n in names])
+
+
+def logical(x, *names):
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o rules)."""
+    if _MESH is None or not _RULES:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    axes = [_RULES.get(n) if n is not None else None for n in names]
+    # Drop axes that do not divide the dimension evenly only when the
+    # dimension is smaller than the axis size (GSPMD handles padding for
+    # the rest, but tiny dims are better left replicated).
+    sizes = dict(zip(_MESH.axis_names, _MESH.devices.shape))
+    def ok(dim, ax):
+        if ax is None:
+            return None
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= sizes[a]
+        return ax if dim >= n else None
+    axes = [ok(d, a) for d, a in zip(x.shape, axes)]
+    # a mesh axis may appear at most once in a PartitionSpec: when two
+    # logical dims map to overlapping mesh axes (e.g. experts->data and
+    # expert_cap->(pod,data)), the earlier dim wins
+    used: set = set()
+    resolved = []
+    for a in axes:
+        parts = a if isinstance(a, tuple) else (a,) if a else ()
+        if any(p in used for p in parts):
+            resolved.append(None)
+        else:
+            used.update(parts)
+            resolved.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*resolved)))
+
+
+def named_sharding(*names) -> Optional[NamedSharding]:
+    if _MESH is None:
+        return None
+    return NamedSharding(_MESH, spec(*names))

@@ -1,0 +1,192 @@
+"""Mamba2 SSD (state-space duality) mixer. [arXiv:2405.21060]
+
+Implements the chunked SSD algorithm: within a chunk of length Q the output
+is a masked quadratic (attention-like) term; across chunks a recurrent state
+(H, P, N) is carried with per-step scalar decay. The chunk loop is a
+``lax.scan`` so HLO size is O(1) in sequence length and transient memory is
+O(Q^2) per chunk — this mirrors the Pallas kernel's grid structure
+(`repro.kernels.ssd_scan`).
+
+State under serving: unlike attention's O(seq) KV cache, the SSD state is a
+fixed-size blob per layer — TokenCake's offload gate treats it as a single
+block-class (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def proj_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    d_proj = 2 * d_inner + 2 * n + h   # z, x, B, C, dt  (n_groups = 1)
+    conv_dim = d_inner + 2 * n         # conv over [x, B, C]
+    return d_inner, d_proj, conv_dim
+
+
+def init_ssm(cfg, key, n_layers: int, dtype):
+    d = cfg.d_model
+    d_inner, d_proj, conv_dim = proj_dims(cfg)
+    h, w = cfg.ssm_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], (n_layers, d, d_proj), dtype),
+        "conv_w": L.dense_init(ks[1], (n_layers, w, conv_dim), dtype,
+                               scale=1.0 / math.sqrt(w)),
+        "conv_b": jnp.zeros((n_layers, conv_dim), dtype),
+        "A_log": jnp.tile(jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+                          (n_layers, 1)),
+        "D": jnp.ones((n_layers, h), jnp.float32),
+        "dt_bias": jnp.tile(
+            jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, h))), (n_layers, 1)),
+        "ssm_norm": jnp.zeros((n_layers, d_inner), dtype),
+        "out_proj": L.dense_init(ks[3], (n_layers, d_inner, d), dtype,
+                                 scale=1.0 / math.sqrt(d_inner * max(cfg.num_layers, 1))),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, _, _ = proj_dims(cfg)
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    z, xin, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xin, b, c, dt
+
+
+def _causal_conv(cfg, lp, u, cache=None):
+    """Depthwise causal conv, width W. u: (B, S, C). cache: (B, W-1, C)."""
+    w = cfg.ssm_conv_width
+    if cache is None:
+        pad = jnp.zeros(u.shape[:1] + (w - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = cache
+    full = jnp.concatenate([pad, u], axis=1)            # (B, W-1+S, C)
+    # depthwise conv as sum of shifted slices (W is tiny)
+    out = sum(full[:, i:i + u.shape[1]] * lp["conv_w"][i]
+              for i in range(w))
+    out = out + lp["conv_b"]
+    new_cache = full[:, -(w - 1):]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_cache
+
+
+def _ssd_chunk_scan(cfg, x, dt, a, b, c, init_state=None):
+    """Chunked SSD core.
+
+    x: (B,S,H,P) values;  dt: (B,S,H) f32 step sizes;  a: (B,S,H) f32 log-decay
+    (= dt * A, A<0);  b,c: (B,S,N) f32 input/output projections (groups=1).
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    B, S, H, Pd = x.shape
+    N = b.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, a, b, c = map(zf, (x, dt, a, b, c))
+    Sp = x.shape[1]
+    C = Sp // Q
+
+    def to_chunks(t):
+        return t.reshape((B, C, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, ac, bc, cc = map(to_chunks, (x, dt, a, b, c))  # leading chunk axis
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def chunk_body(state, args):
+        xq, dtq, aq, bq, cq = args       # (B,Q,H,P) (B,Q,H) (B,Q,H) (B,Q,N)
+        a_cum = jnp.cumsum(aq, axis=1)                  # (B,Q,H)
+        # ---- intra-chunk quadratic term ----
+        # L[i,j] = exp(a_cum[i] - a_cum[j]) for i >= j. Clamp BEFORE exp:
+        # upper-triangle diffs are large-positive and exp(inf) would poison
+        # gradients through the where().
+        diff = a_cum[:, :, None, :] - a_cum[:, None, :, :]   # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        diff = jnp.where(mask[None, :, :, None], diff, -60.0)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)          # (B,Q,Q)
+        w = scores[..., None] * decay * dtq[:, None, :, :]   # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq.astype(jnp.float32))
+        # ---- contribution of carried state ----
+        state_decay = jnp.exp(a_cum)                         # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn->bihp", cq, state) \
+            * state_decay[..., None]
+        # ---- update state ----
+        rem = jnp.exp(a_cum[:, -1:, :] - a_cum)              # (B,Q,H)
+        contrib = jnp.einsum("bjh,bjn,bjhp->bhpn",
+                             dtq * rem, bq, xq.astype(jnp.float32))
+        chunk_decay = jnp.exp(a_cum[:, -1])                  # (B,H)
+        new_state = state * chunk_decay[..., None, None] + contrib
+        return new_state, (y_intra + y_inter)
+
+    state, ys = jax.lax.scan(chunk_body, init_state, (xc, dtc, ac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, H, Pd)
+    if pad:
+        y = y[:, :S]
+    return y, state
+
+
+def ssm_mixer(cfg, lp, x, conv_cache=None, state=None,
+              return_cache: bool = False):
+    """Full mamba2 mixer over a sequence. x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    d_inner, _, _ = proj_dims(cfg)
+
+    zxbcdt = x @ lp["in_proj"]
+    z, xin, b, c, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_out, new_conv_cache = _causal_conv(cfg, lp, conv_in, conv_cache)
+    xin, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(lp["A_log"])                                     # (H,)
+    a = dt * A                                                    # log decay
+    xh = xin.reshape(B, S, h, pdim)
+    y, new_state = _ssd_chunk_scan(cfg, xh, dt, a,
+                                   b.astype(jnp.float32),
+                                   c.astype(jnp.float32), state)
+    y = y + lp["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   lp["ssm_norm"])
+    out = y @ lp["out_proj"]
+    if return_cache:
+        return out, (new_conv_cache, new_state)
+    return out
+
+
+def ssm_decode_step(cfg, lp, x, conv_cache, state):
+    """Single-token recurrent update. x: (B, 1, d). state: (B,H,P,N) f32."""
+    B = x.shape[0]
+    h, n, pdim = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    d_inner, _, _ = proj_dims(cfg)
+
+    zxbcdt = x @ lp["in_proj"]
+    z, xin, b, c, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)       # (B,1,conv_dim)
+    conv_out, new_conv_cache = _causal_conv(cfg, lp, conv_in, conv_cache)
+    xin, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])  # (B,H)
+    A = -jnp.exp(lp["A_log"])
+    da = jnp.exp(dt * A)                                  # (B,H)
+    xh = xin[:, 0].reshape(B, h, pdim).astype(jnp.float32)
+    bf = b[:, 0].astype(jnp.float32)                      # (B,N)
+    cf = c[:, 0].astype(jnp.float32)
+    new_state = state * da[..., None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bf)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cf) + lp["D"][:, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   lp["ssm_norm"])
+    return y @ lp["out_proj"], (new_conv_cache, new_state)

@@ -1,0 +1,38 @@
+"""Minimal dependency-free checkpointing: pytree -> npz + structure pickle.
+
+Not orbax — this container is offline. Arrays are materialized to host numpy
+and written atomically (tmp file + rename) so a crash never leaves a
+half-written checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+
+import jax
+import numpy as np
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    leaves = [np.asarray(x) for x in leaves]
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump({"treedef": treedef,
+                         "leaves": leaves}, f, protocol=4)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load(path: str):
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    import jax.numpy as jnp
+    leaves = [jnp.asarray(x) for x in blob["leaves"]]
+    return jax.tree.unflatten(blob["treedef"], leaves)

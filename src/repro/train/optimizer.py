@@ -1,0 +1,101 @@
+"""AdamW optimizer + LR schedules (no optax dependency).
+
+Supports configurable optimizer-state dtype (bf16 states for the
+trillion-param Kimi-K2 dry-run, see DESIGN.md) and the WSD
+(warmup-stable-decay) schedule used by MiniCPM [arXiv:2404.06395].
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    schedule: str = "cosine"        # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    decay_frac: float = 0.1         # WSD: final fraction spent decaying
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+
+def wsd_schedule(cfg: AdamWConfig, step):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat, exp decay tail."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    decay_start = cfg.total_steps * (1 - cfg.decay_frac)
+    in_decay = step > decay_start
+    t = (step - decay_start) / jnp.maximum(cfg.total_steps - decay_start, 1)
+    decay = jnp.where(in_decay, 0.5 ** (t * 10.0), 1.0)  # ~halve each 10%
+    return cfg.lr * warm * decay
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable:
+    return {"cosine": cosine_schedule, "wsd": wsd_schedule,
+            "const": lambda c, s: c.lr}[cfg.schedule]
+
+
+def init_opt_state(cfg: AdamWConfig, params):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_adamw(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_fn(cfg)(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    sdt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_n = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_n = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = mu_n / bc1
+        vhat = nu_n / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p32
+        return ((p32 - lr * delta).astype(p.dtype),
+                mu_n.astype(sdt), nu_n.astype(sdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,59 @@
+"""Training loop: jit'd train_step + host loop with checkpointing."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.train import optimizer as O
+
+
+def make_train_step(cfg, opt_cfg: O.AdamWConfig,
+                    donate: bool = True) -> Callable:
+    """Returns jit-able train_step(params, opt_state, batch)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = O.apply_adamw(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg, opt_cfg: O.AdamWConfig, data_iter, num_steps: int,
+          params=None, key=None, log_every: int = 10,
+          checkpoint_path: Optional[str] = None,
+          checkpoint_every: int = 0, log_fn=print):
+    """Host-side training loop. Returns (params, opt_state, history)."""
+    from repro.train import checkpoint as C
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = M.init_params(cfg, key)
+    opt_state = O.init_opt_state(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(1, num_steps + 1):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps:
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            metrics["wall_s"] = time.perf_counter() - t0
+            history.append(metrics)
+            log_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
+                   f"xent {metrics['xent']:.4f} lr {metrics['lr']:.2e} "
+                   f"gnorm {metrics['grad_norm']:.2f}")
+        if checkpoint_path and checkpoint_every and \
+                step % checkpoint_every == 0:
+            C.save(checkpoint_path, {"params": params, "opt": opt_state,
+                                     "step": step})
+    return params, opt_state, history

@@ -1,0 +1,126 @@
+"""Property-based tests for the block pools (hypothesis).
+
+System invariant under any interleaving of allocate / release /
+pending-free / prefix-cache operations: every block is in exactly one of
+{free list, cached, pending-free, owned}, and counts always sum to the pool
+size. This is the §6.3 conservation property the migration infrastructure
+relies on.
+"""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.block_pool import (DevicePool, HostPool, OutOfBlocks,
+                                   block_hashes)
+
+
+def invariant(pool: DevicePool):
+    owned = sum(1 for m in pool.meta.values() if m.owner is not None)
+    total = (len(pool.free_list) + len(pool.cached_blocks)
+             + len(pool.pending_free) + owned)
+    assert total == pool.num_blocks, (
+        len(pool.free_list), len(pool.cached_blocks),
+        len(pool.pending_free), owned)
+    # no block appears in two places
+    sets = [set(pool.free_list), pool.cached_blocks, pool.pending_free]
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert not (sets[i] & sets[j])
+
+
+op = st.sampled_from(["alloc", "release", "release_cache", "offload",
+                      "complete", "reclaim"])
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.tuples(op, st.integers(1, 8)), min_size=1, max_size=60))
+def test_pool_conservation(ops):
+    pool = DevicePool(32)
+    held = {}
+    pending = []
+    rid = 0
+    for kind, n in ops:
+        rid += 1
+        if kind == "alloc":
+            try:
+                blocks = pool.allocate(min(n, pool.free), f"r{rid}",
+                                       agent_type="t")
+                if blocks:
+                    held[f"r{rid}"] = blocks
+            except OutOfBlocks:
+                pass
+        elif kind in ("release", "release_cache") and held:
+            k, blocks = held.popitem()
+            if kind == "release_cache":
+                hashes = block_hashes(list(range(len(blocks) * 4)), 4)
+                pool.set_hashes(blocks, hashes[:len(blocks)])
+            pool.release(blocks, agent_type="t",
+                         cache=(kind == "release_cache"))
+        elif kind == "offload" and held:
+            k, blocks = held.popitem()
+            pool.mark_pending_free(blocks, agent_type="t")
+            pending.append(blocks)
+        elif kind == "complete" and pending:
+            pool.complete_pending_free(pending.pop())
+        elif kind == "reclaim" and pool.cached_blocks:
+            # prefix-cached blocks are reclaimable through allocation
+            take = min(n, pool.free)
+            if take:
+                held[f"r{rid}"] = pool.allocate(take, f"r{rid}",
+                                                agent_type="t")
+        invariant(pool)
+    # drain
+    for blocks in held.values():
+        pool.release(blocks, agent_type="t")
+    for blocks in pending:
+        pool.complete_pending_free(blocks)
+    invariant(pool)
+    assert pool.free == pool.num_blocks
+    assert pool.type_held.get("t", 0) == 0
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=20))
+def test_host_pool_freelist_recycling(sizes):
+    pool = HostPool(64)
+    live = []
+    for n in sizes:
+        if n <= pool.free:
+            live.append(pool.allocate(n, "x"))
+        elif live:
+            pool.release(live.pop())
+    total_out = sum(len(b) for b in live)
+    assert pool.free == 64 - total_out
+    for b in live:
+        pool.release(b)
+    assert pool.free == 64
+    assert not pool.prefix_index
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=0, max_size=70),
+       st.integers(1, 16))
+def test_block_hashes_prefix_property(tokens, bt):
+    """Chained hashes: equal prefixes produce equal hash runs; diverging
+    tokens change every subsequent hash."""
+    h1 = block_hashes(tokens, bt)
+    assert len(h1) == len(tokens) // bt
+    if len(tokens) >= 2 * bt:
+        mod = list(tokens)
+        mod[bt] = mod[bt] + 1   # mutate second block
+        h2 = block_hashes(mod, bt)
+        assert h1[0] == h2[0]
+        assert all(a != b for a, b in zip(h1[1:], h2[1:]))
+
+
+def test_prefix_cache_lookup_claims():
+    pool = DevicePool(8)
+    toks = list(range(16))
+    hashes = block_hashes(toks, 4)
+    blocks = pool.allocate(4, "r1", agent_type="t")
+    pool.set_hashes(blocks, hashes)
+    pool.release(blocks, agent_type="t", cache=True)
+    assert pool.lookup_prefix(hashes) == blocks
+    pool.claim_cached(blocks[:2], "r2")
+    assert pool.lookup_prefix(hashes) == []   # chain broken at block 0
+    # remaining cached blocks are still reclaimable as free space
+    assert pool.free == 6

@@ -1,0 +1,82 @@
+"""Frontend API / DAG metric tests."""
+import numpy as np
+import pytest
+
+from repro.core.graph import (AppGraph, FuncNode, PREBUILT_NODES,
+                              SearchNode)
+from repro.data.workloads import build_workload, code_writer, deep_research
+
+
+def diamond():
+    g = AppGraph("diamond")
+    a = g.add_agent("a", "root", 100, decode_len=10)
+    b = g.add_agent("b", "left", 100, decode_len=10, deps=[a])
+    c = g.add_agent("c", "right", 100, decode_len=1000, deps=[a])
+    d = g.add_agent("d", "join", 100, decode_len=10, deps=[b, c])
+    return g, (a, b, c, d)
+
+
+def test_topo_and_depth():
+    g, (a, b, c, d) = diamond()
+    topo = g.topo_order()
+    assert topo.index(a.node_id) < topo.index(b.node_id)
+    assert topo.index(b.node_id) < topo.index(d.node_id)
+    assert g.depth() == {a.node_id: 0, b.node_id: 1, c.node_id: 1,
+                         d.node_id: 2}
+    assert g.remaining_depth()[a.node_id] == 2
+    assert g.remaining_depth()[d.node_id] == 0
+
+
+def test_critical_path_follows_work():
+    g, (a, b, c, d) = diamond()
+    cp = g.critical_path()
+    assert cp == [a.node_id, c.node_id, d.node_id]  # c has 100x the decode
+    on = g.on_critical_path()
+    assert on[c.node_id] and not on[b.node_id]
+
+
+def test_struct_score_ordering():
+    g, (a, b, c, d) = diamond()
+    # the root unlocks everything -> highest structural importance
+    assert g.struct_score(a.node_id) > g.struct_score(d.node_id)
+
+
+def test_func_node_stages_and_interleave():
+    g = AppGraph("t")
+    n = g.add_agent("x", "x", 10, decode_segments=[5, 5],
+                    func_calls=[SearchNode()])
+    assert len(n.decode_segments) == 2
+    assert len(n.func_calls) == 1
+    assert sum(s.predict_time for s in n.func_calls[0].stages) == \
+        pytest.approx(n.func_calls[0].predict_time)
+    # trailing FC pads an empty segment
+    n2 = g.add_agent("y", "y", 10, decode_segments=[5],
+                     func_calls=[SearchNode()])
+    assert n2.decode_segments == [5, 0]
+
+
+def test_prebuilt_nodes_table3():
+    for name, ctor in PREBUILT_NODES.items():
+        fn = ctor()
+        assert isinstance(fn, FuncNode)
+        assert fn.predict_time > 0
+
+
+def test_benchmark_workloads_shape():
+    rng = np.random.default_rng(0)
+    cw = code_writer(rng)
+    assert len(cw.nodes) == 11                       # paper: 11 agent types
+    assert len({n.agent_type for n in cw.nodes.values()}) == 11
+    dr = deep_research(rng)
+    depth_cw = max(cw.depth().values())
+    depth_dr = max(dr.depth().values())
+    assert len(dr.nodes) < len(cw.nodes)             # fewer agents
+    assert depth_dr >= depth_cw                      # deeper chains
+    cw.topo_order()                                  # acyclic
+
+
+def test_poisson_arrivals_monotone():
+    wl = build_workload(qps=0.5, n_apps=10, seed=3)
+    times = [t for t, _ in wl]
+    assert times == sorted(times)
+    assert len(wl) == 10

@@ -1,0 +1,221 @@
+"""Per-architecture smoke tests (reduced configs, real forward/train step)
+plus prefill/decode consistency."""
+import dataclasses
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=64):
+    ks = jax.random.split(KEY, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+             "targets": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)}
+    if cfg.arch_type == "vlm":
+        batch["patches"] = 0.02 * jax.random.normal(
+            ks[2], (b, cfg.num_patch_tokens, cfg.d_model))
+    if cfg.arch_type == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(
+            ks[2], (b, cfg.encoder_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced same-family variant: one forward + one train step on CPU,
+    asserting output shapes and no NaNs (assignment requirement)."""
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    params = M.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    loss, mets = jax.jit(lambda p, b: M.loss_fn(cfg, p, b))(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+
+    opt_cfg = O.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    opt_state = O.init_opt_state(opt_cfg, params)
+    params2, opt_state, mets = step(params, opt_state, batch)
+    assert jnp.isfinite(mets["loss"])
+    assert jnp.isfinite(mets["grad_norm"])
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, KEY)
+    b, s = 2, 32
+    batch = make_batch(cfg, b, s)
+    logits, cache = jax.jit(
+        lambda p, bt: M.prefill(cfg, p, bt, 48))(params, batch)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    lg, cache = jax.jit(
+        lambda p, c, t, l: M.decode_step(cfg, p, c, t, l))(
+            params, cache, tok, jnp.int32(s))
+    assert lg.shape == (b, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+
+
+def test_decode_matches_teacher_forcing_dense():
+    """Greedy decode logits must match the teacher-forced forward pass."""
+    cfg = get_smoke_config("glm4_9b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = M.init_params(cfg, KEY)
+    b, s = 1, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+
+    # full forward at s+0 .. compare last-position logits with prefill
+    batch = {"tokens": toks, "targets": toks}
+    logits_pref, cache = M.prefill(cfg, params, batch, cache_size=s + 4)
+
+    # teacher-forced: loss_fn internals — recompute hidden for all positions
+    from repro.models import decoder as D
+    x = params["embed"][toks]
+    pos = jnp.arange(s)[None, :]
+    h, _ = D.forward(cfg, params["layers"], x, pos)
+    import repro.models.layers as L
+    full_logits = L.rms_norm(h, params["final_norm"]) @ params["unembed"]
+    np.testing.assert_allclose(np.asarray(logits_pref[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+    # decode one token and compare against extending the sequence
+    nxt = jnp.argmax(logits_pref[:, -1], -1).astype(jnp.int32)
+    lg_dec, _ = M.decode_step(cfg, params, cache, nxt, jnp.int32(s))
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    x2 = params["embed"][toks2]
+    h2, _ = D.forward(cfg, params["layers"], x2,
+                      jnp.arange(s + 1)[None, :])
+    full2 = L.rms_norm(h2, params["final_norm"]) @ params["unembed"]
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(full2[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_decode_matches_teacher_forcing_ssm():
+    cfg = dataclasses.replace(get_smoke_config("mamba2_130m"),
+                              dtype="float32", ssm_chunk=8)
+    params = M.init_params(cfg, KEY)
+    b, s = 1, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    logits_pref, cache = M.prefill(cfg, params, batch, cache_size=s)
+    nxt = jnp.argmax(logits_pref[:, -1], -1).astype(jnp.int32)
+    lg_dec, _ = M.decode_step(cfg, params, cache, nxt, jnp.int32(s))
+
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    from repro.models import decoder as D
+    import repro.models.layers as L
+    h2, _ = D.forward(cfg, params["layers"], params["embed"][toks2],
+                      jnp.arange(s + 1)[None, :])
+    full2 = L.rms_norm(h2, params["final_norm"]) @ params["unembed"]
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(full2[:, -1]),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_sliding_window_masks_old_tokens():
+    cfg = dataclasses.replace(get_smoke_config("llava_next_mistral_7b"),
+                              dtype="float32", sliding_window=8)
+    params = M.init_params(cfg, KEY)
+    s = 32
+    toks = jax.random.randint(KEY, (1, s), 0, cfg.vocab_size)
+    patches = jnp.zeros((1, cfg.num_patch_tokens, cfg.d_model))
+    batch = {"tokens": toks, "targets": toks, "patches": patches}
+    # perturbing a token far outside the window must not change the last
+    # position's logits (strict SWA property holds for a 2-layer stack
+    # within receptive field 2*W)
+    logits1, _ = M.prefill(cfg, params, batch, cache_size=s + 40)
+    toks_mod = toks.at[0, 2].set((toks[0, 2] + 1) % cfg.vocab_size)
+    batch2 = dict(batch, tokens=toks_mod, targets=toks_mod)
+    logits2, _ = M.prefill(cfg, params, batch2, cache_size=s + 40)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2),
+                               atol=1e-5)
+
+
+def test_unroll_matches_scan():
+    from repro.models import decoder as D
+    cfg = dataclasses.replace(get_smoke_config("stablelm_3b"),
+                              dtype="float32")
+    params = M.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 32)
+    loss1, _ = M.loss_fn(cfg, params, batch)
+    D.set_unroll(True)
+    try:
+        loss2, _ = M.loss_fn(cfg, params, batch)
+    finally:
+        D.set_unroll(False)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-5)
+
+
+def test_int8_kv_cache_decode_close():
+    """§Perf P2: int8 KV decode stays within 5% of the fp path."""
+    cfg = dataclasses.replace(get_smoke_config("glm4_9b"), dtype="float32")
+    cfgq = dataclasses.replace(cfg, kv_quant_int8=True)
+    params = M.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    lg1, c1 = M.prefill(cfg, params, batch, 32)
+    lg2, c2 = M.prefill(cfgq, params, batch, 32)
+    assert c2["k"].dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-4)
+    nxt = jnp.argmax(lg1[:, -1], -1).astype(jnp.int32)
+    d1, _ = M.decode_step(cfg, params, c1, nxt, jnp.int32(24))
+    d2, _ = M.decode_step(cfgq, params, c2, nxt, jnp.int32(24))
+    err = float(jnp.abs(d1 - d2).max()) / float(jnp.abs(d1).max())
+    assert err < 0.05, err
+
+
+def test_causal_skip_prefill_matches():
+    """§Perf P6: block-skipping prefill is numerically identical."""
+    import functools
+    import repro.models.layers as L
+    cfg = dataclasses.replace(get_smoke_config("glm4_9b"), dtype="float32")
+    cfgs = dataclasses.replace(cfg, prefill_causal_skip=True)
+    params = M.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    orig = L.chunked_attention
+    L.chunked_attention = functools.partial(orig, q_chunk=32)
+    try:
+        l1, _ = M.prefill(cfg, params, batch, 128)
+        l2, _ = M.prefill(cfgs, params, batch, 128)
+    finally:
+        L.chunked_attention = orig
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_remat_policies_same_loss():
+    from repro.models import decoder as D
+    cfg = dataclasses.replace(get_smoke_config("mixtral_8x22b"),
+                              dtype="float32")
+    params = M.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 32)
+    losses = {}
+    for pol in ["off", "full", "dots"]:
+        D.set_remat(pol != "off")
+        c = dataclasses.replace(cfg, remat_policy=pol if pol != "off"
+                                else "full")
+        try:
+            losses[pol] = float(jax.value_and_grad(
+                lambda p: M.loss_fn(c, p, batch)[0])(params)[0])
+        finally:
+            D.set_remat(False)
+    assert losses["off"] == pytest.approx(losses["full"], rel=1e-6)
+    assert losses["off"] == pytest.approx(losses["dots"], rel=1e-6)

@@ -1,0 +1,249 @@
+"""Unit + property tests for the Temporal and Spatial schedulers."""
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.block_pool import DevicePool, HostPool
+from repro.core.costmodel import A100_PCIE
+from repro.core.forecast import Forecaster
+from repro.core.graph import AppGraph, SearchNode
+from repro.core.pressure import DevicePressure, PressureSnapshot
+from repro.core.request import Request, ReqState
+from repro.core.spatial import (AgentTypeStats, SpatialConfig,
+                                SpatialScheduler)
+from repro.core.temporal import TemporalConfig, TemporalScheduler
+
+
+def mk_request(prompt=640, agent_type="worker", critical=False, decode=100,
+               fc=True):
+    g = AppGraph("t")
+    node = g.add_agent("a", agent_type, prompt, decode_segments=[decode, 10],
+                       func_calls=[SearchNode()] if fc else [None])
+    r = Request(rid=f"r/{agent_type}/{id(node)}", app_id="app0", node=node,
+                graph=g, arrival=0.0, prompt_tokens=list(range(prompt)),
+                critical=critical)
+    return r
+
+
+def mk_snapshot(total=512, free=100, wait_crit=0, wait_tot=0, waiting=0,
+                shared=None, host_free=1000, running=16):
+    shared = free if shared is None else shared
+    return PressureSnapshot(
+        time=0.0,
+        devices=[DevicePressure(0, total, free, 0, 0, shared)],
+        waiting_demand_critical=wait_crit, waiting_demand_total=wait_tot,
+        waiting_count=waiting, offloadable_stalled_blocks=0,
+        pending_upload_debt=0, host_free_blocks=host_free,
+        running_count=running)
+
+
+def mk_temporal(**cfg_kw):
+    pools = [DevicePool(512)]
+    host = HostPool(1024)
+    return TemporalScheduler(pools, host, A100_PCIE, Forecaster(),
+                             TemporalConfig(**cfg_kw)), pools, host
+
+
+class TestOpportunisticGate:
+    def _stalled(self, blocks=40):
+        r = mk_request()
+        pools = [DevicePool(512)]
+        r.gpu_blocks_by_device[0] = pools[0].allocate(blocks, r.rid)
+        r.current_fc = SearchNode(predict_time=3.0)
+        return r
+
+    def test_rejects_short_stall(self):
+        """Alg. 1 line 4: stall shorter than round-trip transfer."""
+        sched, pools, host = mk_temporal()
+        req = self._stalled(blocks=400)
+        req.current_fc = SearchNode(predict_time=0.05)  # 50 ms stall
+        waiting = [mk_request(prompt=100)]
+        snap = mk_snapshot(wait_tot=100, waiting=1)
+        dec = sched.should_offload(req, waiting, snap, {})
+        assert not dec.offload and "short" in dec.reason
+
+    def test_rejects_no_waiting_fit(self):
+        """Alg. 1 lines 8-10: no waiting request fits the freed blocks."""
+        sched, pools, host = mk_temporal()
+        req = self._stalled(blocks=10)
+        waiting = [mk_request(prompt=4000)]   # needs 250 blocks > 10 freed
+        snap = mk_snapshot(wait_tot=250, waiting=1)
+        dec = sched.should_offload(req, waiting, snap, {})
+        assert not dec.offload and dec.reason == "no waiting fit"
+
+    def test_rejects_cpu_capacity(self):
+        sched, pools, host = mk_temporal()
+        host.free_list = host.free_list[:5]
+        req = self._stalled(blocks=40)
+        snap = mk_snapshot(wait_tot=100, waiting=1)
+        dec = sched.should_offload(req, [mk_request(prompt=100)], snap, {})
+        assert not dec.offload and dec.reason == "cpu capacity"
+
+    def test_rejects_low_pressure_watermark(self):
+        """Fig. 16: no waiting demand -> freed blocks admit nothing."""
+        sched, pools, host = mk_temporal(pressure_watermark=0.05)
+        req = self._stalled(blocks=40)
+        snap = mk_snapshot(wait_tot=2, waiting=1)   # 2/512 << 5%
+        dec = sched.should_offload(req, [mk_request(prompt=16)], snap, {})
+        assert not dec.offload and dec.reason == "gpu pressure low"
+
+    def test_accepts_good_window(self):
+        sched, pools, host = mk_temporal()
+        req = self._stalled(blocks=40)
+        waiting = [mk_request(prompt=300, decode=30, fc=False)]
+        snap = mk_snapshot(wait_tot=60, waiting=1)
+        dec = sched.should_offload(req, waiting, snap, {})
+        assert dec.offload, dec.reason
+
+    def test_critical_penalty_blocks_marginal_offload(self):
+        """§4.2: the dominant penalty is the Spatial Scheduler's importance."""
+        sched, pools, host = mk_temporal()
+        req = self._stalled(blocks=40)
+        req.critical = True
+        waiting = [mk_request(prompt=300, decode=30, fc=False)]
+        snap = mk_snapshot(free=400, wait_tot=60, waiting=1)  # low usage
+        dec = sched.should_offload(req, waiting, snap,
+                                   {"worker": 1.0})
+        assert not dec.offload
+
+    def test_emergency_override(self):
+        """Severe pressure + large stall margin offloads even critical."""
+        sched, pools, host = mk_temporal()
+        req = self._stalled(blocks=40)
+        req.critical = True
+        req.current_fc = SearchNode(predict_time=20.0)
+        waiting = [mk_request(prompt=300, decode=30, fc=False)]
+        snap = mk_snapshot(free=8, wait_tot=400, waiting=4)  # 98.4% usage
+        dec = sched.should_offload(req, waiting, snap, {"worker": 1.0})
+        assert dec.offload and dec.reason == "emergency"
+
+
+class TestPredictiveUpload:
+    def test_upload_budget_eq3(self):
+        sched, pools, host = mk_temporal()
+        # B_upload = max(0, B_free - max(0, D_crit - B_shared))
+        snap = mk_snapshot(free=100, shared=30, wait_crit=50)
+        assert sched.upload_budget(snap) == 100 - (50 - 30)
+        snap = mk_snapshot(free=100, shared=80, wait_crit=50)
+        assert sched.upload_budget(snap) == 100
+        snap = mk_snapshot(free=10, shared=0, wait_crit=500)
+        assert sched.upload_budget(snap) == 0
+
+    def test_half_deficit_reservation_eq4(self):
+        sched, pools, host = mk_temporal()
+        req = mk_request()
+        req.host_blocks = list(range(40))
+        assert sched.reserve_step(req, budget=1000) == 20      # ceil(40/2)
+        req.reserved_upload_blocks = list(range(30))
+        assert sched.reserve_step(req, budget=1000) == 5       # ceil(10/2)
+        assert sched.reserve_step(req, budget=2) == 2          # budget caps
+        req.reserved_upload_blocks = list(range(40))
+        assert sched.reserve_step(req, budget=1000) == 0       # done
+
+    def test_predictive_start_time(self):
+        sched, pools, host = mk_temporal(upload_safety=1.25)
+        req = mk_request()
+        req.host_blocks = list(range(100))
+        t_up = A100_PCIE.upload_time(100)
+        req.fc_predicted_end = 10.0
+        assert not sched.should_start_upload(req, 10.0 - t_up * 2.0)
+        assert sched.should_start_upload(req, 10.0 - t_up * 1.1)
+
+
+class TestForecaster:
+    def test_eq1_blend(self):
+        f = Forecaster(alpha=0.3, default_time=5.0)
+        assert f.predict("search") == 5.0                 # system default
+        assert f.predict("search", 2.0) == 2.0            # user estimate
+        f.observe("search", 4.0)
+        assert f.predict("search") == 4.0                 # pure history
+        # Eq. 1: alpha * user + (1-alpha) * history
+        assert f.predict("search", 2.0) == pytest.approx(
+            0.3 * 2.0 + 0.7 * 4.0)
+
+    def test_ewma(self):
+        f = Forecaster(ewma_beta=0.5)
+        f.observe("x", 4.0)
+        f.observe("x", 8.0)
+        assert f.history["x"] == pytest.approx(6.0)
+
+
+class TestSpatialScheduler:
+    def mk(self, blocks=100, **kw):
+        pools = [DevicePool(blocks)]
+        return SpatialScheduler(pools, SpatialConfig(**kw)), pools
+
+    def test_alg2_rho_watermark_feedback(self):
+        sched, pools = self.mk(blocks=100)
+        stats = {"a": AgentTypeStats(active=1, struct_max=1.0)}
+        # high usage -> rho grows by step, clamped at rho_max
+        pools[0].allocate(80, "x", agent_type="a")
+        for i in range(10):
+            sched.update_reservations(float(i * 10), stats, force=True)
+        assert sched.rho == pytest.approx(0.30)
+        # low usage -> shrinks to rho_min
+        pools[0].release(list(range(80)), agent_type="a")
+        for i in range(10):
+            sched.update_reservations(1000.0 + i, stats, force=True)
+        assert sched.rho == pytest.approx(0.05)
+
+    def test_alg2_critical_selection_ratio(self):
+        sched, pools = self.mk()
+        stats = {f"t{i}": AgentTypeStats(active=1, struct_max=i / 8)
+                 for i in range(8)}
+        sched.update_reservations(0.0, stats, force=True)
+        # ceil(8 * 0.75) = 6 critical types, the highest-scoring ones
+        assert len(sched.critical_types) == 6
+        assert "t7" in sched.critical_types
+        assert "t0" not in sched.critical_types
+
+    def test_floor_semantics_protect_critical(self):
+        sched, pools = self.mk(blocks=100)
+        sched.critical_types = {"vip"}
+        pools[0].reserved_quota = {"vip": 30}
+        # non-critical admission must leave the unmet floor intact
+        r1 = mk_request(agent_type="bulk")
+        assert sched.admit(r1, 75) is None           # 75 > 100-30 shared
+        assert sched.admit(r1, 60) == "shared"
+        # critical type draws from its floor
+        r2 = mk_request(agent_type="vip")
+        assert sched.admit(r2, 35) == "reserved"     # 10 shared + 30 floor
+
+    def test_admit_respects_physical_free(self):
+        sched, pools = self.mk(blocks=50)
+        r = mk_request(agent_type="a")
+        assert sched.admit(r, 60) is None
+
+    def test_release_returns_blocks(self):
+        sched, pools = self.mk(blocks=50)
+        r = mk_request(agent_type="a")
+        assert sched.admit(r, 20) is not None
+        assert pools[0].free == 30
+        sched.release(r)
+        assert pools[0].free == 50
+        assert pools[0].type_held["a"] == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 400), st.integers(0, 400))
+def test_upload_budget_never_negative_and_bounded(free, shared, crit):
+    sched, pools, host = mk_temporal()
+    shared = min(shared, free)
+    snap = mk_snapshot(free=free, shared=shared, wait_crit=crit)
+    b = sched.upload_budget(snap)
+    assert 0 <= b <= free
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 50), st.integers(0, 50), st.integers(0, 100))
+def test_reserve_step_never_overshoots(host_n, reserved_n, budget):
+    sched, pools, host = mk_temporal()
+    req = mk_request()
+    req.host_blocks = list(range(host_n))
+    req.reserved_upload_blocks = list(range(min(reserved_n, host_n)))
+    n = sched.reserve_step(req, budget)
+    deficit = len(req.host_blocks) - len(req.reserved_upload_blocks)
+    assert 0 <= n <= max(0, math.ceil(deficit / 2))
+    assert n <= max(budget, 0)

@@ -1,0 +1,67 @@
+"""Sharding-rule validity for every (arch x shape) without a compile."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, config_for_shape, get_config
+from repro.launch import sharding_rules as SR
+from repro.models import model as M
+from repro.models.sharding import use_rules, logical
+
+
+def axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def check_spec(spec, shape, mesh):
+    sizes = axis_sizes(mesh)
+    used = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            assert a in sizes, a
+            assert a not in used, f"axis {a} used twice in {spec}"
+            used.append(a)
+            n *= sizes[a]
+        assert dim % n == 0, (shape, spec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # a small mesh with the production axis names (device-count agnostic)
+    dev = jax.devices()[0]
+    import numpy as np
+    return jax.sharding.Mesh(np.array([[dev]]), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_valid(arch, mesh):
+    cfg = get_config(arch)
+    specs = M.param_specs(cfg)
+    tree = SR.param_spec_tree(cfg, mesh)
+    jax.tree.map(lambda leaf, sp: check_spec(sp, leaf.shape, mesh),
+                 specs, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_shardings_valid(arch, shape, mesh):
+    shp = INPUT_SHAPES[shape]
+    cfg = config_for_shape(get_config(arch), shp)
+    kind = "long_decode" if shape == "long_500k" else "decode"
+    shards = SR.cache_shardings(cfg, mesh, shp.global_batch, shp.seq_len,
+                                kind)
+    specs = M.cache_specs(cfg, shp.global_batch, shp.seq_len)
+    for k, ns in shards.items():
+        check_spec(ns.spec, specs[k].shape, mesh)
+
+
+def test_logical_conflict_resolution(mesh):
+    import jax.numpy as jnp
+    with use_rules(mesh, {"a": "data", "b": ("data", "model")}):
+        x = jnp.zeros((4, 4))
+        # second dim maps to overlapping axes -> must drop, not crash
+        y = logical(x, "a", "b")
+        assert y.shape == x.shape
