@@ -18,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import CsvWriter  # noqa: E402
 
 FIGURES = [
+    ("decode_bench", "Decode data plane: jitted step vs seed eager loop"),
     ("fig9_latency", "Fig 9 e2e latency vs QPS"),
     ("fig10_utilization", "Fig 10 KV utilization"),
     ("fig11_ablation", "Fig 11 / §7.3 component analysis"),

@@ -11,7 +11,7 @@ really leave the device and come back bit-exact).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,24 +36,46 @@ class SimBackend:
     def copy_in(self, req):
         pass
 
+    def invalidate(self, rid):
+        pass
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n — pad batch/table shapes so the jitted decode
+    step compiles once per bucket instead of re-tracing every batch."""
+    return 1 << (max(n, 1) - 1).bit_length()
+
 
 class JaxBackend:
     """Real compute: tiny model, real paged KV, real host offload.
 
-    Each engine request maps to a row in a fixed-capacity batch of block
-    tables. Decode runs the Pallas paged-attention kernel per layer.
+    Each engine request maps to a row in a bucketed batch of block tables.
+    One decode iteration is a single jitted step
+    (``models.model.paged_decode_step``): layer-scanned forward over
+    stacked params, Pallas batched KV token-write, Pallas paged attention.
+    There is no per-request Python anywhere in the write or attend path.
     """
 
     def __init__(self, cfg, engine_cfg, platform, key=None):
         self.cfg = cfg
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.params = M.init_params(cfg, self.key)
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.cache = PagedKVCache(cfg, engine_cfg.gpu_blocks,
                                   platform.block_tokens,
-                                  host_blocks=engine_cfg.host_blocks)
+                                  host_blocks=engine_cfg.host_blocks,
+                                  dtype=dtype)
         self.block_tokens = platform.block_tokens
         self.generated: Dict[str, List[int]] = {}
-        self._prefilled: set = set()
+        # tokens actually resident in the paged cache per request (the
+        # engine's context_len is only refreshed at quantum boundaries)
+        self.cache_len: Dict[str, int] = {}
+        # block ids the prefill was written into: a mismatch with the
+        # request's current blocks means the request was preempted and
+        # re-admitted with fresh (uninitialized) blocks -> re-prefill.
+        # copy_in refreshes the signature so offload->upload round trips
+        # (same KV, new block ids) do NOT trigger recompute.
+        self._prefill_sig: Dict[str, Tuple[int, ...]] = {}
 
     # -- engine hooks ----------------------------------------------------------
     def decode(self, reqs):
@@ -61,20 +83,57 @@ class JaxBackend:
         if not reqs:
             return
         for r in reqs:
-            if r.rid not in self._prefilled:
+            sig = self._prefill_sig.get(r.rid)
+            if sig is None or tuple(r.gpu_blocks[:len(sig)]) != sig:
                 self._prefill_one(r)
         self._decode_batch(reqs)
+
+    def invalidate(self, rid: str):
+        """Engine hook: the request's device blocks were released (evicted)
+        or the request finished. Drop the cache bookkeeping so a future
+        re-admission re-prefills even if the allocator hands back the very
+        same block ids (LIFO free list makes that the common case, and the
+        blocks may have been rewritten by other requests in between).
+        ``generated`` survives — it is the decoded output and the
+        recompute source."""
+        self._prefill_sig.pop(rid, None)
+        self.cache_len.pop(rid, None)
 
     def copy_out(self, req):
         self.cache.offload(req.gpu_blocks, req.host_blocks)
 
     def copy_in(self, req):
         self.cache.upload(req.host_blocks, req.reserved_upload_blocks)
+        sig = self._prefill_sig.get(req.rid)
+        if sig is not None:
+            n = min(len(sig), len(req.reserved_upload_blocks))
+            self._prefill_sig[req.rid] = tuple(req.reserved_upload_blocks[:n])
 
     # -- internals --------------------------------------------------------------
     def _prefill_one(self, req):
         toks = [t % self.cfg.vocab_size for t in req.prompt_tokens]
-        toks += self.generated.get(req.rid, [])
+        gen = self.generated.get(req.rid, [])
+        cap = len(req.gpu_blocks) * self.block_tokens
+        if gen and toks:
+            # Recompute path (preempted request): reproduce the cache the
+            # decode path would have built. Decode writes its *input*
+            # token's KV at the current cache length, so position len(p)
+            # holds a duplicate of the last prompt token, positions after
+            # it hold generated[:-1], and the newest generated token is
+            # the pending decode input (not yet in cache).
+            #
+            # The backend's generated list can run up to a quantum ahead
+            # of the engine's accounting (which sized the allocation), so
+            # roll back tokens that don't fit — greedy decode regenerates
+            # them identically — instead of truncating the KV layout and
+            # mis-positioning every later write.
+            keep = max(cap - len(toks), 0)
+            if len(gen) > keep:
+                gen = gen[:keep]
+                self.generated[req.rid] = list(gen)
+            if gen:
+                toks = toks + [toks[-1]] + gen[:-1]
+        toks = toks[:cap]    # last resort (prompt alone exceeding blocks)
         batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         if self.cfg.arch_type == "vlm":
             batch["patches"] = jnp.zeros(
@@ -87,55 +146,44 @@ class JaxBackend:
             # cache k: (L, 1, S, Hkv, D) -> write into the paged pool
             self.cache.write_prefill(req.gpu_blocks, cache["k"][:, 0],
                                      cache["v"][:, 0])
-        self._prefilled.add(req.rid)
+        n_blocks = -(-len(toks) // self.block_tokens)
+        self._prefill_sig[req.rid] = tuple(req.gpu_blocks[:n_blocks])
+        self.cache_len[req.rid] = len(toks)
 
     def _decode_batch(self, reqs):
-        if self.cfg.arch_type == "ssm":
-            return  # SSM decode state handled by dense path in examples
-        bt_len = max(len(r.gpu_blocks) for r in reqs)
-        tables = np.zeros((len(reqs), bt_len), np.int32)
-        lens = np.zeros((len(reqs),), np.int32)
-        toks = np.zeros((len(reqs),), np.int32)
+        if self.cfg.arch_type in ("ssm", "audio"):
+            return  # non-paged decode state handled by dense path in examples
+        bs = self.block_tokens
+        b = len(reqs)
+        bb = _bucket(b)
+        pb = _bucket(max(len(r.gpu_blocks) for r in reqs))
+        tables = np.zeros((bb, pb), np.int32)
+        positions = np.zeros((bb,), np.int32)
+        attn_lens = np.zeros((bb,), np.int32)
+        toks = np.zeros((bb,), np.int32)
+        # padded rows and full-capacity rows write into the scratch block
+        slots = np.full((bb,), self.cache.scratch_slot, np.int32)
+        wrote = np.zeros((b,), bool)
         for i, r in enumerate(reqs):
-            tables[i, :len(r.gpu_blocks)] = r.gpu_blocks
-            lens[i] = min(r.context_len,
-                          len(r.gpu_blocks) * self.block_tokens)
+            blocks = r.gpu_blocks
+            tables[i, :len(blocks)] = blocks
+            cl = min(self.cache_len.get(r.rid, 0), len(blocks) * bs)
             prev = self.generated.get(r.rid) or [t % self.cfg.vocab_size
                                                  for t in r.prompt_tokens[-1:]]
             toks[i] = prev[-1]
-        logits = self._forward_decode(jnp.asarray(toks), jnp.asarray(tables),
-                                      jnp.asarray(lens))
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            positions[i] = cl
+            slots[i] = self.cache.slot_of(blocks, cl)
+            wrote[i] = slots[i] != self.cache.scratch_slot
+            # when the allocated blocks are exactly full the new token's KV
+            # is dropped (scratch write) and it attends over the existing
+            # context only — never over another request's blocks
+            attn_lens[i] = cl + (1 if wrote[i] else 0)
+        logits, self.cache.k, self.cache.v = M.paged_decode_step(
+            self.cfg, self.params, self.cache.k, self.cache.v,
+            jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(positions),
+            jnp.asarray(attn_lens), jnp.asarray(slots))
+        nxt = np.asarray(jnp.argmax(logits[:b], -1), np.int32)
         for i, r in enumerate(reqs):
             self.generated.setdefault(r.rid, []).append(int(nxt[i]))
-
-    def _forward_decode(self, tokens, tables, lens):
-        """Greedy single-token decode using the paged pool per layer."""
-        from repro.models import layers as L
-        cfg, params = self.cfg, self.params
-        x = params["embed"][tokens][:, None, :]           # (B, 1, d)
-        stacked = params["layers"]
-        nl = cfg.num_layers
-        for l in range(nl):
-            lp = jax.tree.map(lambda a: a[l], stacked)
-            if "attn_norm" in lp:
-                xn = L.rms_norm(x, lp["attn_norm"])
-                q, k, v = L.qkv_project(cfg, lp, xn)
-                pos = lens[:, None]                       # (B, 1)
-                q = L.apply_rope(q, pos, cfg.rope_theta)
-                k = L.apply_rope(k, pos, cfg.rope_theta)
-                # write the new token's KV then attend over the pages
-                for i in range(tokens.shape[0]):
-                    bid = tables[i, lens[i] // self.block_tokens]
-                    off = lens[i] % self.block_tokens
-                    self.cache.k = self.cache.k.at[l, bid, off].set(
-                        k[i, 0].astype(self.cache.k.dtype))
-                    self.cache.v = self.cache.v.at[l, bid, off].set(
-                        v[i, 0].astype(self.cache.v.dtype))
-                out = self.cache.decode_attention(
-                    l, q[:, 0], tables, lens + 1)
-                x = x + L.attn_out(lp, out[:, None])
-                if "w1" in lp:
-                    x = x + L.mlp(lp, L.rms_norm(x, lp["mlp_norm"]))
-        h = L.rms_norm(x, params["final_norm"])
-        return (h @ params["unembed"])[:, 0]
+            if wrote[i]:
+                self.cache_len[r.rid] = int(positions[i]) + 1

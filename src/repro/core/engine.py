@@ -365,12 +365,10 @@ class Engine:
         self._push(self.stream_free_at, "upload_done", req.rid)
 
     def _finish_upload(self, req: Request) -> None:
-        # reserved blocks become the live KV blocks
-        for p in self.pools:
-            dest = req.reserved_upload_blocks if p.device == 0 else \
-                req.gpu_blocks_by_device.get(p.device, [])
-            if p.device == 0:
-                req.gpu_blocks_by_device[0] = list(req.reserved_upload_blocks)
+        # reserved device-0 blocks become the live KV blocks; blocks on
+        # non-zero devices (TP mirrors) were already placed into
+        # gpu_blocks_by_device at reservation time and stay put
+        req.gpu_blocks_by_device[0] = list(req.reserved_upload_blocks)
         req.reserved_upload_blocks = []
         self.host.release(req.host_blocks)
         req.host_blocks = []
@@ -395,6 +393,8 @@ class Engine:
     def _finish_request(self, req: Request) -> None:
         req.state = ReqState.FINISHED
         req.finish_time = self.clock
+        if self.backend is not None:
+            self.backend.invalidate(req.rid)   # prune per-request state
         self.req_latencies.append(self.clock - req.arrival)
         cache_it = self.cfg.prefix_cache
         if cache_it:
@@ -444,6 +444,10 @@ class Engine:
         if victim.critical and (requester is None or not requester.critical):
             self.metrics["critical_inversions"] += 1
         self.spatial.release(victim, cache=False)
+        if self.backend is not None:
+            # the data plane must forget the evicted cache: the allocator
+            # can hand the same block ids to (or back from) other requests
+            self.backend.invalidate(victim.rid)
         if victim in self.running:
             self.running.remove(victim)
         self.stalled.pop(victim.rid, None)
@@ -665,40 +669,59 @@ class Engine:
             duration += self.platform.recompute_time(prefill_tokens)
         if decode_batch:
             q = self.cfg.sched_quantum
+            pre_grown = self.backend is not None
+            if pre_grown:
+                # with a real data plane, blocks must exist BEFORE the KV
+                # writes land: grow (or evict) every request for its share
+                # of the quantum up front so no in-quantum token is ever
+                # written past the allocated blocks
+                for req in list(decode_batch):
+                    self._grow_blocks(req, q)
+                decode_batch = [r for r in decode_batch
+                                if r.state == ReqState.RUNNING]
             duration += q * self.platform.decode_iter_time(len(decode_batch))
             if self.backend is not None:
                 for _ in range(q):
                     self.backend.decode(decode_batch)
-            self._post_decode(decode_batch, q)
+            self._post_decode(decode_batch, q, grown=pre_grown)
         return max(duration, 1e-4)
 
-    def _post_decode(self, batch: List[Request], q_step: int = 1) -> None:
+    def _grow_blocks(self, req: Request, q_step: int) -> bool:
+        """Allocate the blocks ``req`` needs to decode its share of a
+        quantum; evicts (self-preempts) on failure. Returns False iff
+        evicted. Growth of admitted work uses physical free blocks —
+        reservation floors guard *admission*, not growth (denying growth
+        would evict the very caches the floors protect)."""
         bt = self.platform.block_tokens
+        q = min(q_step,
+                max(req.target_in_segment - req.generated_in_segment, 1))
+        have = -(-req.context_len // bt) if req.context_len else 0
+        need = -(-(req.context_len + q) // bt)
+        grow = max(need - have, 0)
+        if not grow:
+            return True
+        ok = all(p.free >= grow for p in self.pools)
+        if not ok:
+            ok = self._preempt_for(grow, self.running, req)
+        if not ok:
+            self._evict(req, None)   # self-preempt, recompute later
+            return False
+        for p in self.pools:
+            blocks = p.allocate(grow, req.rid, agent_type=req.agent_type)
+            req.gpu_blocks_by_device.setdefault(
+                p.device, []).extend(blocks)
+        return True
+
+    def _post_decode(self, batch: List[Request], q_step: int = 1,
+                     grown: bool = False) -> None:
         for req in list(batch):
             if req.state != ReqState.RUNNING:
                 continue
             q = min(q_step,
                     max(req.target_in_segment - req.generated_in_segment, 1))
-            # block growth across the quantum
-            have = -(-req.context_len // bt) if req.context_len else 0
-            need = -(-(req.context_len + q) // bt)
-            grow = max(need - have, 0)
-            if grow:
-                # growth of admitted work uses physical free blocks —
-                # reservation floors guard *admission*, not growth (denying
-                # growth would evict the very caches the floors protect)
-                ok = all(p.free >= grow for p in self.pools)
-                if not ok:
-                    ok = self._preempt_for(grow, self.running, req)
-                if ok:
-                    for p in self.pools:
-                        blocks = p.allocate(grow, req.rid,
-                                            agent_type=req.agent_type)
-                        req.gpu_blocks_by_device.setdefault(
-                            p.device, []).extend(blocks)
-                if not ok:
-                    self._evict(req, None)   # self-preempt, recompute later
-                    continue
+            # block growth across the quantum (unless pre-grown above)
+            if not grown and not self._grow_blocks(req, q_step):
+                continue
             req.generated_in_segment += q
             req.generated_total += q
             self.metrics["decoded_tokens"] += q

@@ -38,6 +38,58 @@ def block_gather(pages, indices, *, interpret: bool = True):
     )(indices, pages)
 
 
+def block_gather_layers(pools, indices, *, interpret: bool = True):
+    """All-layer gather: pools (L, N, bs, Hkv, D); indices (M,) int32
+    -> staging (L, M, bs, Hkv, D) in one kernel launch (no host loop
+    over L — the migration data plane moves a block id's every layer).
+    """
+    nl, n, bs, hkv, d = pools.shape
+    m = indices.shape[0]
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nl, m),
+            in_specs=[pl.BlockSpec((1, 1, bs, hkv, d),
+                                   lambda l, i, idx: (l, idx[i], 0, 0, 0))],
+            out_specs=pl.BlockSpec((1, 1, bs, hkv, d),
+                                   lambda l, i, idx: (l, i, 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nl, m, bs, hkv, d), pools.dtype),
+        interpret=interpret,
+    )(indices, pools)
+
+
+def block_scatter_layers(pools, indices, staging, *, interpret: bool = True):
+    """All-layer scatter: write staging (L, M, bs, Hkv, D) into pool blocks
+    ``indices`` across every layer at once. Aliased in place when compiled.
+    """
+    nl, n, bs, hkv, d = pools.shape
+    m = indices.shape[0]
+
+    def kernel(idx_ref, staging_ref, pools_in_ref, pools_out_ref):
+        pools_out_ref[...] = staging_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nl, m),
+            in_specs=[
+                pl.BlockSpec((1, 1, bs, hkv, d),
+                             lambda l, i, idx: (l, i, 0, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hkv, d),
+                             lambda l, i, idx: (l, idx[i], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bs, hkv, d),
+                                   lambda l, i, idx: (l, idx[i], 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pools.shape, pools.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(indices, staging, pools)
+
+
 def block_scatter(pages, indices, staging, *, interpret: bool = True):
     """Write staging (M, bs, Hkv, D) into pool blocks ``indices``.
 

@@ -1,0 +1,104 @@
+"""Pallas batched KV token-write kernel — the decode write data plane.
+
+Every decode iteration appends one token's K/V per sequence into the paged
+pool. Doing that with per-request functional updates costs 2·L·B full-cache
+copies per token on an accelerator; this kernel scatters the whole batch in
+one pass. Each grid step owns one sequence: the scalar-prefetched *slot id*
+(``block_id * block_size + offset``) selects the destination page, the
+in-page offset is a dynamic row store inside the fetched block.
+
+Slot convention: callers mask a write (padded batch row, or a sequence
+whose allocated blocks are exactly full) by pointing its slot at a scratch
+block the pool reserves past the allocatable range — the write still
+happens, but lands in memory nothing reads. This keeps the grid free of
+divergent control flow and makes "no room" impossible to corrupt live
+blocks (the seed's exact-boundary bug wrote into physical block 0).
+
+Live slots must be distinct blocks per grid step (block ownership gives
+this for free); only scratch writes may collide, and their content is
+by definition dead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _write_kernel(slots_ref, k_new_ref, v_new_ref, k_in_ref, v_in_ref,
+                  k_out_ref, v_out_ref, *, block_size: int):
+    i = pl.program_id(0)
+    off = slots_ref[i] % block_size
+    # carry the page through (aliased in/out), then patch one row
+    k_out_ref[...] = k_in_ref[...]
+    v_out_ref[...] = v_in_ref[...]
+    k_out_ref[0, pl.ds(off, 1)] = k_new_ref[...].astype(k_out_ref.dtype)
+    v_out_ref[0, pl.ds(off, 1)] = v_new_ref[...].astype(v_out_ref.dtype)
+
+
+def _write_kernel_flat(slots_ref, k_new_ref, v_new_ref, k_in_ref, v_in_ref,
+                       k_out_ref, v_out_ref, *, block_size: int, batch: int):
+    """Single-grid-step variant: the whole batch lands as ONE vectorized
+    scatter over the slot-flattened pool. Interpret mode (CPU validation)
+    pays O(full pool) per grid step / per dynamic ref store, so the
+    per-sequence grid is collapsed here; the gridded kernel remains the
+    TPU path."""
+    slots = slots_ref[...]
+    n, bs = k_in_ref.shape[0], k_in_ref.shape[1]
+    tail = k_in_ref.shape[2:]
+    k = k_in_ref[...].reshape(n * bs, *tail)
+    v = v_in_ref[...].reshape(n * bs, *tail)
+    k = k.at[slots].set(k_new_ref[...].astype(k.dtype))
+    v = v.at[slots].set(v_new_ref[...].astype(v.dtype))
+    k_out_ref[...] = k.reshape(k_in_ref.shape)
+    v_out_ref[...] = v.reshape(v_in_ref.shape)
+
+
+def kv_token_write(k_pages, v_pages, k_new, v_new, slots,
+                   *, interpret: bool = True, flat: bool = None):
+    """Scatter one new token per sequence into the paged KV pool.
+
+    k_pages/v_pages: (N, bs, Hkv, D) — one layer's pool
+    k_new/v_new:     (B, Hkv, D)     — the batch's new-token K/V
+    slots:           (B,) int32      — absolute slot ids (block*bs + offset)
+    returns: (k_pages, v_pages) updated (aliased in place when compiled).
+
+    ``flat`` selects the single-grid-step kernel (in-kernel write loop);
+    defaults to the interpret setting.
+    """
+    n, bs, hkv, d = k_pages.shape
+    b = k_new.shape[0]
+    if flat is None:
+        flat = interpret
+
+    if flat:
+        kernel = functools.partial(_write_kernel_flat, block_size=bs,
+                                   batch=b)
+        return pl.pallas_call(
+            kernel,
+            out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                       jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+            input_output_aliases={3: 0, 4: 1},
+            interpret=interpret,
+        )(slots, k_new, v_new, k_pages, v_pages)
+
+    kernel = functools.partial(_write_kernel, block_size=bs)
+    page_spec = pl.BlockSpec((1, bs, hkv, d),
+                             lambda i, s: (s[i] // bs, 0, 0, 0))
+    new_spec = pl.BlockSpec((1, hkv, d), lambda i, s: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=[new_spec, new_spec, page_spec, page_spec],
+            out_specs=[page_spec, page_spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(slots, k_new, v_new, k_pages, v_pages)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import block_copy as _bc
+from repro.kernels import kv_write as _kw
 from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import swa_attention as _swa
@@ -38,6 +39,26 @@ def block_gather(pages, indices):
 def block_scatter(pages, indices, staging):
     """Scatter a staging buffer into pool blocks (upload), in place."""
     return _bc.block_scatter(pages, indices, staging, interpret=INTERPRET)
+
+
+@jax.jit
+def block_gather_layers(pools, indices):
+    """Gather blocks across every layer at once (offload staging)."""
+    return _bc.block_gather_layers(pools, indices, interpret=INTERPRET)
+
+
+@jax.jit
+def block_scatter_layers(pools, indices, staging):
+    """Scatter a staging buffer into pool blocks across every layer."""
+    return _bc.block_scatter_layers(pools, indices, staging,
+                                    interpret=INTERPRET)
+
+
+@jax.jit
+def kv_token_write(k_pages, v_pages, k_new, v_new, slots):
+    """Batched one-token-per-sequence KV write into the paged pool."""
+    return _kw.kv_token_write(k_pages, v_pages, k_new, v_new, slots,
+                              interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -7,9 +7,12 @@ execution). This is the TPU adaptation of PagedAttention (DESIGN.md §2):
  * pages are streamed HBM -> VMEM with ``PrefetchScalarGridSpec`` — the
    block-table entries are scalar-prefetched so the page index map can
    depend on them (the TPU equivalent of the CUDA gather);
- * grid = (batch, kv_head, page): the page axis is the innermost sequential
-   dimension, so per-(batch, kv_head) flash accumulators live in VMEM
-   scratch across page iterations;
+ * grid = (batch, page): the page axis is the innermost sequential
+   dimension, so per-batch flash accumulators live in VMEM scratch across
+   page iterations. All kv heads are processed per grid step (one einsum
+   over the (Hkv, G, D) query block) — fewer, fatter steps beat a
+   per-kv-head grid both compiled (more MXU work per step) and in
+   interpret mode (per-step overhead dominates tiny blocks);
  * tiles are MXU-aligned when block_size is a multiple of 128 lanes; the
    GQA group dim (q heads per kv head) rides the sublane axis.
 
@@ -34,7 +37,7 @@ def _kernel(block_tables_ref, context_lens_ref,   # scalar prefetch
             m_scr, l_scr, acc_scr,                # VMEM scratch
             *, block_size: int, num_pages: int):
     b = pl.program_id(0)
-    p = pl.program_id(2)
+    p = pl.program_id(1)
 
     @pl.when(p == 0)
     def _init():
@@ -45,46 +48,113 @@ def _kernel(block_tables_ref, context_lens_ref,   # scalar prefetch
     ctx = context_lens_ref[b]
     start = p * block_size
 
-    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bs, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)         # (bs, D)
+    q = q_ref[0].astype(jnp.float32)                  # (Hkv, G, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bs, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)                  # (bs, Hkv, D)
     scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
 
-    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
-    valid = pos < ctx                                  # (1, bs)
+    scores = jax.lax.dot_general(                     # (Hkv, G, bs)
+        q, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2)
+    valid = pos < ctx                                  # (1, 1, bs)
     scores = jnp.where(valid, scores, NEG_INF)
 
     # ---- online softmax (flash) update ----
-    m_prev = m_scr[...]                                # (G, 1)
+    m_prev = m_scr[...]                                # (Hkv, G, 1)
     l_prev = l_scr[...]
-    m_cur = jnp.max(scores, axis=-1, keepdims=True)    # (G, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)    # (Hkv, G, 1)
     m_new = jnp.maximum(m_prev, m_cur)
     # fully-masked pages keep exp() at exactly zero
-    probs = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (G, bs)
+    probs = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (Hkv, G, bs)
     alpha = jnp.exp(m_prev - m_new)
     l_new = l_prev * alpha + probs.sum(axis=-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-        probs, v, preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        probs, v, (((2,), (0,)), ((0,), (1,))),        # (Hkv, G, D)
+        preferred_element_type=jnp.float32)
     m_scr[...] = m_new
     l_scr[...] = l_new
 
     @pl.when(p == num_pages - 1)
     def _finalize():
         out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
-        o_ref[0, 0] = out.astype(o_ref.dtype)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _kernel_flat(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
+                 *, block_size: int, num_pages: int, batch: int):
+    """Single-grid-step variant: the batch/page loops live inside the
+    kernel as ``fori_loop``s over dynamic ref slices. Same math as the
+    gridded kernel; buffers are traversed once instead of once per grid
+    step, which is what interpret mode (CPU validation) needs — its
+    emulation costs O(full operand) per grid step."""
+
+    def body_b(b, _):
+        q = q_ref[pl.ds(b, 1)][0].astype(jnp.float32)      # (Hkv, G, D)
+        ctx = cl_ref[b]
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+        hkv, g, d = q.shape
+        init = (jnp.full((hkv, g, 1), NEG_INF, jnp.float32),
+                jnp.zeros((hkv, g, 1), jnp.float32),
+                jnp.zeros((hkv, g, d), jnp.float32))
+
+        def body_p(p, carry):
+            m_prev, l_prev, acc = carry
+            blk = bt_ref[b, p]
+            k = k_ref[pl.ds(blk, 1)][0].astype(jnp.float32)  # (bs, Hkv, D)
+            v = v_ref[pl.ds(blk, 1)][0].astype(jnp.float32)
+            scores = jax.lax.dot_general(
+                q, k, (((2,), (2,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32) * scale  # (Hkv, G, bs)
+            pos = p * block_size + jax.lax.broadcasted_iota(
+                jnp.int32, (1, 1, block_size), 2)
+            valid = pos < ctx
+            scores = jnp.where(valid, scores, NEG_INF)
+            m_cur = jnp.max(scores, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            probs = jnp.where(valid, jnp.exp(scores - m_new), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + probs.sum(axis=-1, keepdims=True)
+            acc = acc * alpha + jax.lax.dot_general(
+                probs, v, (((2,), (0,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc
+
+        _, l_fin, acc = jax.lax.fori_loop(0, num_pages, body_p, init)
+        out = acc / jnp.maximum(l_fin, 1e-20)
+        o_ref[pl.ds(b, 1)] = out.astype(o_ref.dtype)[None]
+        return 0
+
+    jax.lax.fori_loop(0, batch, body_b, 0)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
-                    *, interpret: bool = True):
-    """q: (B, H, D); pools: (N, bs, Hkv, D); tables: (B, P); lens: (B,)."""
+                    *, interpret: bool = True, flat: bool = None):
+    """q: (B, H, D); pools: (N, bs, Hkv, D); tables: (B, P); lens: (B,).
+
+    ``flat`` selects the single-grid-step kernel (in-kernel loops); it
+    defaults to the interpret setting — gridded for Mosaic on TPU, flat
+    for the CPU interpreter.
+    """
     b, h, d = q.shape
     n, bs, hkv, _ = k_pages.shape
     p = block_tables.shape[1]
     g = h // hkv
     qg = q.reshape(b, hkv, g, d)
+    if flat is None:
+        flat = interpret
 
-    grid = (b, hkv, p)
+    if flat:
+        kernel = functools.partial(_kernel_flat, block_size=bs,
+                                   num_pages=p, batch=b)
+        out = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+            interpret=interpret,
+        )(block_tables, context_lens, qg, k_pages, v_pages)
+        return out.reshape(b, h, d)
+
+    grid = (b, p)
     kernel = functools.partial(_kernel, block_size=bs, num_pages=p)
 
     out = pl.pallas_call(
@@ -93,18 +163,19 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, g, d), lambda b_, kh, p_, bt, cl: (b_, kh, 0, 0)),
-                pl.BlockSpec((1, bs, 1, d),
-                             lambda b_, kh, p_, bt, cl: (bt[b_, p_], 0, kh, 0)),
-                pl.BlockSpec((1, bs, 1, d),
-                             lambda b_, kh, p_, bt, cl: (bt[b_, p_], 0, kh, 0)),
+                pl.BlockSpec((1, hkv, g, d),
+                             lambda b_, p_, bt, cl: (b_, 0, 0, 0)),
+                pl.BlockSpec((1, bs, hkv, d),
+                             lambda b_, p_, bt, cl: (bt[b_, p_], 0, 0, 0)),
+                pl.BlockSpec((1, bs, hkv, d),
+                             lambda b_, p_, bt, cl: (bt[b_, p_], 0, 0, 0)),
             ],
-            out_specs=pl.BlockSpec((1, 1, g, d),
-                                   lambda b_, kh, p_, bt, cl: (b_, kh, 0, 0)),
+            out_specs=pl.BlockSpec((1, hkv, g, d),
+                                   lambda b_, p_, bt, cl: (b_, 0, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((g, 1), jnp.float32),
-                pltpu.VMEM((g, 1), jnp.float32),
-                pltpu.VMEM((g, d), jnp.float32),
+                pltpu.VMEM((hkv, g, 1), jnp.float32),
+                pltpu.VMEM((hkv, g, 1), jnp.float32),
+                pltpu.VMEM((hkv, g, d), jnp.float32),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),

@@ -54,6 +54,27 @@ def block_scatter_ref(pages, indices, staging):
     return pages.at[indices].set(staging)
 
 
+def block_gather_layers_ref(pools, indices):
+    """All-layer gather. pools: (L, N, bs, Hkv, D); indices: (M,)."""
+    return pools[:, indices]
+
+
+def block_scatter_layers_ref(pools, indices, staging):
+    """All-layer scatter of staging (L, M, bs, Hkv, D) into pool blocks."""
+    return pools.at[:, indices].set(staging)
+
+
+def kv_token_write_ref(k_pages, v_pages, k_new, v_new, slots):
+    """Batched decode-token write. Pools (N, bs, Hkv, D); new (B, Hkv, D);
+    slots (B,) absolute slot ids (block*bs + offset), distinct per batch."""
+    n, bs, hkv, d = k_pages.shape
+    kf = k_pages.reshape(n * bs, hkv, d)
+    vf = v_pages.reshape(n * bs, hkv, d)
+    kf = kf.at[slots].set(k_new.astype(k_pages.dtype))
+    vf = vf.at[slots].set(v_new.astype(v_pages.dtype))
+    return kf.reshape(k_pages.shape), vf.reshape(v_pages.shape)
+
+
 def ssd_scan_ref(x, dt, a, b, c, init_state=None):
     """Sequential (non-chunked) SSD recurrence — the gold reference.
 

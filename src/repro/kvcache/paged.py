@@ -1,11 +1,18 @@
 """Paged KV cache: device pools + host pool, driven by the block ids that
 ``repro.core.block_pool`` hands out.
 
-Layout (per model): k/v pools of shape (L, N, bs, Hkv, D). The Pallas
-kernels view a single layer (N, bs, Hkv, D); the migration data plane moves
-whole (L, bs, Hkv, D) block-columns per block id so one logical block id
-covers every layer (that matches vLLM's block granularity accounting with
-3 MiB/block across all layers).
+Layout (per model): k/v pools of shape (L, N+1, bs, Hkv, D). The Pallas
+kernels view a single layer (N+1, bs, Hkv, D); the migration data plane
+moves whole (L, bs, Hkv, D) block-columns per block id so one logical block
+id covers every layer (that matches vLLM's block granularity accounting
+with 3 MiB/block across all layers).
+
+Row ``N`` (``scratch_block``) is never handed out by the allocator: it is
+the write sink for masked decode writes — padded batch rows, and sequences
+whose allocated blocks are exactly full. Pointing dead writes at a real
+page keeps the Pallas write kernel branch-free and makes it impossible for
+an out-of-room token to corrupt a live block (the seed wrote those into
+physical block 0, silently trashing whichever request owned it).
 """
 from __future__ import annotations
 
@@ -24,9 +31,10 @@ class PagedKVCache:
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.scratch_block = num_blocks          # masked-write sink (row N)
         nl, hkv, dh = cfg.num_layers, max(cfg.num_kv_heads, 1), \
             max(cfg.head_dim, 1)
-        shape = (nl, num_blocks, block_size, hkv, dh)
+        shape = (nl, num_blocks + 1, block_size, hkv, dh)
         self.k = jnp.zeros(shape, dtype)
         self.v = jnp.zeros(shape, dtype)
         # host pool is numpy (pinned host memory stand-in)
@@ -34,9 +42,23 @@ class PagedKVCache:
         self.host_k = np.zeros(hshape, dtype)
         self.host_v = np.zeros(hshape, dtype)
 
+    @property
+    def scratch_slot(self) -> int:
+        """Absolute slot id of the masked-write sink (offset 0)."""
+        return self.scratch_block * self.block_size
+
+    def slot_of(self, blocks: List[int], pos: int) -> int:
+        """Absolute slot id for token position ``pos`` of a request, or the
+        scratch slot when the position falls past the allocated blocks."""
+        bs = self.block_size
+        if 0 <= pos < len(blocks) * bs:
+            return blocks[pos // bs] * bs + pos % bs
+        return self.scratch_slot
+
     # ---- write path ---------------------------------------------------------
     def write_prefill(self, blocks: List[int], k_seq, v_seq):
-        """k_seq/v_seq: (L, S, Hkv, D) for one request; scatter into blocks."""
+        """k_seq/v_seq: (L, S, Hkv, D) for one request; scatter into blocks
+        across every layer in one kernel launch."""
         bs = self.block_size
         s = k_seq.shape[1]
         n = -(-s // bs)
@@ -47,16 +69,35 @@ class PagedKVCache:
         kb = k_seq.reshape(k_seq.shape[0], n, bs, *k_seq.shape[2:])
         vb = v_seq.reshape(v_seq.shape[0], n, bs, *v_seq.shape[2:])
         idx = jnp.asarray(blocks[:n], jnp.int32)
-        self.k = self.k.at[:, idx].set(kb.astype(self.k.dtype))
-        self.v = self.v.at[:, idx].set(vb.astype(self.v.dtype))
+        self.k = ops.block_scatter_layers(self.k, idx,
+                                          kb.astype(self.k.dtype))
+        self.v = ops.block_scatter_layers(self.v, idx,
+                                          vb.astype(self.v.dtype))
+
+    def write_tokens(self, slots, k_toks, v_toks):
+        """Batched decode write: k_toks/v_toks (L, B, Hkv, D); slots (B,)
+        absolute slot ids (scratch slot = masked). One scatter for every
+        (layer, sequence) pair — no Python loop over L or B."""
+        nl = self.k.shape[0]
+        nb = self.k.shape[1]
+        bs = self.block_size
+        slots = jnp.asarray(slots, jnp.int32)
+        # fold layers into the page axis so one kernel call covers (L, B):
+        # layer l's block b lives at folded block l*(N+1)+b
+        kf = self.k.reshape(nl * nb, bs, *self.k.shape[3:])
+        vf = self.v.reshape(nl * nb, bs, *self.v.shape[3:])
+        layer_base = (jnp.arange(nl, dtype=jnp.int32) * (nb * bs))[:, None]
+        folded = (layer_base + slots[None, :]).reshape(-1)
+        kn = k_toks.reshape(-1, *k_toks.shape[2:])
+        vn = v_toks.reshape(-1, *v_toks.shape[2:])
+        kf, vf = ops.kv_token_write(kf, vf, kn, vn, folded)
+        self.k = kf.reshape(self.k.shape)
+        self.v = vf.reshape(self.v.shape)
 
     def write_token(self, blocks: List[int], pos: int, k_tok, v_tok):
         """k_tok/v_tok: (L, Hkv, D); write at absolute position ``pos``."""
-        bs = self.block_size
-        bid = blocks[pos // bs]
-        off = pos % bs
-        self.k = self.k.at[:, bid, off].set(k_tok.astype(self.k.dtype))
-        self.v = self.v.at[:, bid, off].set(v_tok.astype(self.v.dtype))
+        self.write_tokens(jnp.asarray([self.slot_of(blocks, pos)], jnp.int32),
+                          k_tok[:, None], v_tok[:, None])
 
     # ---- read path ----------------------------------------------------------
     def gather_seq(self, blocks: List[int], length: int):
@@ -76,20 +117,19 @@ class PagedKVCache:
 
     # ---- migration (paper §6.3) ---------------------------------------------
     def offload(self, gpu_blocks: List[int], host_blocks: List[int]):
-        """D2H: gather device blocks into staging, copy to the host pool."""
+        """D2H: gather device blocks (all layers, one kernel launch) into
+        staging, copy to the host pool."""
         idx = jnp.asarray(gpu_blocks, jnp.int32)
-        for pool, host in ((self.k, self.host_k), (self.v, self.host_v)):
-            for l in range(pool.shape[0]):
-                staging = ops.block_gather(pool[l], idx)
-                host[l, host_blocks] = np.asarray(staging)
+        self.host_k[:, host_blocks] = np.asarray(
+            ops.block_gather_layers(self.k, idx))
+        self.host_v[:, host_blocks] = np.asarray(
+            ops.block_gather_layers(self.v, idx))
 
     def upload(self, host_blocks: List[int], gpu_blocks: List[int]):
-        """H2D: read host blocks, scatter into (possibly new) device blocks."""
+        """H2D: read host blocks, scatter into (possibly new) device blocks
+        across every layer in one kernel launch."""
         idx = jnp.asarray(gpu_blocks, jnp.int32)
-        new_k, new_v = self.k, self.v
-        for l in range(self.k.shape[0]):
-            stg_k = jnp.asarray(self.host_k[l, host_blocks])
-            stg_v = jnp.asarray(self.host_v[l, host_blocks])
-            new_k = new_k.at[l].set(ops.block_scatter(new_k[l], idx, stg_k))
-            new_v = new_v.at[l].set(ops.block_scatter(new_v[l], idx, stg_v))
-        self.k, self.v = new_k, new_v
+        self.k = ops.block_scatter_layers(
+            self.k, idx, jnp.asarray(self.host_k[:, host_blocks]))
+        self.v = ops.block_scatter_layers(
+            self.v, idx, jnp.asarray(self.host_v[:, host_blocks]))

@@ -266,6 +266,47 @@ def prefill(cfg, stacked, x, positions, cache_size: Optional[int] = None):
     return h, cache
 
 
+def paged_decode(cfg, stacked, x, k_pool, v_pool, tables, positions,
+                 attn_lens, slots):
+    """Single-token batched decode against the *paged* KV pool.
+
+    The serving hot path: one ``lax.scan`` over stacked layer params with
+    the per-layer pool slices riding along as scan inputs/outputs, so the
+    HLO is O(1) in depth and the whole step jits as one program. KV writes
+    go through the Pallas batched token-write kernel (no per-request loop)
+    and attention through the Pallas paged-attention kernel.
+
+    x:             (B, 1, d) embedded tokens
+    k_pool/v_pool: (L, N+1, bs, Hkv, D) paged pools (incl. scratch block)
+    tables:        (B, P) int32 block tables (padded rows arbitrary)
+    positions:     (B,) int32 rope position of the new token (= cached len)
+    attn_lens:     (B,) int32 tokens to attend over (incl. the new token
+                   when its write slot is live; 0 for padded rows)
+    slots:         (B,) int32 absolute write slot per sequence (scratch
+                   slot => masked write)
+    Returns (hidden (B, 1, d), k_pool, v_pool).
+    """
+    from repro.kernels import ops
+
+    pos = positions[:, None]                             # (B, 1)
+
+    def body(h, xs):
+        lp, kl, vl = xs
+        xn = L.rms_norm(h, lp["attn_norm"])
+        q, k, v = L.qkv_project(cfg, lp, xn)             # (B, 1, ·, ·)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        kl, vl = ops.kv_token_write(kl, vl, k[:, 0], v[:, 0], slots)
+        out = ops.paged_attention(q[:, 0], kl, vl, tables, attn_lens)
+        h = h + L.attn_out(lp, out[:, None])
+        if "w1" in lp:
+            h = h + L.mlp(lp, L.rms_norm(h, lp["mlp_norm"]))
+        return h, (kl, vl)
+
+    h, (k_pool, v_pool) = stack_scan(body, x, (stacked, k_pool, v_pool))
+    return h, k_pool, v_pool
+
+
 def decode_step(cfg, stacked, cache, x, cache_len):
     """One token. x: (B,1,d) embedded. Returns (hidden, new_cache)."""
 

@@ -14,6 +14,7 @@ Batch formats (all int32 tokens):
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -141,6 +142,36 @@ def decode_step(cfg, params, cache, tokens, cache_len):
         h, cache = D.decode_step(cfg, params["layers"], cache, x, cache_len)
     logits = _lm_head(cfg, params, h)
     return logits[:, 0], cache
+
+
+# Donating the pools lets XLA chain the in-place Pallas writes instead of
+# copying the full KV cache every token. CPU (interpret-mode validation)
+# doesn't implement donation and warns; silence just that message.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnums=(2, 3))
+def paged_decode_step(cfg, params, k_pool, v_pool, tokens, tables,
+                      positions, attn_lens, slots):
+    """Jitted batched decode step against the paged KV pool.
+
+    ``cfg`` is static (frozen dataclass), so one compilation is cached per
+    (config, batch-bucket, table-bucket) shape — callers pad ``tokens``/
+    ``tables``/``slots`` to bucketed shapes to keep the cache small. The
+    pools flow through the layer scan, so the write path is a Pallas
+    scatter per layer with no per-request Python anywhere. The pools are
+    DONATED: callers must rebind them from the return value.
+
+    Returns (logits (B, V), k_pool, v_pool).
+    """
+    x = _embed_tokens(cfg, params, tokens[:, None])
+    h, k_pool, v_pool = D.paged_decode(
+        cfg, params["layers"], x, k_pool, v_pool, tables, positions,
+        attn_lens, slots)
+    logits = _lm_head(cfg, params, h)
+    return logits[:, 0], k_pool, v_pool
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,29 @@
+"""Fallback shims when ``hypothesis`` is not installed.
+
+The property-based tests decorate with ``@given``/``@settings`` and build
+strategies at module scope; these stubs let those modules import and
+collect, turning every ``@given`` test into a skip instead of a collection
+error. The remaining (non-property) tests in the same files still run.
+"""
+import pytest
+
+
+class _StrategyStub:
+    """Answers any strategy constructor with an inert placeholder."""
+
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: None
+
+
+st = _StrategyStub()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (optional test dep)")(fn)
+    return deco
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn

@@ -6,8 +6,13 @@ pending-free / prefix-cache operations: every block is in exactly one of
 size. This is the §6.3 conservation property the migration infrastructure
 relies on.
 """
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
 
 from repro.core.block_pool import (DevicePool, HostPool, OutOfBlocks,
                                    block_hashes)

@@ -110,6 +110,41 @@ def test_multi_device_tp_admission():
         assert p.free + len(p.pending_free) == p.num_blocks
 
 
+def test_finish_upload_restores_blocks_on_all_devices():
+    """§5 Multi-GPU: _finish_upload promotes the reserved device-0 blocks
+    to live blocks and keeps the TP-mirror blocks reserved on non-zero
+    devices (the seed computed a ``dest`` for them and dropped it)."""
+    from repro.core.graph import AppGraph, SearchNode
+    from repro.core.request import Request
+    eng = Engine(EngineConfig.preset("tokencake", num_devices=2,
+                                     gpu_blocks=32, host_blocks=32),
+                 A100_PCIE)
+    g = AppGraph("t")
+    node = g.add_agent("a", "w", 32, decode_segments=[8, 8],
+                       func_calls=[SearchNode()])
+    req = Request(rid="r0", app_id="a0", node=node, graph=g, arrival=0.0,
+                  prompt_tokens=list(range(32)))
+    req.host_blocks = eng.host.allocate(2, req.rid)
+    req.reserved_upload_blocks = eng.pools[0].allocate(2, req.rid,
+                                                       agent_type="w")
+    dev1 = eng.pools[1].allocate(2, req.rid, agent_type="w")
+    req.gpu_blocks_by_device[1] = list(dev1)
+    req.state = ReqState.PENDING_UPLOAD
+    eng.offloaded[req.rid] = req
+    eng.clock = 1.0
+    req.fc_actual_end = 0.5           # tool already returned -> resume
+    reserved = list(req.reserved_upload_blocks)
+
+    eng._finish_upload(req)
+
+    assert req.gpu_blocks_by_device[0] == reserved
+    assert req.gpu_blocks_by_device[1] == dev1
+    assert req.reserved_upload_blocks == []
+    assert req.host_blocks == []
+    assert eng.host.free == 32
+    assert req.state == ReqState.RUNNING and req in eng.running
+
+
 def test_mcp_endpoint_states():
     """§6.2 lifecycle: stalled requests transition through the MCP states."""
     eng, rep = run("tokencake", n_apps=8, blocks=768)

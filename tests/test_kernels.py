@@ -15,6 +15,8 @@ def tol(dtype):
         else dict(atol=3e-5, rtol=3e-5)
 
 
+@pytest.mark.parametrize("flat", [True, False],
+                         ids=["flat(cpu)", "grid(tpu)"])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,h,hkv,d,bs,p", [
     (1, 4, 4, 32, 8, 3),      # MHA
@@ -22,7 +24,8 @@ def tol(dtype):
     (2, 16, 1, 64, 32, 2),    # MQA
     (2, 5, 5, 16, 8, 4),      # odd head count (whisper-like)
 ])
-def test_paged_attention(dtype, b, h, hkv, d, bs, p):
+def test_paged_attention(dtype, b, h, hkv, d, bs, p, flat):
+    from repro.kernels.paged_attention import paged_attention
     n = p * b + 4
     ks = jax.random.split(KEY, 5)
     q = jax.random.normal(ks[0], (b, h, d), dtype)
@@ -30,7 +33,7 @@ def test_paged_attention(dtype, b, h, hkv, d, bs, p):
     vp = jax.random.normal(ks[2], (n, bs, hkv, d), dtype)
     bt = jax.random.randint(ks[3], (b, p), 0, n)
     cl = jax.random.randint(ks[4], (b,), 1, p * bs + 1)
-    out = ops.paged_attention(q, kp, vp, bt, cl)
+    out = paged_attention(q, kp, vp, bt, cl, interpret=True, flat=flat)
     ref = R.paged_attention_ref(q, kp, vp, bt, cl)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **tol(dtype))
@@ -49,6 +52,68 @@ def test_block_gather_scatter(dtype, m):
     out = ops.block_scatter(pages, idx, new)
     np.testing.assert_array_equal(
         np.asarray(out), np.asarray(R.block_scatter_ref(pages, idx, new)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m", [1, 3, 5])
+def test_block_gather_scatter_layers(dtype, m):
+    """All-layer migration kernels match the per-layer refs."""
+    pools = jax.random.normal(KEY, (3, 10, 8, 2, 16), dtype)
+    idx = jnp.asarray(np.random.default_rng(1).choice(10, m, replace=False),
+                      jnp.int32)
+    stg = ops.block_gather_layers(pools, idx)
+    np.testing.assert_array_equal(
+        np.asarray(stg), np.asarray(R.block_gather_layers_ref(pools, idx)))
+    new = jax.random.normal(jax.random.PRNGKey(2), (3, m, 8, 2, 16), dtype)
+    out = ops.block_scatter_layers(pools, idx, new)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(R.block_scatter_layers_ref(pools, idx, new)))
+
+
+@pytest.mark.parametrize("flat", [True, False],
+                         ids=["flat(cpu)", "grid(tpu)"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b", [1, 4, 7])
+def test_kv_token_write(dtype, b, flat):
+    """Batched decode-token scatter matches the functional ref."""
+    from repro.kernels.kv_write import kv_token_write
+    n, bs, hkv, d = 12, 8, 2, 16
+    ks = jax.random.split(KEY, 4)
+    kp = jax.random.normal(ks[0], (n, bs, hkv, d), dtype)
+    vp = jax.random.normal(ks[1], (n, bs, hkv, d), dtype)
+    kn = jax.random.normal(ks[2], (b, hkv, d), dtype)
+    vn = jax.random.normal(ks[3], (b, hkv, d), dtype)
+    rng = np.random.default_rng(4)
+    blocks = rng.choice(n, b, replace=False)        # distinct blocks
+    offs = rng.integers(0, bs, b)
+    slots = jnp.asarray(blocks * bs + offs, jnp.int32)
+    ko, vo = kv_token_write(kp, vp, kn, vn, slots, interpret=True, flat=flat)
+    kr, vr = R.kv_token_write_ref(kp, vp, kn, vn, slots)
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(vr))
+
+
+def test_kv_token_write_scratch_collisions_leave_live_blocks_alone():
+    """Masked rows all share one scratch block; live blocks stay intact."""
+    n, bs, hkv, d = 6, 4, 2, 8
+    ks = jax.random.split(KEY, 4)
+    kp = jax.random.normal(ks[0], (n, bs, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[1], (n, bs, hkv, d), jnp.float32)
+    kn = jax.random.normal(ks[2], (3, hkv, d), jnp.float32)
+    vn = jax.random.normal(ks[3], (3, hkv, d), jnp.float32)
+    scratch = (n - 1) * bs                          # block 5 = scratch
+    slots = jnp.asarray([2 * bs + 1, scratch, scratch], jnp.int32)
+    ko, vo = ops.kv_token_write(kp, vp, kn, vn, slots)
+    # the live write landed
+    np.testing.assert_array_equal(np.asarray(ko[2, 1]), np.asarray(kn[0]))
+    # every block except the written one and scratch is untouched
+    keep = np.array([0, 1, 3, 4])
+    np.testing.assert_array_equal(np.asarray(ko)[keep], np.asarray(kp)[keep])
+    np.testing.assert_array_equal(np.asarray(vo)[keep], np.asarray(vp)[keep])
+    np.testing.assert_array_equal(np.asarray(ko[2, 0]), np.asarray(kp[2, 0]))
+    np.testing.assert_array_equal(np.asarray(ko[2, 2:]),
+                                  np.asarray(kp[2, 2:]))
 
 
 def test_migration_roundtrip_bit_exact():

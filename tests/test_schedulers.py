@@ -1,9 +1,13 @@
 """Unit + property tests for the Temporal and Spatial schedulers."""
 import math
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
 
 from repro.core.block_pool import DevicePool, HostPool
 from repro.core.costmodel import A100_PCIE
