@@ -50,3 +50,21 @@ class CsvWriter:
         line = f"{name},{us_per_call:.3f},{derived}"
         self.rows.append(line)
         print(line, file=self.out, flush=True)
+
+
+def write_json(bench: str, rows, path: str) -> None:
+    """CI-artifact JSON dump shared by the data-plane microbenchmarks."""
+    import json
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "rows": rows}, f, indent=2)
+
+
+def bench_args():
+    """Standalone-bench CLI shared by the microbenchmarks: --quick --json."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None)
+    return ap.parse_args()

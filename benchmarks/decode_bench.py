@@ -92,10 +92,11 @@ def _bench(fn, reps):
     return (time.perf_counter() - t0) / reps
 
 
-def run(csv: CsvWriter, quick: bool = False):
+def run(csv: CsvWriter, quick: bool = False, json_path: str = None):
     cfg = get_smoke_config("stablelm_3b")
     bt = A100_PCIE.block_tokens
     batches = [8] if quick else [4, 8, 16]
+    results = []
     for b in batches:
         params, cache, tables, lens, toks, slots = _setup(b, 3, bt, cfg)
         jt, jtab = jnp.asarray(toks), jnp.asarray(tables)
@@ -143,7 +144,15 @@ def run(csv: CsvWriter, quick: bool = False):
         csv.row(f"decode_eager_b{b}", eager_s * 1e6,
                 f"tok_s={b / eager_s:.1f}")
         csv.row(f"decode_speedup_b{b}", 0.0, f"x{speedup:.2f}")
+        results.append({"batch": b, "jit_tok_s": b / jit_s,
+                        "eager_tok_s": b / eager_s, "speedup": speedup})
+    if json_path:
+        from benchmarks.common import write_json
+        write_json("decode", results, json_path)
+    return results
 
 
 if __name__ == "__main__":
-    run(CsvWriter())
+    from benchmarks.common import bench_args
+    args = bench_args()
+    run(CsvWriter(), quick=args.quick, json_path=args.json)

@@ -19,6 +19,7 @@ from benchmarks.common import CsvWriter  # noqa: E402
 
 FIGURES = [
     ("decode_bench", "Decode data plane: jitted step vs seed eager loop"),
+    ("prefill_bench", "Prefill data plane: suffix-only vs full recompute"),
     ("fig9_latency", "Fig 9 e2e latency vs QPS"),
     ("fig10_utilization", "Fig 10 KV utilization"),
     ("fig11_ablation", "Fig 11 / §7.3 component analysis"),

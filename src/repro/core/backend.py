@@ -11,6 +11,7 @@ really leave the device and come back bit-exact).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -36,6 +37,9 @@ class SimBackend:
     def copy_in(self, req):
         pass
 
+    def copy_blocks(self, src, dst, device=0):
+        pass
+
     def invalidate(self, rid):
         pass
 
@@ -44,6 +48,58 @@ def _bucket(n: int) -> int:
     """Next power of two ≥ n — pad batch/table shapes so the jitted decode
     step compiles once per bucket instead of re-tracing every batch."""
     return 1 << (max(n, 1) - 1).bit_length()
+
+
+def paged_prefill_chunks(cfg, params, cache, entries, chunk: int = 32):
+    """Chunked, bucketed, batched suffix-only paged prefill — THE prefill
+    data plane (used by JaxBackend and measured as-is by prefill_bench).
+
+    ``entries``: list of (blocks, tokens, cached) per request — the block
+    table, the full target cache-token list, and the leading token count
+    already resident in the pool (shared prefix). Computes and writes only
+    ``tokens[cached:]`` per request, ``chunk`` tokens per jitted launch,
+    shapes padded to power-of-two buckets. Mutates ``cache.k/v`` (the
+    jitted step donates the pools). Returns the final-suffix-position
+    hidden row per entry (None when the suffix is empty)."""
+    suffix = [toks[cached:] for _, toks, cached in entries]
+    last_h = [None] * len(entries)
+    s_max = max((len(s) for s in suffix), default=0)
+    if s_max == 0:
+        return last_h
+    bs = cache.block_size
+    bb = _bucket(len(entries))
+    pb = _bucket(max(len(blocks) for blocks, _, _ in entries))
+    tables = np.zeros((bb, pb), np.int32)
+    for i, (blocks, _, _) in enumerate(entries):
+        tables[i, :len(blocks)] = blocks
+    jtables = jnp.asarray(tables)
+    C = min(chunk, _bucket(s_max))
+    pp = (C - 1) // bs + 2      # max pages a C-token window can straddle
+    for c0 in range(0, s_max, C):
+        tok = np.zeros((bb, C), np.int32)
+        qpos = np.full((bb, C), -1, np.int32)
+        # write windows: destination pages in order + first in-page offset
+        # + valid count per row (scratch-page padded — see kv_chunk_write)
+        wpages = np.full((bb, pp), cache.scratch_block, np.int32)
+        wstart = np.zeros((bb,), np.int32)
+        wcount = np.zeros((bb,), np.int32)
+        for i, (blocks, toks, cached) in enumerate(entries):
+            n = min(len(suffix[i]) - c0, C)
+            if n <= 0:
+                continue
+            tok[i, :n] = suffix[i][c0:c0 + n]
+            qpos[i, :n] = cached + c0 + np.arange(n)
+            wpages[i], wstart[i] = cache.write_window(
+                blocks, cached + c0, n, pp)
+            wcount[i] = n
+        h, cache.k, cache.v = M.paged_prefill_step(
+            cfg, params, cache.k, cache.v, jnp.asarray(tok), jtables,
+            jnp.asarray(qpos), jnp.asarray(wpages), jnp.asarray(wstart),
+            jnp.asarray(wcount))
+        for i, s in enumerate(suffix):
+            if c0 <= len(s) - 1 < c0 + C:
+                last_h[i] = h[i, len(s) - 1 - c0]
+    return last_h
 
 
 class JaxBackend:
@@ -76,17 +132,44 @@ class JaxBackend:
         # copy_in refreshes the signature so offload->upload round trips
         # (same KV, new block ids) do NOT trigger recompute.
         self._prefill_sig: Dict[str, Tuple[int, ...]] = {}
+        # prompts that exceeded their block allocation lose KV — never
+        # silent: counted here and surfaced as a warning (the engine sizes
+        # admissions to the full prompt, so this firing means a bug)
+        self.truncated_prompt_tokens = 0
+        # final-position prefill logits per request (inspection / tests)
+        self.last_prefill_logits: Dict[str, np.ndarray] = {}
+        # suffix tokens per jitted prefill launch (bucketed)
+        self.prefill_chunk = 32
 
     # -- engine hooks ----------------------------------------------------------
     def decode(self, reqs):
         reqs = [r for r in reqs if r.num_gpu_blocks > 0]
         if not reqs:
             return
-        for r in reqs:
-            sig = self._prefill_sig.get(r.rid)
-            if sig is None or tuple(r.gpu_blocks[:len(sig)]) != sig:
-                self._prefill_one(r)
+        need = [r for r in reqs if self._needs_prefill(r)]
+        if need:
+            # batched suffix prefill serves archs whose layer body the
+            # paged scan reproduces exactly; moe is excluded (bucket
+            # padding would perturb expert-capacity routing — see
+            # decoder._paged_ffn), as are window/ssm/cross-attn archs
+            if self.cfg.arch_type == "dense" \
+                    and self.cfg.sliding_window is None:
+                self._prefill_batch(need)
+            else:
+                for r in need:
+                    self._prefill_one(r)
         self._decode_batch(reqs)
+
+    def _needs_prefill(self, r) -> bool:
+        sig = self._prefill_sig.get(r.rid)
+        return sig is None or tuple(r.gpu_blocks[:len(sig)]) != sig
+
+    def copy_blocks(self, src: List[int], dst: List[int], device: int = 0):
+        """Engine hook: COW clone of shared prefix blocks (device-local).
+        Like copy_out/copy_in, this backend materializes device 0 only;
+        TP mirror copies on other devices are accounting-only here."""
+        if device == 0:
+            self.cache.copy_blocks(src, dst)
 
     def invalidate(self, rid: str):
         """Engine hook: the request's device blocks were released (evicted)
@@ -98,42 +181,90 @@ class JaxBackend:
         recompute source."""
         self._prefill_sig.pop(rid, None)
         self.cache_len.pop(rid, None)
+        self.last_prefill_logits.pop(rid, None)
 
     def copy_out(self, req):
-        self.cache.offload(req.gpu_blocks, req.host_blocks)
+        # only the private blocks move; the leading shared-prefix blocks
+        # stay resident on device (the engine keeps them pinned and sized
+        # host_blocks for the private count only)
+        self.cache.offload(req.gpu_blocks[req.shared_prefix_blocks:],
+                           req.host_blocks)
 
     def copy_in(self, req):
         self.cache.upload(req.host_blocks, req.reserved_upload_blocks)
         sig = self._prefill_sig.get(req.rid)
         if sig is not None:
-            n = min(len(sig), len(req.reserved_upload_blocks))
-            self._prefill_sig[req.rid] = tuple(req.reserved_upload_blocks[:n])
+            # post-upload table = resident shared-prefix blocks (which never
+            # moved) + the freshly uploaded private blocks
+            full = req.gpu_blocks + list(req.reserved_upload_blocks)
+            self._prefill_sig[req.rid] = tuple(full[:len(sig)])
 
     # -- internals --------------------------------------------------------------
-    def _prefill_one(self, req):
+    def _prefill_tokens(self, req):
+        """Target cache-token list for a (re)prefill, plus the leading
+        token count already resident in shared prefix blocks.
+
+        Recompute path (preempted request): reproduce the cache the decode
+        path would have built. Decode writes its *input* token's KV at the
+        current cache length, so position len(p) holds a duplicate of the
+        last prompt token, positions after it hold generated[:-1], and the
+        newest generated token is the pending decode input (not yet in
+        cache). The backend's generated list can run up to a quantum ahead
+        of the engine's accounting (which sized the allocation), so roll
+        back tokens that don't fit — greedy decode regenerates them
+        identically — instead of truncating the KV layout and
+        mis-positioning every later write."""
         toks = [t % self.cfg.vocab_size for t in req.prompt_tokens]
         gen = self.generated.get(req.rid, [])
         cap = len(req.gpu_blocks) * self.block_tokens
         if gen and toks:
-            # Recompute path (preempted request): reproduce the cache the
-            # decode path would have built. Decode writes its *input*
-            # token's KV at the current cache length, so position len(p)
-            # holds a duplicate of the last prompt token, positions after
-            # it hold generated[:-1], and the newest generated token is
-            # the pending decode input (not yet in cache).
-            #
-            # The backend's generated list can run up to a quantum ahead
-            # of the engine's accounting (which sized the allocation), so
-            # roll back tokens that don't fit — greedy decode regenerates
-            # them identically — instead of truncating the KV layout and
-            # mis-positioning every later write.
             keep = max(cap - len(toks), 0)
             if len(gen) > keep:
                 gen = gen[:keep]
                 self.generated[req.rid] = list(gen)
             if gen:
                 toks = toks + [toks[-1]] + gen[:-1]
-        toks = toks[:cap]    # last resort (prompt alone exceeding blocks)
+        if len(toks) > cap:
+            # prompt alone exceeds the block allocation: every later
+            # position would be skewed — count and warn, never silent
+            dropped = len(toks) - cap
+            self.truncated_prompt_tokens += dropped
+            warnings.warn(
+                f"prefill truncation: {req.rid} drops {dropped} prompt "
+                f"tokens ({len(toks)} tokens vs {cap} cache capacity); "
+                "admission under-sized the allocation")
+            toks = toks[:cap]
+        cached = min(getattr(req, "prefix_cached_tokens", 0), len(toks))
+        return toks, cached
+
+    def _prefill_batch(self, reqs):
+        """Batched chunked suffix-only prefill (the shared-prefix data
+        plane). Cached prefix KV is read from the pool through the block
+        tables; only each request's uncached suffix is computed and
+        written — see ``paged_prefill_chunks``."""
+        bs = self.block_tokens
+        items = [(r, *self._prefill_tokens(r)) for r in reqs]
+        last_h = paged_prefill_chunks(
+            self.cfg, self.params, self.cache,
+            [(r.gpu_blocks, toks, cached) for r, toks, cached in items],
+            chunk=self.prefill_chunk)
+        rows = [i for i, x in enumerate(last_h) if x is not None]
+        if rows:
+            # pad to the batch bucket so head_logits compiles once per
+            # bucket (len(rows) varies per prefill and would retrace)
+            stack = [last_h[i] for i in rows]
+            stack += [stack[0]] * (_bucket(len(items)) - len(rows))
+            logits = M.head_logits(self.cfg, self.params, jnp.stack(stack))
+            arr = np.asarray(logits[:len(rows)], np.float32)
+            for j, i in enumerate(rows):
+                self.last_prefill_logits[items[i][0].rid] = arr[j]
+        for r, toks, _ in items:
+            n_blocks = -(-len(toks) // bs) if toks else 0
+            self._prefill_sig[r.rid] = tuple(r.gpu_blocks[:n_blocks])
+            self.cache_len[r.rid] = len(toks)
+
+    def _prefill_one(self, req):
+        toks, _ = self._prefill_tokens(req)
         batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         if self.cfg.arch_type == "vlm":
             batch["patches"] = jnp.zeros(

@@ -54,6 +54,12 @@ class DevicePool:
         # shared pool.
         self.reserved_quota: Dict[str, int] = {}
         self.type_held: Dict[str, int] = {}    # live blocks per agent type
+        # prefix-store hooks (kvcache.prefix_store): ``victim_cb(device)``
+        # picks which cached block to reclaim (LRU); ``reclaim_cb(device,
+        # block, hash_key)`` tells the store its entry is gone. Both None
+        # when no store is attached (legacy arbitrary-set reclaim).
+        self.victim_cb = None
+        self.reclaim_cb = None
 
     # ---- accounting ---------------------------------------------------------
     @property
@@ -88,12 +94,21 @@ class DevicePool:
     def _pop_free(self) -> int:
         if self.free_list:
             return self.free_list.pop()
-        if self.cached_blocks:  # reclaim a prefix-cached block (LRU-ish)
-            bid = self.cached_blocks.pop()
+        if self.cached_blocks:  # reclaim a prefix-cached block
+            bid = None
+            if self.victim_cb is not None:
+                bid = self.victim_cb(self.device)     # store's LRU choice
+            if bid is None or bid not in self.cached_blocks:
+                bid = self.cached_blocks.pop()        # legacy arbitrary
+            else:
+                self.cached_blocks.remove(bid)
             m = self.meta[bid]
-            if m.hash_key is not None:
-                self.prefix_index.pop(m.hash_key, None)
+            key = m.hash_key
+            if key is not None:
+                self.prefix_index.pop(key, None)
                 m.hash_key = None
+            if self.reclaim_cb is not None:
+                self.reclaim_cb(self.device, bid, key)
             return bid
         raise OutOfBlocks(f"device {self.device} pool exhausted")
 
@@ -114,7 +129,13 @@ class DevicePool:
 
     def release(self, blocks: Sequence[int], agent_type: Optional[str] = None,
                 cache: bool = False) -> None:
-        """Free blocks. ``cache=True`` keeps content in the prefix index."""
+        """Free blocks. ``cache=True`` keeps content in the prefix index.
+
+        NOTE: production device-tier caching goes through the ref-counted
+        ``kvcache.prefix_store`` (which manages cached_blocks/prefix_index
+        directly); the ``cache=True`` branch here (with ``set_hashes``) is
+        the pool-local primitive kept for the conservation property tests
+        — don't add new production callers."""
         for bid in blocks:
             m = self.meta[bid]
             m.owner = None
@@ -150,7 +171,12 @@ class DevicePool:
             self.meta[bid].hash_key = h
 
     def lookup_prefix(self, hashes: Sequence[Tuple]) -> List[int]:
-        """Longest-prefix hit: cached block ids for a leading run of hashes."""
+        """Longest-prefix hit: cached block ids for a leading run of hashes.
+
+        Read-only. Claiming cached blocks for a request goes through the
+        ref-counted ``kvcache.prefix_store`` (shared pins, not the
+        exclusive-claim the seed used) so its refcount/LRU bookkeeping
+        stays coherent with this pool's sets."""
         hit = []
         for h in hashes:
             bid = self.prefix_index.get(h)
@@ -158,13 +184,6 @@ class DevicePool:
                 break
             hit.append(bid)
         return hit
-
-    def claim_cached(self, blocks: Sequence[int], owner: str) -> None:
-        for bid in blocks:
-            assert bid in self.cached_blocks, bid
-            self.cached_blocks.remove(bid)
-            self.prefix_index.pop(self.meta[bid].hash_key, None)
-            self.meta[bid].owner = owner
 
 
 class HostPool:

@@ -37,6 +37,7 @@ from repro.core.pressure import DevicePressure, PressureSnapshot
 from repro.core.request import DEVICE_RESIDENT, Request, ReqState
 from repro.core.spatial import AgentTypeStats, SpatialConfig, SpatialScheduler
 from repro.core.temporal import TemporalConfig, TemporalScheduler
+from repro.kvcache.prefix_store import PrefixMatch, PrefixStore
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +122,12 @@ class Engine:
         self.pools = [BP.DevicePool(cfg.gpu_blocks, d)
                       for d in range(cfg.num_devices)]
         self.host = BP.HostPool(cfg.host_blocks)
+        # ref-counted COW prefix store over every device pool + host tier;
+        # the device tier engages when cfg.prefix_cache, the host tier when
+        # cfg.cpu_prefix_cache (mooncake §6.3)
+        self.prefix_store = PrefixStore(self.pools, self.host,
+                                        platform.block_tokens)
+        self._pending_ready: List[str] = []
         self.forecaster = Forecaster()
         self.spatial = SpatialScheduler(self.pools, cfg.spatial)
         self.temporal = TemporalScheduler(self.pools, self.host, platform,
@@ -141,6 +148,7 @@ class Engine:
             "preemptions": 0, "critical_inversions": 0,
             "prefix_hits": 0, "cpu_prefix_hits": 0,
             "recomputed_tokens": 0, "decoded_tokens": 0,
+            "prefix_saved_tokens": 0, "cow_forks": 0,
         }
         self.util_samples: List[Tuple[float, float, float]] = []
         self.app_latencies: List[float] = []
@@ -258,7 +266,8 @@ class Engine:
                 if r.critical:
                     wd_crit += need
         wd_tot = sum(r.blocks_needed(bt) for r in self.waiting)
-        stalled_blocks = sum(r.num_gpu_blocks for r in self.stalled.values()
+        stalled_blocks = sum(r.offloadable_blocks
+                             for r in self.stalled.values()
                              if r.state == ReqState.STALLED)
         debt = sum(len(r.host_blocks) - len(r.reserved_upload_blocks)
                    for r in self.offloaded.values()
@@ -319,15 +328,25 @@ class Engine:
 
     # ---------------------------------------------------------------- transfers
     def _start_offload(self, req: Request) -> None:
-        n = req.num_gpu_blocks
+        # only the private blocks move; the store-pinned shared prefix (the
+        # leading ``shared_prefix_blocks`` of every device table) stays
+        # resident — it is refcounted and may be serving other requests
+        shared = req.shared_prefix_blocks
+        n = req.offloadable_blocks
         req.host_blocks = self.host.allocate(n, req.rid)
         bt = self.platform.block_tokens
-        hashes = req.block_hash_keys(bt)[:n]
-        if self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled:
-            self.host.index_hashes(req.host_blocks[:len(hashes)], hashes)
+        # host prefix lookups walk the hash chain from the root, so only a
+        # root-anchored run is ever matchable: when a shared device prefix
+        # stays behind (shared > 0), indexing hashes[shared:] would add
+        # dead, unreachable entries — skip it
+        hashes = req.block_hash_keys(bt)[:n] if shared == 0 else []
+        if hashes and (self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled):
+            self.prefix_store.host_publish(req.host_blocks[:len(hashes)],
+                                           hashes)
         for p in self.pools:
-            p.mark_pending_free(req.gpu_blocks_by_device.get(p.device, []),
-                                agent_type=req.agent_type)
+            p.mark_pending_free(
+                req.gpu_blocks_by_device.get(p.device, [])[shared:],
+                agent_type=req.agent_type)
         dur = self.platform.offload_time(n)
         start = max(self.clock, self.stream_free_at)
         self.stream_free_at = start + dur
@@ -343,9 +362,13 @@ class Engine:
         self._push(self.stream_free_at, "offload_done", req.rid)
 
     def _finish_offload(self, req: Request) -> None:
+        shared = req.shared_prefix_blocks
         for p in self.pools:
-            p.complete_pending_free(req.gpu_blocks_by_device.get(p.device, []))
-        req.gpu_blocks_by_device = {}
+            p.complete_pending_free(
+                req.gpu_blocks_by_device.get(p.device, [])[shared:])
+        req.gpu_blocks_by_device = {
+            d: blks[:shared]
+            for d, blks in req.gpu_blocks_by_device.items()}
         req.migration_count += 1
         if req.state == ReqState.PENDING_OFFLOAD:
             req.state = ReqState.OFFLOADED
@@ -365,10 +388,12 @@ class Engine:
         self._push(self.stream_free_at, "upload_done", req.rid)
 
     def _finish_upload(self, req: Request) -> None:
-        # reserved device-0 blocks become the live KV blocks; blocks on
-        # non-zero devices (TP mirrors) were already placed into
-        # gpu_blocks_by_device at reservation time and stay put
-        req.gpu_blocks_by_device[0] = list(req.reserved_upload_blocks)
+        # reserved device-0 blocks become the live KV blocks, appended after
+        # any resident shared-prefix blocks; blocks on non-zero devices (TP
+        # mirrors) were already placed into gpu_blocks_by_device at
+        # reservation time and stay put
+        req.gpu_blocks_by_device[0] = (req.gpu_blocks_by_device.get(0, [])
+                                       + list(req.reserved_upload_blocks))
         req.reserved_upload_blocks = []
         self.host.release(req.host_blocks)
         req.host_blocks = []
@@ -396,13 +421,13 @@ class Engine:
         if self.backend is not None:
             self.backend.invalidate(req.rid)   # prune per-request state
         self.req_latencies.append(self.clock - req.arrival)
-        cache_it = self.cfg.prefix_cache
-        if cache_it:
-            bt = self.platform.block_tokens
-            hashes = req.block_hash_keys(bt)
-            n = min(len(hashes), req.num_gpu_blocks)
-            self.pools[0].set_hashes(req.gpu_blocks[:n], hashes[:n])
-        self.spatial.release(req, cache=cache_it)
+        # shared prefix blocks go back to the store (pins dropped; refcount-0
+        # entries become LRU-reclaimable but stay indexed); private blocks
+        # free normally. Prompt blocks were published at admission, so there
+        # is nothing to index here.
+        self.prefix_store.release(req.rid, req)
+        req.shared_prefix_blocks = 0
+        self.spatial.release(req, cache=False)
         app = self.apps[req.app_id]
         app.finished_nodes.add(req.node.node_id)
         self._spawn_ready_nodes(app, {})
@@ -443,6 +468,12 @@ class Engine:
         self.metrics["preemptions"] += 1
         if victim.critical and (requester is None or not requester.critical):
             self.metrics["critical_inversions"] += 1
+        # drop the victim's shared-prefix pins first: the prefix blocks
+        # survive in the store (LRU), so the recompute after re-admission
+        # can re-pin them and prefill only the suffix
+        self.prefix_store.release(victim.rid, victim)
+        victim.shared_prefix_blocks = 0
+        victim.prefix_cached_tokens = 0
         self.spatial.release(victim, cache=False)
         if self.backend is not None:
             # the data plane must forget the evicted cache: the allocator
@@ -534,8 +565,8 @@ class Engine:
         for req in victims:
             if self.snapshot().usage < 0.85:
                 break
-            if req.state == ReqState.STALLED and \
-                    self.host.free >= req.num_gpu_blocks:
+            if req.state == ReqState.STALLED and req.offloadable_blocks and \
+                    self.host.free >= req.offloadable_blocks:
                 self._start_offload(req)
 
     def _phase_admission(self):
@@ -568,20 +599,26 @@ class Engine:
             if len(self.running) + len(admitted) >= self.cfg.max_running:
                 deferred.append(req)
                 continue
-            new_tokens = self._uncached_tokens(req)
+            m = self._prefix_match(req)
+            new_tokens = max(req.context_len - m.tokens, 1)
             if new_tokens > prefill_budget:
                 deferred.append(req)
                 continue
             need = req.blocks_needed(bt)
-            cached = self._prefix_hit_blocks(req)
-            need_new = max(need - cached, 0)
+            need_new = max(need - m.n_full, 0)
             est_release = self.clock + req.remaining_tokens / rate
             debt_due = sum(d for due, d in upload_liens
                            if due <= est_release and d > 0)
+            # pin the matched prefix BEFORE allocating: pinned blocks are
+            # unreclaimable, so the allocation below cannot evict the very
+            # blocks this request is about to share (rolled back on defer)
+            if m:
+                self._claim_prefix(req, m)
             if self.cfg.spatial_enabled:
                 route = self.spatial.admit(
                     req, need_new, headroom=self._headroom() + debt_due)
                 if route is None:
+                    self._rollback_prefix(req)
                     deferred.append(req)
                     continue
             else:
@@ -590,6 +627,7 @@ class Engine:
                 # when the temporal scheduler is active)
                 headroom = self._headroom() + debt_due
                 if any(p.free < need_new + headroom for p in self.pools):
+                    self._rollback_prefix(req)
                     deferred.append(req)
                     if not self.cfg.priority_sched:
                         deferred.extend(
@@ -603,9 +641,15 @@ class Engine:
                                         agent_type=req.agent_type)
                     req.gpu_blocks_by_device.setdefault(
                         p.device, []).extend(blocks)
-            if cached:
-                self._claim_prefix(req, cached)
-            req.cached_prefix_blocks = cached
+            if m:
+                self._commit_prefix(req, m)
+            if m.cpu_hits:
+                self.metrics["cpu_prefix_hits"] += m.cpu_hits
+            req.cached_prefix_blocks = m.n_full
+            req.prefix_cached_tokens = m.tokens
+            if self.cfg.prefix_cache:
+                self._publish_prefix(req, m)
+            req.shared_prefix_blocks = self.prefix_store.pinned_count(req.rid)
             req.state = ReqState.RUNNING
             req.prefill_pending = new_tokens
             prefill_budget -= new_tokens
@@ -616,35 +660,75 @@ class Engine:
             if r.first_token_time is None:
                 r.first_token_time = self.clock
 
-    def _uncached_tokens(self, req: Request) -> int:
-        bt = self.platform.block_tokens
-        cached = self._prefix_hit_blocks(req)
-        return max(req.context_len - cached * bt, 1)
+    def _prefix_match(self, req: Request) -> PrefixMatch:
+        """Longest shared-prefix hit for this request's prompt.
 
-    def _prefix_hit_blocks(self, req: Request) -> int:
-        if req.generated_total > 0:
-            return 0  # only fresh prompts hit the prefix cache
+        Device tier (cfg.prefix_cache): the ref-counted store, consulted
+        per-device (a hit requires the blocks on every TP mirror). Matching
+        covers *recompute* admissions too — a preempted request re-pins its
+        surviving prefix blocks and prefills only the suffix. Host tier
+        (cfg.cpu_prefix_cache, mooncake): index hit saves no device
+        recompute here, modeled as H2D in timing (§6.3)."""
         bt = self.platform.block_tokens
-        hashes = req.block_hash_keys(bt)
-        hits = 0
+        m = PrefixMatch()
         if self.cfg.prefix_cache:
-            hits = len(self.pools[0].lookup_prefix(hashes))
-        if self.cfg.cpu_prefix_cache and hits == 0:
-            cpu_hits = len(self.host.lookup_prefix(hashes))
-            if cpu_hits:
-                self.metrics["cpu_prefix_hits"] += cpu_hits
-                return 0  # CPU hits save recompute, modeled as H2D in timing
-        if hits:
-            self.metrics["prefix_hits"] += hits
-        return hits
+            full = req.block_hash_keys(bt)
+            _, tail_key, rem = self.prefix_store.keys_for(req.prompt_tokens,
+                                                          full)
+            # the match carries the keys even on a miss so _publish_prefix
+            # need not recompute them
+            m = self.prefix_store.match(full, tail_key, rem)
+            if m:
+                return m
+        if self.cfg.cpu_prefix_cache and req.generated_total == 0:
+            # carried on the match, counted only when admission commits —
+            # a deferred request must not re-count its hit every retry
+            m.cpu_hits = self.prefix_store.host_match(req.block_hash_keys(bt))
+        return m
 
-    def _claim_prefix(self, req: Request, n: int):
-        bt = self.platform.block_tokens
-        hashes = req.block_hash_keys(bt)[:n]
-        blocks = self.pools[0].lookup_prefix(hashes)[:n]
-        if blocks:
-            self.pools[0].claim_cached(blocks, req.rid)
-            req.gpu_blocks_by_device.setdefault(0, [])[:0] = blocks
+    def _claim_prefix(self, req: Request, m: PrefixMatch):
+        """Pin the matched blocks on every device (refcount, not exclusive
+        claim) and prepend them to the request's block tables."""
+        blocks = self.prefix_store.acquire(req.rid, m)
+        for d, blks in blocks.items():
+            if blks:
+                req.gpu_blocks_by_device.setdefault(d, [])[:0] = blks
+
+    def _rollback_prefix(self, req: Request):
+        """Deferred after pinning: undo the claim (unpin + strip tables)."""
+        self.prefix_store.release(req.rid, req)
+        req.shared_prefix_blocks = 0
+        req.prefix_cached_tokens = 0
+
+    def _commit_prefix(self, req: Request, m: PrefixMatch):
+        """Admission succeeded: count the hit and COW-fork a matched *tail*
+        block — it would receive writes past the shared boundary (the
+        prompt remainder / first decode token lands mid-block), so the
+        store drops the pin and the data plane clones the content into the
+        request's first private block."""
+        if m.n_full:
+            self.metrics["prefix_hits"] += m.n_full
+        self.metrics["prefix_saved_tokens"] += m.tokens
+        if m.tail is not None:
+            src = self.prefix_store.cow_fork(req.rid, m.tail)
+            self.metrics["cow_forks"] += 1
+            if self.backend is not None:
+                # clone every TP mirror; the backend decides which devices
+                # it actually materializes (JaxBackend models device 0)
+                for d, s in src.items():
+                    dst = req.gpu_blocks_by_device[d][m.n_full]
+                    self.backend.copy_blocks([s], [dst], device=d)
+
+    def _publish_prefix(self, req: Request, m: PrefixMatch):
+        """Register the request's prompt blocks as shared entries (live
+        sharing: concurrent same-prefix requests pin them once the prefill
+        has executed and ``mark_ready`` fires). Reuses the keys the match
+        already computed."""
+        made = self.prefix_store.publish(
+            req.rid, req.gpu_blocks_by_device, m.full_keys, m.tail_key,
+            m.tail_len, agent_type=req.agent_type, start=m.n_full)
+        if made:
+            self._pending_ready.append(req.rid)
 
     # ---------------------------------------------------------------- execute
     def execute_iteration(self) -> float:
@@ -683,6 +767,17 @@ class Engine:
             if self.backend is not None:
                 for _ in range(q):
                     self.backend.decode(decode_batch)
+            # prefix entries published this step now hold real KV (the
+            # prefill just executed) — unless their publisher was evicted
+            # in the pre-grow above, in which case its release already
+            # deleted the unfilled entries. This must run BEFORE
+            # _post_decode: a publisher finishing within its first quantum
+            # releases its pins there, and unready entries would be
+            # dropped instead of cached.
+            if self._pending_ready:
+                pending, self._pending_ready = self._pending_ready, []
+                for rid in pending:
+                    self.prefix_store.mark_ready(rid)
             self._post_decode(decode_batch, q, grown=pre_grown)
         return max(duration, 1e-4)
 
@@ -773,9 +868,13 @@ class Engine:
     def _sample_utilization(self):
         p = self.pools[0]
         used = 1.0 - p.free / p.num_blocks
-        active_blocks = sum(r.num_gpu_blocks for r in self.running)
+        # physical blocks: concurrent sharers hold the SAME prefix blocks,
+        # so summing per-request counts would double-count (utilization >1)
+        active = set()
+        for r in self.running:
+            active.update(r.gpu_blocks)
         self.util_samples.append(
-            (self.clock, used, active_blocks / p.num_blocks))
+            (self.clock, used, len(active) / p.num_blocks))
 
     def run(self, max_time: float = 1e9, max_iters: int = 2_000_000) -> dict:
         iters = 0
@@ -823,5 +922,7 @@ class Engine:
             "avg_utilization": float(np.mean(util)) if util else 0.0,
             "effective_utilization": float(np.mean(eff)) if eff else 0.0,
             "clock": self.clock,
+            "truncated_prompt_tokens": getattr(
+                self.backend, "truncated_prompt_tokens", 0),
             **self.metrics,
         }

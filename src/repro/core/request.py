@@ -61,6 +61,13 @@ class Request:
     reserved_upload_blocks: List[int] = field(default_factory=list)
     from_reserved_pool: int = 0          # blocks drawn from reserved quota
     cached_prefix_blocks: int = 0        # prefix-cache hits at admission
+    # ref-counted shared-prefix state (kvcache.prefix_store): the first
+    # ``shared_prefix_blocks`` entries of every device's block table are
+    # store-pinned shared blocks (read-only, not offloadable); the first
+    # ``prefix_cached_tokens`` positions hold KV the prefill must not
+    # recompute.
+    shared_prefix_blocks: int = 0
+    prefix_cached_tokens: int = 0
 
     current_fc: Optional[FuncNode] = None
     fc_start: float = 0.0
@@ -85,6 +92,11 @@ class Request:
     @property
     def num_gpu_blocks(self) -> int:
         return len(self.gpu_blocks_by_device.get(0, []))
+
+    @property
+    def offloadable_blocks(self) -> int:
+        """Private device blocks (shared prefix blocks stay resident)."""
+        return max(self.num_gpu_blocks - self.shared_prefix_blocks, 0)
 
     @property
     def agent_type(self) -> str:

@@ -84,7 +84,7 @@ class TemporalScheduler:
         the critical penalty scales with it (§4.2: "using the Spatial
         Scheduler's priority metric")."""
         c = self.cfg
-        n_blocks = req.num_gpu_blocks
+        n_blocks = req.offloadable_blocks   # shared prefix blocks stay put
         if n_blocks == 0:
             return OffloadDecision(False, "no blocks")
 

@@ -57,6 +57,122 @@ def _write_kernel_flat(slots_ref, k_new_ref, v_new_ref, k_in_ref, v_in_ref,
     v_out_ref[...] = v.reshape(v_in_ref.shape)
 
 
+def _chunk_kernel(wpages_ref, wstart_ref, wcount_ref,        # scalar prefetch
+                  k_new_ref, v_new_ref, k_in_ref, v_in_ref,
+                  k_out_ref, v_out_ref, *, block_size: int):
+    """Destination-page-gridded chunk write: grid = (batch, window page).
+
+    One grid step owns ONE destination page — a chunk's consecutive suffix
+    tokens land several rows in the same page, and a per-token grid would
+    revisit that page across steps (write-back racing the next step's
+    aliased prefetch). Here every live page appears exactly once; only
+    scratch padding pages repeat, and those steps are pure copies."""
+    b = pl.program_id(0)
+    pp = pl.program_id(1)
+    s = wstart_ref[b]                  # first token's in-page offset
+    cnt = wcount_ref[b]                # valid tokens in this row's chunk
+    k_out_ref[...] = k_in_ref[...]
+    v_out_ref[...] = v_in_ref[...]
+    base = pp * block_size - s         # chunk index of this page's offset 0
+
+    def body(off, _):
+        j = base + off
+
+        @pl.when((j >= 0) & (j < cnt))
+        def _write():
+            k_out_ref[0, pl.ds(off, 1)] = \
+                k_new_ref[0, pl.ds(j, 1)].astype(k_out_ref.dtype)
+            v_out_ref[0, pl.ds(off, 1)] = \
+                v_new_ref[0, pl.ds(j, 1)].astype(v_out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, block_size, body, 0)
+
+
+def _chunk_kernel_flat(wpages_ref, wstart_ref, wcount_ref, k_new_ref,
+                       v_new_ref, k_in_ref, v_in_ref, k_out_ref, v_out_ref,
+                       *, block_size: int, scratch_slot: int):
+    """Single-grid-step variant: reconstruct per-token slots from the page
+    windows and land the whole chunk as one vectorized scatter (interpret
+    mode pays O(full pool) per grid step). Invalid tokens (chunk/batch
+    padding) point at the scratch slot; live slots are distinct."""
+    bs = block_size
+    wpages = wpages_ref[...]                       # (B, PP)
+    wstart = wstart_ref[...]                       # (B,)
+    wcount = wcount_ref[...]                       # (B,)
+    bsz, c = k_new_ref.shape[0], k_new_ref.shape[1]
+    j = jax.lax.broadcasted_iota(jnp.int32, (bsz, c), 1)
+    pos = wstart[:, None] + j                      # offset within the window
+    pages = jnp.take_along_axis(wpages, pos // bs, axis=1)
+    slots = jnp.where(j < wcount[:, None],
+                      pages * bs + pos % bs, scratch_slot).reshape(-1)
+    n = k_in_ref.shape[0]
+    tail = k_in_ref.shape[2:]
+    k = k_in_ref[...].reshape(n * bs, *tail)
+    v = v_in_ref[...].reshape(n * bs, *tail)
+    kn = k_new_ref[...].reshape(bsz * c, *tail)
+    vn = v_new_ref[...].reshape(bsz * c, *tail)
+    k = k.at[slots].set(kn.astype(k.dtype))
+    v = v.at[slots].set(vn.astype(v.dtype))
+    k_out_ref[...] = k.reshape(k_in_ref.shape)
+    v_out_ref[...] = v.reshape(v_in_ref.shape)
+
+
+def kv_chunk_write(k_pages, v_pages, k_new, v_new, wpages, wstart, wcount,
+                   *, interpret: bool = True, flat: bool = None):
+    """Scatter one suffix chunk per sequence into the paged KV pool.
+
+    k_pages/v_pages: (N, bs, Hkv, D) — one layer's pool (incl. scratch, the
+                     last page, which also pads ``wpages``)
+    k_new/v_new:     (B, C, Hkv, D)  — the batch's chunk K/V
+    wpages:          (B, PP) int32   — destination pages of each row's
+                     write window, in order (scratch-padded)
+    wstart:          (B,) int32      — in-page offset of the row's first
+                     token inside wpages[:, 0]
+    wcount:          (B,) int32      — valid tokens per row (0 = padded row)
+    returns: (k_pages, v_pages) updated (aliased in place when compiled).
+
+    ``flat`` selects the single-grid-step kernel; defaults to the
+    interpret setting. The gridded path is TPU-safe for multi-token-per-
+    page writes (unlike a per-token grid — see ``_chunk_kernel``).
+    """
+    n, bs, hkv, d = k_pages.shape
+    b, c = k_new.shape[0], k_new.shape[1]
+    pp = wpages.shape[1]
+    if flat is None:
+        flat = interpret
+
+    if flat:
+        kernel = functools.partial(_chunk_kernel_flat, block_size=bs,
+                                   scratch_slot=(n - 1) * bs)
+        return pl.pallas_call(
+            kernel,
+            out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                       jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+            input_output_aliases={5: 0, 6: 1},
+            interpret=interpret,
+        )(wpages, wstart, wcount, k_new, v_new, k_pages, v_pages)
+
+    kernel = functools.partial(_chunk_kernel, block_size=bs)
+    page_spec = pl.BlockSpec((1, bs, hkv, d),
+                             lambda b_, p_, wp, ws, wc: (wp[b_, p_], 0, 0, 0))
+    new_spec = pl.BlockSpec((1, c, hkv, d),
+                            lambda b_, p_, wp, ws, wc: (b_, 0, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, pp),
+            in_specs=[new_spec, new_spec, page_spec, page_spec],
+            out_specs=[page_spec, page_spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(wpages, wstart, wcount, k_new, v_new, k_pages, v_pages)
+
+
 def kv_token_write(k_pages, v_pages, k_new, v_new, slots,
                    *, interpret: bool = True, flat: bool = None):
     """Scatter one new token per sequence into the paged KV pool.

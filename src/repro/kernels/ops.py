@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import block_copy as _bc
 from repro.kernels import kv_write as _kw
 from repro.kernels import paged_attention as _pa
+from repro.kernels import paged_prefill as _pp
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import swa_attention as _swa
 
@@ -27,6 +28,13 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens):
     """Decode attention over the paged KV pool. See kernel docstring."""
     return _pa.paged_attention(q, k_pages, v_pages, block_tables,
                                context_lens, interpret=INTERPRET)
+
+
+@jax.jit
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_pos):
+    """Chunked suffix-prefill attention over the paged KV pool."""
+    return _pp.paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                       q_pos, interpret=INTERPRET)
 
 
 @jax.jit
@@ -59,6 +67,17 @@ def kv_token_write(k_pages, v_pages, k_new, v_new, slots):
     """Batched one-token-per-sequence KV write into the paged pool."""
     return _kw.kv_token_write(k_pages, v_pages, k_new, v_new, slots,
                               interpret=INTERPRET)
+
+
+@jax.jit
+def kv_chunk_write(k_pages, v_pages, k_new, v_new, wpages, wstart, wcount):
+    """Suffix-chunk KV scatter (prefill write path). Gridded per
+    destination page on TPU — a chunk lands several tokens in the same
+    page, so a per-token grid would revisit aliased output pages across
+    steps; here each live page is one grid step. Flat one-shot scatter
+    under the CPU interpreter."""
+    return _kw.kv_chunk_write(k_pages, v_pages, k_new, v_new, wpages,
+                              wstart, wcount, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -41,6 +41,41 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, q_pos):
+    """Chunked paged-prefill attention over a paged KV pool.
+
+    q:            (B, C, H, D)    — one suffix chunk of queries per sequence
+    k_pages:      (N, bs, Hkv, D) — global block pool (prefix + suffix KV)
+    v_pages:      (N, bs, Hkv, D)
+    block_tables: (B, P) int32    — page ids per sequence (padded arbitrary)
+    q_pos:        (B, C) int32    — absolute position per query; -1 = padded
+                                    (fully masked, output row is zeros)
+    returns:      (B, C, H, D)
+    """
+    b, c, h, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    p = block_tables.shape[1]
+    g = h // hkv
+
+    k = k_pages[block_tables].reshape(b, p * bs, hkv, d)
+    v = v_pages[block_tables].reshape(b, p * bs, hkv, d)
+
+    qf = q.reshape(b, c, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bckgd,btkd->bckgt", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(p * bs)
+    mask = pos[None, None, :] <= q_pos[:, :, None]       # (B, C, T)
+    maskx = mask[:, :, None, None, :]
+    scores = jnp.where(maskx, scores, -1e30)
+    # masked-safe softmax: fully-masked queries produce zeros, not NaN
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.where(maskx, jnp.exp(scores - m), 0.0)
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bckgt,btkd->bckgd", probs / denom,
+                     v.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
 def block_gather_ref(pages, indices):
     """Gather pool blocks into a contiguous staging buffer.
 
@@ -72,6 +107,26 @@ def kv_token_write_ref(k_pages, v_pages, k_new, v_new, slots):
     vf = v_pages.reshape(n * bs, hkv, d)
     kf = kf.at[slots].set(k_new.astype(k_pages.dtype))
     vf = vf.at[slots].set(v_new.astype(v_pages.dtype))
+    return kf.reshape(k_pages.shape), vf.reshape(v_pages.shape)
+
+
+def kv_chunk_write_ref(k_pages, v_pages, k_new, v_new, wpages, wstart,
+                       wcount):
+    """Suffix-chunk write. Pools (N, bs, Hkv, D); new (B, C, Hkv, D);
+    wpages (B, PP) destination pages per row window (scratch = page N-1
+    padding); wstart (B,) in-page offset of the first token; wcount (B,)
+    valid tokens per row."""
+    n, bs, hkv, d = k_pages.shape
+    b, c = k_new.shape[0], k_new.shape[1]
+    j = jnp.arange(c)[None, :]
+    pos = wstart[:, None] + j
+    pages = jnp.take_along_axis(wpages, pos // bs, axis=1)
+    slots = jnp.where(j < wcount[:, None],
+                      pages * bs + pos % bs, (n - 1) * bs).reshape(-1)
+    kf = k_pages.reshape(n * bs, hkv, d)
+    vf = v_pages.reshape(n * bs, hkv, d)
+    kf = kf.at[slots].set(k_new.reshape(b * c, hkv, d).astype(k_pages.dtype))
+    vf = vf.at[slots].set(v_new.reshape(b * c, hkv, d).astype(v_pages.dtype))
     return kf.reshape(k_pages.shape), vf.reshape(v_pages.shape)
 
 

@@ -55,6 +55,22 @@ class PagedKVCache:
             return blocks[pos // bs] * bs + pos % bs
         return self.scratch_slot
 
+    def write_window(self, blocks: List[int], start: int, count: int,
+                     max_pages: int):
+        """Suffix-write window for ``count`` consecutive tokens beginning
+        at absolute position ``start`` — the prefill write pattern: the
+        first token lands at an arbitrary offset inside a block (right
+        after the cached prefix) and later tokens spill across block
+        boundaries. Returns (pages, in-page offset of the first token):
+        the ordered destination pages padded with the scratch block to
+        ``max_pages`` (the ``kv_chunk_write`` contract)."""
+        bs = self.block_size
+        pages = np.full((max_pages,), self.scratch_block, np.int32)
+        first = start // bs
+        npages = (start % bs + count + bs - 1) // bs
+        pages[:npages] = blocks[first:first + npages]
+        return pages, start % bs
+
     # ---- write path ---------------------------------------------------------
     def write_prefill(self, blocks: List[int], k_seq, v_seq):
         """k_seq/v_seq: (L, S, Hkv, D) for one request; scatter into blocks
@@ -114,6 +130,18 @@ class PagedKVCache:
         """
         return ops.paged_attention(q, self.k[layer], self.v[layer],
                                    block_tables, context_lens)
+
+    # ---- copy-on-write ------------------------------------------------------
+    def copy_blocks(self, src: List[int], dst: List[int]):
+        """Device-local block clone (all layers, two kernel launches):
+        the COW data plane — a request forking off a shared prefix block
+        gets a private copy it can write into."""
+        si = jnp.asarray(src, jnp.int32)
+        di = jnp.asarray(dst, jnp.int32)
+        self.k = ops.block_scatter_layers(
+            self.k, di, ops.block_gather_layers(self.k, si))
+        self.v = ops.block_scatter_layers(
+            self.v, di, ops.block_gather_layers(self.v, si))
 
     # ---- migration (paper §6.3) ---------------------------------------------
     def offload(self, gpu_blocks: List[int], host_blocks: List[int]):

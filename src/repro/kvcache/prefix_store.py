@@ -1,0 +1,327 @@
+"""Ref-counted copy-on-write shared-prefix KV store (control plane).
+
+Tokencake's multi-agent workloads are dominated by agents that share a long
+app-level system prefix (§7.1). The seed's prefix cache was metadata-only
+and *exclusive-claim*: ``DevicePool.claim_cached`` popped a block out of the
+index, so two concurrent agents could never share device blocks. This
+module replaces that with a real sharing subsystem:
+
+ * **Hash-chained index** — entries are keyed by the vLLM-style chained
+   block hashes (``block_pool.block_hashes``), plus *tail* keys for the
+   partial last block of a prompt, so a full-prompt hit is possible even
+   when the prompt does not end on a block boundary.
+ * **Ref-counted pinning** — ``acquire`` pins matched blocks for a request
+   (refcount, not ownership transfer); any number of concurrent requests
+   can read the same physical blocks. While pinned, blocks are owned by
+   the ``SHARED_OWNER`` sentinel and can never be reclaimed.
+ * **Copy-on-write forks** — a request that will *write* inside a shared
+   block (decoding past the shared boundary of a tail block) forks it:
+   ``cow_fork`` drops the pin and hands the caller the source block ids so
+   the data plane can clone content into the request's private block.
+ * **LRU second chance** — entries whose refcount drops to zero move into
+   the device pools' reclaimable ``cached_blocks`` set, ordered here by
+   release recency; allocation pressure reclaims the least-recently-used
+   entry first (``victim_cb``) and prunes the index (``reclaim_cb``).
+ * **Host tier** — the §6.3 CPU prefix index (mooncake mode) is fronted by
+   the same object (``host_publish`` / ``host_match``) so the engine has a
+   single prefix-reuse surface across both memory tiers.
+
+Entries hold one block id *per device* (TP mirroring): a hit requires the
+prefix to be resident on every device, which fixes the seed's
+``pools[0]``-only accounting on multi-device configs.
+
+The store is control-plane only; block *content* moves through the backend
+(``JaxBackend.copy_blocks`` for COW clones, the paged-prefill step for
+suffix fills). Entries are published *unready* at admission and flip ready
+only after the engine has executed the publisher's prefill, so a sharer
+can never attend over blocks whose KV has not been written yet.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.block_pool import DevicePool, HostPool, block_hashes
+
+SHARED_OWNER = "<shared-prefix>"
+
+
+@dataclass
+class PrefixEntry:
+    key: Tuple
+    blocks: Dict[int, int]           # device -> block id
+    tokens: int                      # prompt tokens this entry covers
+    is_tail: bool = False            # partial (< block_tokens) last block
+    refs: Set[str] = field(default_factory=set)
+    ready: bool = False              # data plane has written the KV
+
+
+@dataclass
+class PrefixMatch:
+    """Result of a longest-prefix lookup for one request."""
+    n_full: int = 0                        # matched full blocks
+    tail: Optional[PrefixEntry] = None     # matched partial tail block
+    tokens: int = 0                        # total cached tokens
+    full_keys: List[Tuple] = field(default_factory=list)
+    tail_key: Optional[Tuple] = None
+    tail_len: int = 0
+    cpu_hits: int = 0         # host-tier index hits (no device blocks)
+
+    def __bool__(self) -> bool:
+        return self.n_full > 0 or self.tail is not None
+
+
+class PrefixStore:
+    def __init__(self, pools: Sequence[DevicePool],
+                 host: Optional[HostPool], block_tokens: int):
+        self.pools = {p.device: p for p in pools}
+        self.host = host
+        self.bt = block_tokens
+        self.entries: Dict[Tuple, PrefixEntry] = {}
+        self.by_block: Dict[Tuple[int, int], PrefixEntry] = {}
+        self.pins: Dict[str, List[PrefixEntry]] = {}       # rid -> entries
+        self.unready: Dict[str, List[PrefixEntry]] = {}    # publisher -> new
+        # refcount-0 entries, oldest release first (reclaim order)
+        self.lru: "OrderedDict[Tuple, PrefixEntry]" = OrderedDict()
+        # store-internal lifecycle counters only; hit/COW accounting lives
+        # in the engine's metrics (counted once, at admission commit)
+        self.stats = {"published": 0, "reclaimed": 0}
+        for p in pools:
+            p.reclaim_cb = self._on_reclaim
+            p.victim_cb = self._lru_victim
+
+    # ---- keys ----------------------------------------------------------------
+    def keys_for(self, prompt_tokens: Sequence[int],
+                 full_keys: Optional[List[Tuple]] = None):
+        """(full block keys, tail key or None, tail length)."""
+        if full_keys is None:
+            full_keys = block_hashes(prompt_tokens, self.bt)
+        rem = len(prompt_tokens) % self.bt
+        tail_key = None
+        if rem:
+            prev = full_keys[-1] if full_keys else ("root",)
+            tail_key = ("tail", prev, tuple(prompt_tokens[-rem:]))
+        return full_keys, tail_key, rem
+
+    # ---- lookup / pin --------------------------------------------------------
+    def match(self, full_keys: List[Tuple], tail_key: Optional[Tuple],
+              tail_len: int = 0) -> PrefixMatch:
+        """Longest leading run of *ready* entries; tail only on a full run.
+
+        ``tail_len`` is the prompt's tail-block token count (``keys_for``'s
+        third result); it is carried through on hit AND miss so publishers
+        can reuse the match for ``publish`` without recomputing keys."""
+        n = 0
+        for k in full_keys:
+            e = self.entries.get(k)
+            if e is None or not e.ready:
+                break
+            n += 1
+        tail = None
+        if tail_key is not None and n == len(full_keys):
+            e = self.entries.get(tail_key)
+            if e is not None and e.ready:
+                tail = e
+        covered = n * self.bt + (tail.tokens if tail is not None else 0)
+        return PrefixMatch(n, tail, covered, list(full_keys), tail_key,
+                           tail_len or (tail.tokens if tail else 0))
+
+    def acquire(self, rid: str, m: PrefixMatch) -> Dict[int, List[int]]:
+        """Pin the matched blocks for ``rid``; returns per-device block ids
+        of the full entries (prefix-ordered). The tail entry is pinned too —
+        the caller must immediately ``cow_fork`` it, since its block will
+        receive writes past the shared boundary."""
+        out: Dict[int, List[int]] = {d: [] for d in self.pools}
+        for k in m.full_keys[:m.n_full]:
+            e = self.entries[k]
+            self._pin(rid, e)
+            for d, bid in e.blocks.items():
+                out[d].append(bid)
+        if m.tail is not None:
+            self._pin(rid, m.tail)
+        return out
+
+    def cow_fork(self, rid: str, entry: PrefixEntry) -> Dict[int, int]:
+        """Copy-on-write: ``rid`` will write inside ``entry``'s block, so it
+        gives up its pin and clones the content into a private block instead.
+        Returns the per-device *source* block ids for the data-plane copy."""
+        self._unpin(rid, entry)
+        return dict(entry.blocks)
+
+    # ---- publish -------------------------------------------------------------
+    def publish(self, rid: str, blocks_by_device: Dict[int, List[int]],
+                full_keys: List[Tuple], tail_key: Optional[Tuple],
+                tail_len: int, agent_type: Optional[str] = None,
+                start: int = 0) -> int:
+        """Register ``rid``'s prompt blocks (``blocks_by_device`` is its
+        per-device block table, shared prefix first) as shared entries,
+        starting at block index ``start`` (the already-acquired run).
+
+        Publication stops at the first key another request already owns, so
+        a request's pinned blocks are always a contiguous leading run of its
+        table (the invariant offload/eviction stripping relies on). New
+        entries are *unready* until ``mark_ready`` — the prefill that fills
+        them has not executed yet."""
+        made: List[PrefixEntry] = []
+        i = start
+        for k in full_keys[start:]:
+            if k in self.entries:
+                break
+            e = PrefixEntry(k, {d: blocks_by_device[d][i]
+                                for d in self.pools}, self.bt)
+            self._register(rid, e, agent_type)
+            made.append(e)
+            i += 1
+        else:
+            if (tail_key is not None and i == len(full_keys)
+                    and tail_key not in self.entries):
+                e = PrefixEntry(tail_key, {d: blocks_by_device[d][i]
+                                           for d in self.pools},
+                                tail_len, is_tail=True)
+                self._register(rid, e, agent_type)
+                made.append(e)
+        if made:
+            self.unready.setdefault(rid, []).extend(made)
+            self.stats["published"] += len(made)
+        return len(made)
+
+    def mark_ready(self, rid: str) -> None:
+        """The publisher's prefill has executed: its entries hold real KV."""
+        for e in self.unready.pop(rid, []):
+            e.ready = True
+
+    # ---- release / refcounts -------------------------------------------------
+    def release(self, rid: str, req=None) -> None:
+        """Drop every pin held by ``rid`` (finish / eviction). When ``req``
+        is given, the shared block ids are stripped from its per-device
+        tables so the caller can free the remaining private blocks normally.
+        Entries at refcount zero go to the LRU (ready) or are deleted and
+        freed outright (never filled). Pins are dropped deepest-first so
+        the LRU reclaims a chain from its tail: match() walks the chain
+        from the root, so reclaiming the root first would orphan every
+        deeper cached block (valid KV that could never match again)."""
+        for e in reversed(self.pins.pop(rid, [])):
+            e.refs.discard(rid)
+            if req is not None:
+                for d, bid in e.blocks.items():
+                    lst = req.gpu_blocks_by_device.get(d)
+                    if lst and bid in lst:
+                        lst.remove(bid)
+            if not e.refs:
+                if e.ready:
+                    self._to_lru(e)
+                else:
+                    self._drop(e)
+        self.unready.pop(rid, None)
+
+    def pinned_count(self, rid: str) -> int:
+        return len(self.pins.get(rid, []))
+
+    def refcount(self, key: Tuple) -> int:
+        e = self.entries.get(key)
+        return len(e.refs) if e else 0
+
+    # ---- host tier (§6.3 CPU prefix index, mooncake mode) --------------------
+    def host_publish(self, host_blocks: Sequence[int],
+                     hashes: Sequence[Tuple]) -> None:
+        if self.host is not None:
+            self.host.index_hashes(host_blocks, hashes)
+
+    def host_match(self, hashes: Sequence[Tuple]) -> int:
+        if self.host is None:
+            return 0
+        return len(self.host.lookup_prefix(hashes))
+
+    # ---- internals -----------------------------------------------------------
+    def _pin(self, rid: str, e: PrefixEntry) -> None:
+        if not e.refs:
+            self._to_shared(e)
+        e.refs.add(rid)
+        self.pins.setdefault(rid, []).append(e)
+
+    def _unpin(self, rid: str, e: PrefixEntry) -> None:
+        e.refs.discard(rid)
+        pins = self.pins.get(rid)
+        if pins and e in pins:
+            pins.remove(e)
+        if not e.refs:
+            self._to_lru(e) if e.ready else self._drop(e)
+
+    def _register(self, rid: str, e: PrefixEntry, agent_type) -> None:
+        """Adopt freshly allocated request blocks as shared infrastructure:
+        ownership moves from the request to the store (its agent type no
+        longer holds them against its reservation floor)."""
+        self.entries[e.key] = e
+        e.refs.add(rid)
+        self.pins.setdefault(rid, []).append(e)
+        for d, bid in e.blocks.items():
+            self.by_block[(d, bid)] = e
+            p = self.pools[d]
+            p.meta[bid].owner = SHARED_OWNER
+            p.meta[bid].hash_key = e.key
+            if agent_type is not None:
+                p.type_held[agent_type] = max(
+                    0, p.type_held.get(agent_type, 0) - 1)
+
+    def _to_shared(self, e: PrefixEntry) -> None:
+        """LRU (reclaimable) -> pinned shared-held."""
+        for d, bid in e.blocks.items():
+            p = self.pools[d]
+            if bid in p.cached_blocks:
+                p.cached_blocks.remove(bid)
+                p.prefix_index.pop(e.key, None)
+            p.meta[bid].owner = SHARED_OWNER
+            p.meta[bid].hash_key = e.key
+        self.lru.pop(e.key, None)
+
+    def _to_lru(self, e: PrefixEntry) -> None:
+        """Refcount hit zero: content stays cached, blocks reclaimable."""
+        for d, bid in e.blocks.items():
+            p = self.pools[d]
+            p.meta[bid].owner = None
+            p.meta[bid].hash_key = e.key
+            p.prefix_index[e.key] = bid
+            p.cached_blocks.add(bid)
+        self.lru[e.key] = e
+        self.lru.move_to_end(e.key)
+
+    def _drop(self, e: PrefixEntry) -> None:
+        """Delete an entry and free its blocks (content never valid)."""
+        self.entries.pop(e.key, None)
+        self.lru.pop(e.key, None)
+        for d, bid in e.blocks.items():
+            self.by_block.pop((d, bid), None)
+            p = self.pools[d]
+            if bid in p.cached_blocks:
+                p.cached_blocks.remove(bid)
+                p.prefix_index.pop(e.key, None)
+            p.meta[bid].owner = None
+            p.meta[bid].hash_key = None
+            p.free_list.append(bid)
+
+    def _lru_victim(self, device: int) -> Optional[int]:
+        """Reclaim choice for ``DevicePool._pop_free``: oldest release."""
+        for e in self.lru.values():
+            return e.blocks.get(device)
+        return None
+
+    def _on_reclaim(self, device: int, bid: int, key) -> None:
+        """A pool reclaimed a cached block: prune the entry and free its
+        mirror copies on the other devices (a partial prefix is useless)."""
+        e = self.by_block.pop((device, bid), None)
+        if e is None:
+            return
+        self.entries.pop(e.key, None)
+        self.lru.pop(e.key, None)
+        self.stats["reclaimed"] += 1
+        for d, b in e.blocks.items():
+            if d == device:
+                continue
+            self.by_block.pop((d, b), None)
+            p = self.pools[d]
+            if b in p.cached_blocks:
+                p.cached_blocks.remove(b)
+                p.prefix_index.pop(e.key, None)
+                p.meta[b].hash_key = None
+                p.free_list.append(b)

@@ -266,6 +266,22 @@ def prefill(cfg, stacked, x, positions, cache_size: Optional[int] = None):
     return h, cache
 
 
+def _paged_ffn(cfg, lp, h):
+    """FFN sub-block of the paged serving bodies — dense SwiGLU only.
+
+    MoE expert FFNs are deliberately NOT run here: the paged bodies
+    operate on bucket-padded batches/chunks, and padded rows would route
+    through ``moe_ffn``'s sort-based capacity dispatch, crowding real
+    tokens out of expert capacity (outputs would diverge from the dense
+    path nondeterministically with bucket size). MoE requests therefore
+    keep the per-request dense prefill path (``JaxBackend._prefill_one``)
+    and attention-only paged decode; masked MoE routing is a ROADMAP
+    item."""
+    if "w1" in lp:
+        return h + L.mlp(lp, L.rms_norm(h, lp["mlp_norm"]))
+    return h
+
+
 def paged_decode(cfg, stacked, x, k_pool, v_pool, tables, positions,
                  attn_lens, slots):
     """Single-token batched decode against the *paged* KV pool.
@@ -299,8 +315,51 @@ def paged_decode(cfg, stacked, x, k_pool, v_pool, tables, positions,
         kl, vl = ops.kv_token_write(kl, vl, k[:, 0], v[:, 0], slots)
         out = ops.paged_attention(q[:, 0], kl, vl, tables, attn_lens)
         h = h + L.attn_out(lp, out[:, None])
-        if "w1" in lp:
-            h = h + L.mlp(lp, L.rms_norm(h, lp["mlp_norm"]))
+        h = _paged_ffn(cfg, lp, h)
+        return h, (kl, vl)
+
+    h, (k_pool, v_pool) = stack_scan(body, x, (stacked, k_pool, v_pool))
+    return h, k_pool, v_pool
+
+
+def paged_prefill(cfg, stacked, x, k_pool, v_pool, tables, q_pos,
+                  wpages, wstart, wcount):
+    """One chunk of batched suffix-only prefill against the *paged* pool.
+
+    The shared-prefix data plane: each sequence's cached prefix KV already
+    lives in pool blocks (via the prefix store); this computes and writes
+    only the C uncached suffix tokens of the chunk, then attends each
+    query over prefix + preceding suffix through the block table. Same
+    scan-over-stacked-params shape as ``paged_decode`` — per-layer pool
+    slices ride the scan, writes go through the Pallas chunk-write
+    (gridded per destination page), attention through the Pallas
+    paged-prefill kernel.
+
+    x:             (B, C, d) embedded suffix-chunk tokens
+    k_pool/v_pool: (L, N+1, bs, Hkv, D) paged pools (incl. scratch block)
+    tables:        (B, P) int32 block tables (cached prefix + own blocks)
+    q_pos:         (B, C) int32 absolute position per query (-1 = padded;
+                   padded queries are masked and never written)
+    wpages:        (B, PP) int32 destination pages of each row's write
+                   window, in order (scratch-page padded)
+    wstart:        (B,) int32 in-page offset of the row's first token
+    wcount:        (B,) int32 valid tokens per row (0 = padded row)
+    Returns (hidden (B, C, d), k_pool, v_pool).
+    """
+    from repro.kernels import ops
+
+    pos = jnp.maximum(q_pos, 0)                          # rope positions
+
+    def body(h, xs):
+        lp, kl, vl = xs
+        xn = L.rms_norm(h, lp["attn_norm"])
+        q, k, v = L.qkv_project(cfg, lp, xn)             # (B, C, ·, ·)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        kl, vl = ops.kv_chunk_write(kl, vl, k, v, wpages, wstart, wcount)
+        out = ops.paged_prefill_attention(q, kl, vl, tables, q_pos)
+        h = h + L.attn_out(lp, out)
+        h = _paged_ffn(cfg, lp, h)
         return h, (kl, vl)
 
     h, (k_pool, v_pool) = stack_scan(body, x, (stacked, k_pool, v_pool))

@@ -174,6 +174,38 @@ def paged_decode_step(cfg, params, k_pool, v_pool, tokens, tables,
     return logits[:, 0], k_pool, v_pool
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnums=(2, 3))
+def paged_prefill_step(cfg, params, k_pool, v_pool, tokens, tables,
+                       q_pos, wpages, wstart, wcount):
+    """Jitted chunked suffix-prefill step against the paged KV pool.
+
+    ``tokens`` (B, C) is one chunk of each request's uncached suffix;
+    ``q_pos`` (B, C) the absolute positions (-1 = padded query);
+    ``wpages``/``wstart``/``wcount`` describe each row's write window
+    (destination pages in order, first in-page offset, valid token count —
+    see ``kernels.kv_write.kv_chunk_write``). Cached prefix KV is read
+    from the pool through ``tables`` — only the suffix is computed. One
+    compilation per (config, batch/chunk/table bucket), same bucketing
+    contract as ``paged_decode_step``. Pools are DONATED: callers must
+    rebind them from the return value.
+
+    Returns (hidden (B, C, d), k_pool, v_pool) — callers take the rows
+    they need (e.g. the last valid suffix position) through ``head_logits``.
+    """
+    x = _embed_tokens(cfg, params, tokens)
+    h, k_pool, v_pool = D.paged_prefill(
+        cfg, params["layers"], x, k_pool, v_pool, tables, q_pos,
+        wpages, wstart, wcount)
+    return h, k_pool, v_pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def head_logits(cfg, params, h):
+    """Final norm + unembed for selected hidden rows. h: (B, d) -> (B, V)."""
+    return _lm_head(cfg, params, h[:, None])[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # cache structure (for dry-run specs and engine allocation)
 # ---------------------------------------------------------------------------

@@ -117,7 +117,7 @@ def test_block_hashes_prefix_property(tokens, bt):
         assert all(a != b for a, b in zip(h1[1:], h2[1:]))
 
 
-def test_prefix_cache_lookup_claims():
+def test_prefix_cache_lookup_and_reclaim():
     pool = DevicePool(8)
     toks = list(range(16))
     hashes = block_hashes(toks, 4)
@@ -125,7 +125,10 @@ def test_prefix_cache_lookup_claims():
     pool.set_hashes(blocks, hashes)
     pool.release(blocks, agent_type="t", cache=True)
     assert pool.lookup_prefix(hashes) == blocks
-    pool.claim_cached(blocks[:2], "r2")
-    assert pool.lookup_prefix(hashes) == []   # chain broken at block 0
-    # remaining cached blocks are still reclaimable as free space
-    assert pool.free == 6
+    assert pool.free == 8                    # cached blocks count as free
+    # allocation pressure reclaims cached blocks (free list first) and
+    # drops the reclaimed hashes from the index
+    pool.allocate(6, "r2", agent_type="t")
+    assert len(pool.cached_blocks) == 2
+    assert len(pool.lookup_prefix(hashes)) <= 2
+    assert pool.free == 2

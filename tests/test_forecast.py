@@ -1,0 +1,53 @@
+"""Forecaster (paper §4.1, Eq. 1) unit tests — previously untested."""
+import pytest
+
+from repro.core.forecast import Forecaster
+
+
+def test_no_history_uses_user_estimate():
+    f = Forecaster()
+    assert f.predict("search", 2.5) == 2.5
+
+
+def test_no_history_no_estimate_falls_back_to_system_default():
+    f = Forecaster(default_time=7.0)
+    assert f.predict("search") == 7.0
+
+
+def test_first_observation_seeds_history_directly():
+    f = Forecaster()
+    f.observe("search", 4.0)
+    assert f.history["search"] == 4.0
+    assert f.counts["search"] == 1
+
+
+def test_eq1_blend_of_user_estimate_and_history():
+    f = Forecaster(alpha=0.3)
+    f.observe("search", 4.0)
+    # t = alpha * t_user + (1 - alpha) * t_history
+    assert f.predict("search", 2.0) == pytest.approx(0.3 * 2.0 + 0.7 * 4.0)
+
+
+def test_history_only_when_user_estimate_missing():
+    f = Forecaster()
+    f.observe("search", 4.0)
+    assert f.predict("search") == 4.0
+
+
+def test_ewma_update_smooths_observations():
+    f = Forecaster(ewma_beta=0.5)
+    f.observe("db", 2.0)
+    f.observe("db", 6.0)
+    assert f.history["db"] == pytest.approx(0.5 * 2.0 + 0.5 * 6.0)
+    f.observe("db", 0.0)
+    assert f.history["db"] == pytest.approx(0.5 * 4.0)
+    assert f.counts["db"] == 3
+
+
+def test_function_types_are_independent():
+    f = Forecaster()
+    f.observe("search", 1.0)
+    f.observe("db", 9.0)
+    assert f.predict("search") == 1.0
+    assert f.predict("db") == 9.0
+    assert f.predict("unknown", 3.0) == 3.0

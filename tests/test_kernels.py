@@ -39,6 +39,57 @@ def test_paged_attention(dtype, b, h, hkv, d, bs, p, flat):
                                np.asarray(ref, np.float32), **tol(dtype))
 
 
+@pytest.mark.parametrize("flat", [True, False],
+                         ids=["flat(cpu)", "grid(tpu)"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,c,h,hkv,d,bs,p", [
+    (1, 4, 4, 4, 32, 8, 3),    # MHA, small chunk
+    (3, 8, 8, 2, 64, 16, 5),   # GQA 4:1
+    (2, 16, 16, 1, 64, 32, 2),  # MQA, chunk spans whole pages
+    (2, 5, 5, 5, 16, 8, 4),    # odd chunk + odd head count
+])
+def test_paged_prefill_attention(dtype, b, c, h, hkv, d, bs, p, flat):
+    """Chunked suffix-prefill attention vs the dense oracle, including
+    causal masking against arbitrary absolute positions and fully-masked
+    padded queries (q_pos = -1 -> zero rows, not NaN)."""
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    n = p * b + 4
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, c, h, d), dtype)
+    kp = jax.random.normal(ks[1], (n, bs, hkv, d), dtype)
+    vp = jax.random.normal(ks[2], (n, bs, hkv, d), dtype)
+    bt = jax.random.randint(ks[3], (b, p), 0, n)
+    qpos = jax.random.randint(ks[4], (b, c), -1, p * bs)
+    out = paged_prefill_attention(q, kp, vp, bt, qpos,
+                                  interpret=True, flat=flat)
+    ref = R.paged_prefill_attention_ref(q, kp, vp, bt, qpos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+    # padded queries produce exact zeros
+    dead = np.asarray(qpos) < 0
+    if dead.any():
+        got = np.asarray(out, np.float32)
+        assert np.all(got[dead] == 0.0)
+
+
+def test_paged_prefill_matches_decode_convention():
+    """A 1-token chunk at position ctx equals paged *decode* attention with
+    context ctx+1 — the suffix-prefill and decode paths agree at the seam."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    b, h, hkv, d, bs, p = 2, 4, 2, 32, 8, 3
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (p * b + 2, bs, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (p * b + 2, bs, hkv, d), jnp.float32)
+    bt = jax.random.randint(ks[3], (b, p), 0, p * b + 2)
+    ctx = jnp.asarray([5, 17], jnp.int32)
+    pre = paged_prefill_attention(q, kp, vp, bt, ctx[:, None], interpret=True)
+    dec = paged_attention(q[:, 0], kp, vp, bt, ctx + 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(pre[:, 0]), np.asarray(dec),
+                               atol=3e-5, rtol=3e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("m", [1, 4, 7])
 def test_block_gather_scatter(dtype, m):
@@ -92,6 +143,52 @@ def test_kv_token_write(dtype, b, flat):
     kr, vr = R.kv_token_write_ref(kp, vp, kn, vn, slots)
     np.testing.assert_array_equal(np.asarray(ko), np.asarray(kr))
     np.testing.assert_array_equal(np.asarray(vo), np.asarray(vr))
+
+
+@pytest.mark.parametrize("flat", [True, False],
+                         ids=["flat(cpu)", "grid(tpu)"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,c,start", [(1, 4, 2), (3, 8, 0), (2, 6, 7),
+                                       (2, 8, 3)])
+def test_kv_chunk_write(dtype, b, c, start, flat):
+    """Suffix-chunk scatter (prefill write path) matches the functional
+    ref: windows starting mid-page, spilling across page boundaries, with
+    per-row valid counts and padded rows (wcount=0) never writing. The
+    gridded variant owns one destination page per step, so live pages are
+    never revisited (the TPU aliasing hazard a per-token grid would have)."""
+    from repro.kernels.kv_write import kv_chunk_write
+    n, bs, hkv, d = 12, 8, 2, 16
+    pp = (c - 1) // bs + 2
+    ks = jax.random.split(KEY, 4)
+    kp = jax.random.normal(ks[0], (n, bs, hkv, d), dtype)
+    vp = jax.random.normal(ks[1], (n, bs, hkv, d), dtype)
+    kn = jax.random.normal(ks[2], (b, c, hkv, d), dtype)
+    vn = jax.random.normal(ks[3], (b, c, hkv, d), dtype)
+    rng = np.random.default_rng(6)
+    # each row gets its own disjoint pages; last row only partially valid
+    wpages = np.full((b, pp), n - 1, np.int32)          # scratch = page n-1
+    wcount = np.full((b,), c, np.int32)
+    wcount[-1] = max(c - 2, 1)
+    free = list(rng.permutation(n - 1))
+    for i in range(b):
+        npages = (start + int(wcount[i]) + bs - 1) // bs
+        wpages[i, :npages] = [free.pop() for _ in range(npages)]
+    wstart = np.full((b,), start, np.int32)
+    ko, vo = kv_chunk_write(kp, vp, kn, vn, jnp.asarray(wpages),
+                            jnp.asarray(wstart), jnp.asarray(wcount),
+                            interpret=True, flat=flat)
+    kr, vr = R.kv_chunk_write_ref(kp, vp, kn, vn, jnp.asarray(wpages),
+                                  jnp.asarray(wstart), jnp.asarray(wcount))
+    # scratch (page n-1) holds dead content and the variants differ there
+    # by design (scatter vs skip); every live page must match exactly
+    np.testing.assert_array_equal(np.asarray(ko)[:-1], np.asarray(kr)[:-1])
+    np.testing.assert_array_equal(np.asarray(vo)[:-1], np.asarray(vr)[:-1])
+    # untouched pages (outside every window, except scratch) are intact
+    touched = set(wpages.reshape(-1).tolist()) | {n - 1}
+    keep = np.array([p for p in range(n) if p not in touched], int)
+    if keep.size:
+        np.testing.assert_array_equal(np.asarray(ko)[keep],
+                                      np.asarray(kp)[keep])
 
 
 def test_kv_token_write_scratch_collisions_leave_live_blocks_alone():

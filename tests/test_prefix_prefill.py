@@ -1,0 +1,225 @@
+"""Shared-prefix data plane: suffix-only paged prefill + COW, end to end.
+
+Acceptance invariants of the prefix subsystem:
+  * two concurrent same-prefix requests share physical device blocks
+    (combined usage < 2x a single request) with per-request prefill
+    logits identical to unshared full prefill;
+  * identical prompts share everything incl. the partial tail block via a
+    copy-on-write fork, and the sharer's decode matches an independent run;
+  * a preempted request re-pins its surviving prefix blocks and recomputes
+    only the suffix;
+  * a prompt exceeding its block allocation is surfaced (counted metric +
+    warning), never silently truncated.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.backend import JaxBackend
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.graph import AppGraph
+from repro.core.request import ReqState
+from repro.models import model as M
+
+CFG = ModelConfig(name="tiny-f32", arch_type="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=50000, dtype="float32")
+BT = A100_PCIE.block_tokens   # 16
+
+
+def mk_engine(gpu_blocks=64, **kw):
+    ecfg = EngineConfig.preset("vllm_prefix", gpu_blocks=gpu_blocks,
+                               host_blocks=32, max_running=8,
+                               sched_quantum=4, **kw)
+    backend = JaxBackend(CFG, ecfg, A100_PCIE)
+    return Engine(ecfg, A100_PCIE, backend=backend), backend
+
+
+def submit_one(eng, prompt, decode_len=8, name="n0"):
+    g = AppGraph(f"app{len(eng.apps)}")
+    g.add_agent(name, "w", len(prompt), decode_len=decode_len)
+    app_id = eng.submit_app(g, eng.clock,
+                            prompt_tokens={0: list(prompt)})
+    return app_id
+
+
+def step(eng):
+    eng._process_events_until(eng.clock)
+    eng.schedule_step()
+    if eng.running:
+        eng.clock += eng.execute_iteration()
+    else:
+        eng.clock += 1e-3
+
+
+def dense_prefill_logits(backend, prompt):
+    toks = [t % backend.cfg.vocab_size for t in prompt]
+    batch = {"tokens": jnp.asarray([toks], jnp.int32)}
+    logits, _ = M.prefill(backend.cfg, backend.params, batch)
+    return np.asarray(logits[0, 0], np.float32)
+
+
+def test_concurrent_same_prefix_requests_share_blocks_same_logits():
+    rng = np.random.default_rng(0)
+    prefix = [int(t) for t in rng.integers(0, 50000, 3 * BT)]  # 3 full blocks
+    sfx_a = [int(t) for t in rng.integers(0, 50000, 10)]
+    sfx_b = [int(t) for t in rng.integers(0, 50000, 7)]
+
+    eng, backend = mk_engine()
+    submit_one(eng, prefix + sfx_a, decode_len=64, name="a")
+    step(eng)                      # admits + prefills A, publishes prefix
+    used_single = eng.cfg.gpu_blocks - eng.pools[0].free
+
+    submit_one(eng, prefix + sfx_b, decode_len=64, name="b")
+    step(eng)                      # B admitted, pins A's prefix blocks
+    reqs = {r.rid.split("/")[-1]: r for r in eng.running}
+    ra, rb = reqs["a"], reqs["b"]
+    assert rb.shared_prefix_blocks >= 3
+    assert rb.gpu_blocks[:3] == ra.gpu_blocks[:3]      # same physical blocks
+    assert rb.prefix_cached_tokens == 3 * BT
+
+    # combined block usage well under 2x a single request
+    used_both = eng.cfg.gpu_blocks - eng.pools[0].free
+    assert used_both < 2 * used_single
+
+    # B's prefill logits (computed from the shared prefix KV + its own
+    # suffix only) match an unshared dense prefill of its full prompt
+    got = backend.last_prefill_logits[rb.rid]
+    want = dense_prefill_logits(backend, prefix + sfx_b)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+    # and A's too (the publisher went through the same paged path)
+    np.testing.assert_allclose(backend.last_prefill_logits[ra.rid],
+                               dense_prefill_logits(backend, prefix + sfx_a),
+                               atol=2e-4, rtol=2e-4)
+    # suffix-only: B recomputed just its suffix
+    assert eng.metrics["prefix_saved_tokens"] >= 3 * BT
+
+
+def test_identical_prompts_cow_fork_and_decode_matches_reference():
+    rng = np.random.default_rng(1)
+    prompt = [int(t) for t in rng.integers(0, 50000, 2 * BT + 5)]  # tail = 5
+
+    # reference: the same prompt decoded alone on a fresh engine
+    ref_eng, ref_backend = mk_engine()
+    submit_one(ref_eng, prompt, decode_len=12)
+    for _ in range(30):
+        step(ref_eng)
+        if not (ref_eng.running or ref_eng.waiting or ref_eng.events):
+            break
+    (ref_rid, ref_toks), = ref_backend.generated.items()
+    assert len(ref_toks) >= 12
+
+    eng, backend = mk_engine()
+    submit_one(eng, prompt, decode_len=12)
+    step(eng)
+    submit_one(eng, prompt, decode_len=12)
+    step(eng)                      # identical prompt: full + tail hit + COW
+    assert eng.metrics["cow_forks"] == 1
+    reqs = {r.rid: r for r in eng.running}
+    assert any(r.prefix_cached_tokens == len(prompt) for r in reqs.values())
+    for _ in range(30):
+        step(eng)
+        if not (eng.running or eng.waiting or eng.events):
+            break
+    for rid, toks in backend.generated.items():
+        assert toks[:12] == ref_toks[:12], rid
+
+
+def test_preempted_request_reuses_surviving_prefix_blocks():
+    rng = np.random.default_rng(2)
+    prompt = [int(t) for t in rng.integers(0, 50000, 3 * BT)]
+
+    eng, backend = mk_engine()
+    submit_one(eng, prompt, decode_len=24)
+    step(eng)
+    (req,) = eng.running
+    shared = list(req.gpu_blocks[:req.shared_prefix_blocks])
+    assert shared, "publisher should pin its own published prefix"
+    for _ in range(2):
+        step(eng)
+    gen_before = list(backend.generated[req.rid])
+    assert gen_before
+
+    eng._evict(req, None)          # preempt: private blocks freed,
+    saved0 = eng.metrics["prefix_saved_tokens"]
+    step(eng)                      # re-admitted: prefix re-pinned
+    assert req.state == ReqState.RUNNING
+    assert req.gpu_blocks[:len(shared)] == shared
+    assert req.prefix_cached_tokens >= 3 * BT - BT  # at least the full blocks
+    assert eng.metrics["prefix_saved_tokens"] > saved0
+    # decode continues identically after the suffix-only recompute
+    for _ in range(20):
+        step(eng)
+        if not (eng.running or eng.waiting or eng.events):
+            break
+    assert backend.generated[req.rid][:len(gen_before)] == gen_before
+
+
+def test_copy_out_moves_only_private_blocks_with_shared_prefix():
+    """Offload of a request holding a pinned shared prefix: host buffers
+    are sized for the private blocks only, and the round trip restores
+    exactly those (the prefix never leaves the device)."""
+    from repro.core.graph import AppGraph as AG
+    from repro.core.request import Request
+    ecfg = EngineConfig.preset("baseline", gpu_blocks=24, host_blocks=8)
+    backend = JaxBackend(CFG, ecfg, A100_PCIE)
+    rng = np.random.default_rng(5)
+    prompt = [int(t) for t in rng.integers(0, 50000, 3 * BT)]
+    g = AG("t")
+    node = g.add_agent("a", "w", len(prompt), decode_len=8)
+    r = Request(rid="r", app_id="a", node=node, graph=g, arrival=0.0,
+                prompt_tokens=prompt)
+    r.gpu_blocks_by_device[0] = [1, 2, 3]
+    backend.decode([r])
+    r.shared_prefix_blocks = 1                  # block 1 = pinned prefix
+    snap_priv = np.asarray(backend.cache.k[:, jnp.asarray([2, 3])]).copy()
+    r.host_blocks = [0, 1]                      # sized for private only
+    backend.copy_out(r)
+    backend.cache.k = backend.cache.k.at[:, jnp.asarray([2, 3])].set(0)
+    backend.cache.v = backend.cache.v.at[:, jnp.asarray([2, 3])].set(0)
+    r.gpu_blocks_by_device[0] = [1]             # engine kept the prefix
+    r.reserved_upload_blocks = [6, 7]
+    backend.copy_in(r)
+    np.testing.assert_array_equal(
+        np.asarray(backend.cache.k[:, jnp.asarray([6, 7])]), snap_priv)
+
+
+def test_prefix_sharing_composes_with_offload_end_to_end():
+    """Reactive pressure offload + device prefix cache + real backend: the
+    reviewer-flagged interaction — requests get offloaded while holding
+    pinned shared prefix blocks (only private blocks may move)."""
+    from repro.data.workloads import build_workload
+    ecfg = EngineConfig.preset("mooncake", gpu_blocks=32, host_blocks=128,
+                               max_running=4, prefix_cache=True)
+    backend = JaxBackend(CFG, ecfg, A100_PCIE)
+    eng = Engine(ecfg, A100_PCIE, backend=backend)
+    for t, g in build_workload("deep_research", qps=8.0, n_apps=6, seed=0):
+        for n in g.nodes.values():
+            n.prompt_len = min(n.prompt_len, 48)
+            n.decode_segments = [min(s, 8) for s in n.decode_segments]
+        eng.submit_app(g, t)
+    rep = eng.run(max_time=8000)
+    assert rep["apps_finished"] == 6
+    assert rep["offloads"] >= 1
+    assert rep["prefix_hits"] > 0
+    p = eng.pools[0]
+    assert p.free + len(p.pending_free) == p.num_blocks
+    assert not eng.prefix_store.pins
+
+
+def test_prompt_exceeding_allocation_is_counted_not_silent():
+    from repro.core.graph import AppGraph as AG
+    from repro.core.request import Request
+    ecfg = EngineConfig.preset("baseline", gpu_blocks=16, host_blocks=8)
+    backend = JaxBackend(CFG, ecfg, A100_PCIE)
+    g = AG("t")
+    node = g.add_agent("a", "w", 3 * BT, decode_len=8)
+    rng = np.random.default_rng(3)
+    r = Request(rid="r", app_id="a", node=node, graph=g, arrival=0.0,
+                prompt_tokens=[int(t) for t in rng.integers(0, 50000, 3 * BT)])
+    r.gpu_blocks_by_device[0] = [1, 2]          # 2 blocks for a 3-block prompt
+    with pytest.warns(UserWarning, match="prefill truncation"):
+        backend.decode([r])
+    assert backend.truncated_prompt_tokens == BT

@@ -1,0 +1,277 @@
+"""Ref-counted COW prefix store: unit + engine-level control-plane tests."""
+import pytest
+
+from repro.core.block_pool import DevicePool, HostPool, block_hashes
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.data.workloads import build_workload
+from repro.kvcache.prefix_store import SHARED_OWNER, PrefixStore
+
+BT = 4
+
+
+def mk_store(num_devices=1, blocks=32):
+    pools = [DevicePool(blocks, d) for d in range(num_devices)]
+    host = HostPool(32)
+    return PrefixStore(pools, host, BT), pools, host
+
+
+def prep(store, pools, rid, tokens, start_block=0):
+    """Allocate + publish ``tokens`` worth of prompt blocks for ``rid``."""
+    full, tail_key, tail_len = store.keys_for(tokens)
+    need = -(-len(tokens) // BT)
+    bbd = {p.device: p.allocate(need, rid, agent_type="t") for p in pools}
+    store.publish(rid, bbd, full, tail_key, tail_len, agent_type="t")
+    store.mark_ready(rid)
+    return full, tail_key, tail_len, bbd
+
+
+def pool_state(p: DevicePool):
+    owned = {b for b, m in p.meta.items() if m.owner is not None}
+    return len(p.free_list), len(p.cached_blocks), owned
+
+
+def test_publish_acquire_refcounts_and_lru_lifecycle():
+    store, pools, _ = mk_store()
+    p = pools[0]
+    toks = list(range(8))                       # 2 full blocks, no tail
+    full, tk, tl, bbd = prep(store, pools, "a", toks)
+    assert tk is None
+    # publisher holds the pin; blocks owned by the shared sentinel
+    assert store.pinned_count("a") == 2
+    for b in bbd[0]:
+        assert p.meta[b].owner == SHARED_OWNER
+    # type_held transferred away from the publisher's agent type
+    assert p.type_held["t"] == 0
+
+    # a second request pins the same physical blocks (no exclusive claim)
+    m = store.match(full, None)
+    assert m.n_full == 2 and m.tokens == 8
+    got = store.acquire("b", m)
+    assert got[0] == bbd[0]
+    assert store.refcount(full[0]) == 2
+
+    # releases: refcount 2 -> 1 -> 0 (LRU, reclaimable but still indexed)
+    store.release("a")
+    assert store.refcount(full[0]) == 1
+    assert not p.cached_blocks
+    store.release("b")
+    assert store.refcount(full[0]) == 0
+    assert set(bbd[0]) == p.cached_blocks
+    assert p.free == p.num_blocks               # cached counts as free
+    # still matchable from the LRU
+    m2 = store.match(full, None)
+    assert m2.n_full == 2
+
+
+def test_reclaim_under_pressure_prunes_index_lru_first():
+    store, pools, _ = mk_store(blocks=6)
+    p = pools[0]
+    fa, _, _, ba = prep(store, pools, "a", list(range(8)))      # blocks x2
+    fb, _, _, bb = prep(store, pools, "b", list(range(100, 108)))
+    store.release("a")                                          # oldest
+    store.release("b")
+    # exhaust the free list; next allocations reclaim cached blocks LRU-first
+    p.allocate(2, "x")                                          # free list
+    p.allocate(2, "y")                                          # reclaims a's
+    assert store.match(fa, None).n_full == 0                    # pruned
+    assert store.match(fb, None).n_full == 2                    # survives
+    p.allocate(2, "z")
+    assert store.match(fb, None).n_full == 0
+    assert not store.entries and not store.lru and not store.by_block
+
+
+def test_reclaim_takes_chain_tail_first_keeping_leading_run_matchable():
+    """Reclaiming the chain ROOT would orphan every deeper cached block
+    (match walks from the root); the LRU must give up depth, not roots."""
+    store, pools, _ = mk_store(blocks=3)
+    p = pools[0]
+    full, _, _, _ = prep(store, pools, "a", list(range(12)))  # 3-block chain
+    store.release("a")
+    p.allocate(1, "x")              # pressure: reclaims ONE cached block
+    m = store.match(full, None)
+    assert m.n_full == 2            # leading run survives (tail reclaimed)
+    p.allocate(1, "y")
+    assert store.match(full, None).n_full == 1
+
+
+def test_tail_match_and_cow_fork():
+    store, pools, _ = mk_store()
+    p = pools[0]
+    toks = list(range(11))                      # 2 full blocks + 3-token tail
+    full, tk, tl, bbd = prep(store, pools, "a", toks)
+    assert tk is not None and tl == 3
+    assert store.pinned_count("a") == 3         # 2 full + tail
+
+    m = store.match(full, tk)
+    assert m.tail is not None and m.tokens == 11
+    store.acquire("b", m)
+    assert len(m.tail.refs) == 2
+    src = store.cow_fork("b", m.tail)
+    assert src[0] == bbd[0][2]
+    assert m.tail.refs == {"a"}                 # b's pin dropped
+    assert store.pinned_count("b") == 2         # full blocks only
+
+
+def test_tail_diverging_tokens_do_not_match():
+    store, pools, _ = mk_store()
+    toks = list(range(11))
+    full, tk, tl, _ = prep(store, pools, "a", toks)
+    other = toks[:10] + [999]
+    f2, tk2, _ = store.keys_for(other)
+    assert f2 == full and tk2 != tk
+    m = store.match(f2, tk2)
+    assert m.n_full == 2 and m.tail is None     # full blocks hit, tail miss
+
+
+def test_unready_entries_never_match_and_free_on_release():
+    store, pools, _ = mk_store()
+    p = pools[0]
+    toks = list(range(8))
+    full, tk, tl = store.keys_for(toks)
+    bbd = {0: p.allocate(2, "a", agent_type="t")}
+    store.publish("a", bbd, full, tk, tl, agent_type="t")
+    assert store.match(full, None).n_full == 0  # not ready yet
+    # publisher evicted before its prefill ran: entries deleted, blocks freed
+    store.release("a")
+    assert not store.entries
+    assert p.free == p.num_blocks and not p.cached_blocks
+
+
+def test_multi_device_entries_mirror_blocks():
+    store, pools, _ = mk_store(num_devices=2)
+    toks = list(range(8))
+    full, tk, tl, bbd = prep(store, pools, "a", toks)
+    m = store.match(full, None)
+    got = store.acquire("b", m)
+    assert got[0] == bbd[0] and got[1] == bbd[1]
+    store.release("a")
+    store.release("b")
+    # reclaim on device 0 frees the mirror copy on device 1 too
+    pools[0].allocate(pools[0].num_blocks, "x")
+    assert not store.entries
+    assert pools[1].free == pools[1].num_blocks
+    assert not pools[1].cached_blocks
+
+
+def test_publish_stops_at_foreign_entry_keeps_pins_contiguous():
+    store, pools, _ = mk_store()
+    p = pools[0]
+    toks = list(range(12))                      # 3 full blocks
+    full, _, _, bbd = prep(store, pools, "a", toks)
+    # simulate a mid-chain reclaim: a's entry 0 is gone, 1 and 2 remain
+    store.release("a")
+    e0 = store.entries[full[0]]
+    store._drop(e0)
+    # a new request matches nothing (chain broken at block 0) and must not
+    # publish duplicates past the foreign entries at index 1..2
+    m = store.match(full, None)
+    assert m.n_full == 0
+    blocks = {0: p.allocate(3, "b", agent_type="t")}
+    made = store.publish("b", blocks, full, None, 0, agent_type="t",
+                         start=0)
+    assert made == 1                            # only block 0 republished
+    assert store.pinned_count("b") == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level: multi-device routing, sharing, lifecycle under load
+# ---------------------------------------------------------------------------
+
+def run(mode, n_apps=6, qps=1.0, blocks=768, seed=1, **kw):
+    eng = Engine(EngineConfig.preset(mode, gpu_blocks=blocks,
+                                     max_running=48, **kw), A100_PCIE)
+    for t, g in build_workload("code_writer", "d1", qps=qps, n_apps=n_apps,
+                               seed=seed):
+        eng.submit_app(g, t)
+    rep = eng.run(max_time=50000)
+    return eng, rep
+
+
+def test_multi_device_prefix_hits_and_conservation():
+    """Seed bug: prefix lookup consulted pools[0] only, so TP configs
+    mis-accounted hits and never claimed mirror blocks. The store routes
+    through every device pool."""
+    eng, rep = run("vllm_prefix", n_apps=8, num_devices=2)
+    assert rep["apps_finished"] == 8
+    assert rep["prefix_hits"] > 0
+    for p in eng.pools:
+        assert p.free + len(p.pending_free) == p.num_blocks
+    # no dangling pins or unready entries after the run
+    assert not eng.prefix_store.pins
+    assert not eng.prefix_store.unready
+
+
+def test_prefix_sharing_is_concurrent_not_exclusive():
+    """Two live same-prefix requests must hold the same physical blocks
+    (the seed's claim_cached popped the index: sharing was impossible)."""
+    from repro.core.graph import AppGraph
+    eng = Engine(EngineConfig.preset("vllm_prefix", gpu_blocks=256,
+                                     max_running=8), A100_PCIE)
+    g = AppGraph("app")
+    a = g.add_agent("a", "w", 64, decode_len=64)
+    b = g.add_agent("b", "w", 64, decode_len=64, deps=[a])
+    c = g.add_agent("c", "w", 64, decode_len=64, deps=[a])
+    eng.submit_app(g, 0.0)
+    # run until b and c (same app-level prefix as a) are both running
+    for _ in range(200):
+        eng._process_events_until(eng.clock)
+        eng.schedule_step()
+        if not (eng.running or eng.waiting or eng.events):
+            break
+        if eng.running or eng.waiting:
+            eng.clock += eng.execute_iteration()
+        else:
+            eng.clock = eng.events[0][0]
+        live = {r.rid.split("/")[-1]: r for r in eng.running}
+        if "b" in live and "c" in live:
+            rb, rc = live["b"], live["c"]
+            if rb.shared_prefix_blocks and rc.shared_prefix_blocks:
+                shared_b = rb.gpu_blocks[:rb.shared_prefix_blocks]
+                shared_c = rc.gpu_blocks[:rc.shared_prefix_blocks]
+                assert set(shared_b) & set(shared_c), \
+                    "no physical block shared between same-prefix requests"
+                return
+    pytest.fail("same-prefix requests never shared blocks")
+
+
+def test_engine_modes_unaffected_without_prefix_cache():
+    """tokencake/offload paths see shared_prefix_blocks == 0 everywhere."""
+    eng, rep = run("tokencake", n_apps=6)
+    assert rep["apps_finished"] == 6
+    assert rep["prefix_hits"] == 0 and rep["cow_forks"] == 0
+    assert not eng.prefix_store.entries
+
+
+def test_publisher_finishing_within_first_quantum_still_caches_prefix():
+    """A request whose whole decode fits in one quantum is admitted,
+    prefilled, and finished inside a single execute_iteration. Its prefix
+    entries must flip ready BEFORE its release runs, or the prompt KV is
+    dropped as 'never filled' and a later same-prefix request misses."""
+    from repro.core.graph import AppGraph
+    eng = Engine(EngineConfig.preset("vllm_prefix", gpu_blocks=64,
+                                     max_running=8, sched_quantum=8),
+                 A100_PCIE)
+    prompt = list(range(32))
+    g = AppGraph("a")
+    g.add_agent("n", "w", len(prompt), decode_len=4)   # 4 < quantum
+    eng.submit_app(g, 0.0, prompt_tokens={0: prompt})
+    eng.run(max_time=1000)
+    assert eng.prefix_store.lru, "prefix entries were dropped, not cached"
+    g2 = AppGraph("b")
+    g2.add_agent("n", "w", len(prompt), decode_len=4)
+    eng.submit_app(g2, eng.clock + 1.0, prompt_tokens={0: prompt})
+    rep = eng.run(max_time=2000)
+    assert rep["apps_finished"] == 2
+    assert rep["prefix_hits"] > 0
+
+
+def test_block_hashes_offset_dependence():
+    """Chained hashes: identical tokens at different block offsets must
+    hash differently (content-only hashing would alias them)."""
+    rep4 = [7, 7, 7, 7]
+    h_first = block_hashes(rep4, 4)              # block 0
+    h_second = block_hashes(list(range(4)) + rep4, 4)  # same content, block 1
+    assert h_first[0] != h_second[1]
+    # and an extra seed (e.g. model id) changes every hash
+    assert block_hashes(rep4, 4, extra=("m2",)) != h_first
