@@ -19,4 +19,15 @@ def run(csv: CsvWriter, quick: bool = False):
                     f"avg_s={rep['avg_latency']:.1f};"
                     f"tput_rps={rep['throughput_rps']:.4f};"
                     f"cpu_prefix_hits={rep['cpu_prefix_hits']}")
+        # both tiers on one radix tree: host hits are deduplicated against
+        # device coverage (cpu_prefix_hits counts only blocks the device
+        # tier could not serve; prefix_saved_tokens is device-tier only)
+        rep = run_engine("mooncake", qps=qps, platform=A100_PCIE,
+                         prefix_cache=True)
+        out[(qps, "mooncake_prefix")] = rep
+        csv.row(f"fig12.qps{qps}.mooncake_prefix", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"cpu_prefix_hits={rep['cpu_prefix_hits']};"
+                f"prefix_hits={rep['prefix_hits']};"
+                f"prefix_saved_tokens={rep['prefix_saved_tokens']}")
     return out

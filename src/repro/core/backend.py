@@ -56,9 +56,15 @@ def paged_prefill_chunks(cfg, params, cache, entries, chunk: int = 32):
 
     ``entries``: list of (blocks, tokens, cached) per request — the block
     table, the full target cache-token list, and the leading token count
-    already resident in the pool (shared prefix). Computes and writes only
-    ``tokens[cached:]`` per request, ``chunk`` tokens per jitted launch,
-    shapes padded to power-of-two buckets. Mutates ``cache.k/v`` (the
+    already resident in the pool (shared prefix). ``cached`` is **token**-
+    granular, not block-granular: with the radix prefix index a request
+    can branch off a shared prompt mid-block, in which case its table
+    holds the shared full blocks followed by a COW-forked partial block
+    whose first ``cached % block_size`` positions are already valid. The
+    suffix then starts at an arbitrary in-block offset — ``write_window``
+    and the absolute ``q_pos`` coordinates handle that natively. Computes
+    and writes only ``tokens[cached:]`` per request, ``chunk`` tokens per
+    jitted launch, shapes padded to power-of-two buckets. Mutates ``cache.k/v`` (the
     jitted step donates the pools). Returns the final-suffix-position
     hidden row per entry (None when the suffix is empty)."""
     suffix = [toks[cached:] for _, toks, cached in entries]

@@ -187,14 +187,18 @@ class DevicePool:
 
 
 class HostPool:
-    """CPU offload pool: free-list recycling, CPU prefix-cache index (§6.3)."""
+    """CPU offload pool: free-list recycling (§6.3). The CPU prefix index
+    lives in ``kvcache.prefix_store``'s radix tree (host ids attached to
+    token-path nodes); ``release_cb`` unhooks it when blocks free."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self.free_list: List[int] = list(range(num_blocks))
         self.owner: Dict[int, Optional[str]] = {}
-        self.hash_of: Dict[int, Tuple] = {}
-        self.prefix_index: Dict[Tuple, int] = {}   # CPU prefix cache
+        # prefix-store hook (kvcache.prefix_store): fires with the freed
+        # block ids so the radix index can unhook its host-tier entries.
+        # None when no store is attached.
+        self.release_cb = None
 
     @property
     def free(self) -> int:
@@ -215,24 +219,9 @@ class HostPool:
     def release(self, blocks: Sequence[int]) -> None:
         for b in blocks:
             self.owner.pop(b, None)
-            h = self.hash_of.pop(b, None)
-            if h is not None:
-                self.prefix_index.pop(h, None)
             self.free_list.append(b)
-
-    def index_hashes(self, blocks: Sequence[int], hashes: Sequence[Tuple]):
-        for b, h in zip(blocks, hashes):
-            self.hash_of[b] = h
-            self.prefix_index[h] = b
-
-    def lookup_prefix(self, hashes: Sequence[Tuple]) -> List[int]:
-        hit = []
-        for h in hashes:
-            b = self.prefix_index.get(h)
-            if b is None:
-                break
-            hit.append(b)
-        return hit
+        if self.release_cb is not None and blocks:
+            self.release_cb(blocks)
 
 
 def block_hashes(token_ids: Sequence[int], block_tokens: int,

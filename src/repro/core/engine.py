@@ -335,14 +335,17 @@ class Engine:
         n = req.offloadable_blocks
         req.host_blocks = self.host.allocate(n, req.rid)
         bt = self.platform.block_tokens
-        # host prefix lookups walk the hash chain from the root, so only a
-        # root-anchored run is ever matchable: when a shared device prefix
-        # stays behind (shared > 0), indexing hashes[shared:] would add
-        # dead, unreachable entries — skip it
-        hashes = req.block_hash_keys(bt)[:n] if shared == 0 else []
-        if hashes and (self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled):
-            self.prefix_store.host_publish(req.host_blocks[:len(hashes)],
-                                           hashes)
+        # only whole prompt blocks are content-addressable (decode-grown
+        # blocks past the prompt are private). The radix tree attaches
+        # host ids at any depth along the token path, so a suffix offload
+        # behind a device-resident shared prefix is still matchable (the
+        # PR 2 hash chain could only index root-anchored runs)
+        n_prompt_full = len(req.prompt_tokens) // bt
+        idxable = max(0, min(shared + n, n_prompt_full) - shared)
+        if idxable and (self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled):
+            self.prefix_store.host_publish(req.prompt_tokens,
+                                           req.host_blocks[:idxable],
+                                           start=shared)
         for p in self.pools:
             p.mark_pending_free(
                 req.gpu_blocks_by_device.get(p.device, [])[shared:],
@@ -663,27 +666,25 @@ class Engine:
     def _prefix_match(self, req: Request) -> PrefixMatch:
         """Longest shared-prefix hit for this request's prompt.
 
-        Device tier (cfg.prefix_cache): the ref-counted store, consulted
-        per-device (a hit requires the blocks on every TP mirror). Matching
-        covers *recompute* admissions too — a preempted request re-pins its
-        surviving prefix blocks and prefills only the suffix. Host tier
-        (cfg.cpu_prefix_cache, mooncake): index hit saves no device
-        recompute here, modeled as H2D in timing (§6.3)."""
-        bt = self.platform.block_tokens
+        Device tier (cfg.prefix_cache): the radix-tree store, which
+        matches at arbitrary branch points — mid-block divergence shares
+        the full blocks and COW-forks the partial one (a hit requires the
+        blocks on every TP mirror). Matching covers *recompute* admissions
+        too — a preempted request re-pins its surviving prefix blocks and
+        prefills only the suffix. Host tier (cfg.cpu_prefix_cache,
+        mooncake): walks the same tree; a hit saves no device recompute
+        here, modeled as H2D in timing (§6.3). Host hits are deduplicated
+        against device coverage — only blocks the device tier cannot serve
+        count as cpu hits, so ``prefix_saved_tokens`` (device-tier) and
+        ``cpu_prefix_hits`` never double-count a block."""
         m = PrefixMatch()
         if self.cfg.prefix_cache:
-            full = req.block_hash_keys(bt)
-            _, tail_key, rem = self.prefix_store.keys_for(req.prompt_tokens,
-                                                          full)
-            # the match carries the keys even on a miss so _publish_prefix
-            # need not recompute them
-            m = self.prefix_store.match(full, tail_key, rem)
-            if m:
-                return m
+            m = self.prefix_store.match(req.prompt_tokens)
         if self.cfg.cpu_prefix_cache and req.generated_total == 0:
             # carried on the match, counted only when admission commits —
             # a deferred request must not re-count its hit every retry
-            m.cpu_hits = self.prefix_store.host_match(req.block_hash_keys(bt))
+            host_n = self.prefix_store.host_match(req.prompt_tokens)
+            m.cpu_hits = max(host_n - m.n_full, 0)
         return m
 
     def _claim_prefix(self, req: Request, m: PrefixMatch):
@@ -701,16 +702,17 @@ class Engine:
         req.prefix_cached_tokens = 0
 
     def _commit_prefix(self, req: Request, m: PrefixMatch):
-        """Admission succeeded: count the hit and COW-fork a matched *tail*
-        block — it would receive writes past the shared boundary (the
-        prompt remainder / first decode token lands mid-block), so the
-        store drops the pin and the data plane clones the content into the
-        request's first private block."""
+        """Admission succeeded: count the hit and COW-fork the partially
+        matched block — the request diverges (or decodes) mid-block, so
+        writes would land past the shared boundary. The store drops the
+        source pins and the data plane clones the content into the
+        request's first private block; the suffix prefill then overwrites
+        everything from the divergence offset on."""
         if m.n_full:
             self.metrics["prefix_hits"] += m.n_full
         self.metrics["prefix_saved_tokens"] += m.tokens
-        if m.tail is not None:
-            src = self.prefix_store.cow_fork(req.rid, m.tail)
+        if m.partial_len:
+            src = self.prefix_store.cow_fork(req.rid, m)
             self.metrics["cow_forks"] += 1
             if self.backend is not None:
                 # clone every TP mirror; the backend decides which devices
@@ -720,13 +722,13 @@ class Engine:
                     self.backend.copy_blocks([s], [dst], device=d)
 
     def _publish_prefix(self, req: Request, m: PrefixMatch):
-        """Register the request's prompt blocks as shared entries (live
+        """Register the request's prompt blocks as shared entries along
+        its token path, splitting the radix tree at the branch point (live
         sharing: concurrent same-prefix requests pin them once the prefill
-        has executed and ``mark_ready`` fires). Reuses the keys the match
-        already computed."""
+        has executed and ``mark_ready`` fires)."""
         made = self.prefix_store.publish(
-            req.rid, req.gpu_blocks_by_device, m.full_keys, m.tail_key,
-            m.tail_len, agent_type=req.agent_type, start=m.n_full)
+            req.rid, req.prompt_tokens, req.gpu_blocks_by_device,
+            start=m.n_full, agent_type=req.agent_type)
         if made:
             self._pending_ready.append(req.rid)
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 from repro.core.graph import AgentNode, AppGraph, FuncNode
 
@@ -65,7 +65,10 @@ class Request:
     # ``shared_prefix_blocks`` entries of every device's block table are
     # store-pinned shared blocks (read-only, not offloadable); the first
     # ``prefix_cached_tokens`` positions hold KV the prefill must not
-    # recompute.
+    # recompute. With the radix index the token count is NOT necessarily
+    # block-aligned: a mid-block branch point leaves a COW-forked partial
+    # block at table index ``shared_prefix_blocks`` whose leading
+    # ``prefix_cached_tokens % block_tokens`` positions are valid.
     shared_prefix_blocks: int = 0
     prefix_cached_tokens: int = 0
 
@@ -135,13 +138,3 @@ class Request:
 
     def blocks_needed(self, block_tokens: int, extra_tokens: int = 0) -> int:
         return -(-(self.context_len + extra_tokens) // block_tokens)
-
-    _hash_cache: Optional[Tuple[int, list]] = None
-
-    def block_hash_keys(self, block_tokens: int) -> list:
-        """Cached per-block prefix hashes of the prompt."""
-        if self._hash_cache is None or self._hash_cache[0] != block_tokens:
-            from repro.core.block_pool import block_hashes
-            self._hash_cache = (block_tokens,
-                                block_hashes(self.prompt_tokens, block_tokens))
-        return self._hash_cache[1]

@@ -1,75 +1,84 @@
 """Ref-counted copy-on-write shared-prefix KV store (control plane).
 
 Tokencake's multi-agent workloads are dominated by agents that share a long
-app-level system prefix (§7.1). The seed's prefix cache was metadata-only
-and *exclusive-claim*: ``DevicePool.claim_cached`` popped a block out of the
-index, so two concurrent agents could never share device blocks. This
-module replaces that with a real sharing subsystem:
+app-level system prefix (§7.1) and then diverge **mid-block**: the shared
+preamble rarely ends on a block boundary, and per-agent role lines or tool
+outputs fork the token stream inside a block. The PR 2 store indexed
+chained whole-block hashes, so it could only share an *identical leading
+block run* — everything past the first divergent token was recomputed.
 
- * **Hash-chained index** — entries are keyed by the vLLM-style chained
-   block hashes (``block_pool.block_hashes``), plus *tail* keys for the
-   partial last block of a prompt, so a full-prompt hit is possible even
-   when the prompt does not end on a block boundary.
- * **Ref-counted pinning** — ``acquire`` pins matched blocks for a request
-   (refcount, not ownership transfer); any number of concurrent requests
-   can read the same physical blocks. While pinned, blocks are owned by
-   the ``SHARED_OWNER`` sentinel and can never be reclaimed.
- * **Copy-on-write forks** — a request that will *write* inside a shared
-   block (decoding past the shared boundary of a tail block) forks it:
-   ``cow_fork`` drops the pin and hands the caller the source block ids so
-   the data plane can clone content into the request's private block.
- * **LRU second chance** — entries whose refcount drops to zero move into
-   the device pools' reclaimable ``cached_blocks`` set, ordered here by
-   release recency; allocation pressure reclaims the least-recently-used
-   entry first (``victim_cb``) and prunes the index (``reclaim_cb``).
- * **Host tier** — the §6.3 CPU prefix index (mooncake mode) is fronted by
-   the same object (``host_publish`` / ``host_match``) so the engine has a
-   single prefix-reuse surface across both memory tiers.
+This version is built on a token-sequence radix tree
+(:mod:`repro.kvcache.radix_index`), which matches at **arbitrary branch
+points**:
+
+ * **Radix index** — edges are token runs, nodes are branch points, and
+   each node owns the per-device KV blocks whose content ends inside its
+   token span. Insert/match/evict are O(depth).
+ * **Mid-block divergence** — two prompts that share ``k`` full blocks
+   plus part of the next block share the ``k`` full blocks *physically*
+   (same device block ids in both tables, node-granular refcounts) and
+   **COW-fork** the partial block: the sharer pins a source block below
+   the branch point, the data plane clones it into the sharer's first
+   private block, and the suffix prefill overwrites everything from the
+   divergence offset on. The fork source's leading ``partial_len`` token
+   positions are immutable prompt KV, so the clone is race-free even while
+   the source's publisher keeps decoding into the same block.
+ * **Ref-counted pinning** — ``acquire`` pins every node on the matched
+   path (path pinning: a node's pins are a superset of its descendants'),
+   so a pinned branch can never lose an ancestor. Pinned blocks are owned
+   by the ``SHARED_OWNER`` sentinel and are unreclaimable.
+ * **LRU over refcount-0 leaves** — when a node's last pin drops, its
+   blocks become reclaimable (``cached_blocks``). Allocation pressure
+   reclaims from the tree's *frontier* — unpinned nodes with no
+   device-backed descendants — least-recently-released first, so reclaim
+   eats branches deepest-first and ancestors stay matchable until every
+   deeper branch is gone.
+ * **Host tier** — the §6.3 CPU prefix index (mooncake mode) walks the
+   *same tree*: ``host_publish`` attaches host block ids to the nodes
+   covering the offloaded prompt blocks (at any depth, not just root-
+   anchored runs) and ``host_match`` counts the leading host-backed run.
+   Device and host hits are therefore deduplicated structurally — the
+   engine reports a host hit only for blocks the device tier cannot serve.
 
 Entries hold one block id *per device* (TP mirroring): a hit requires the
-prefix to be resident on every device, which fixes the seed's
-``pools[0]``-only accounting on multi-device configs.
-
-The store is control-plane only; block *content* moves through the backend
-(``JaxBackend.copy_blocks`` for COW clones, the paged-prefill step for
-suffix fills). Entries are published *unready* at admission and flip ready
-only after the engine has executed the publisher's prefill, so a sharer
-can never attend over blocks whose KV has not been written yet.
+prefix to be resident on every device. The store is control-plane only;
+block *content* moves through the backend (``copy_blocks`` for COW clones,
+the chunked suffix prefill for everything past the match). Entries publish
+*unready* at admission and flip ready only after the publisher's prefill
+executed, so a sharer can never attend over unwritten KV.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.block_pool import DevicePool, HostPool, block_hashes
+from repro.core.block_pool import DevicePool, HostPool
+from repro.kvcache.radix_index import BlockEntry, RadixNode, RadixTree
 
 SHARED_OWNER = "<shared-prefix>"
 
 
 @dataclass
-class PrefixEntry:
-    key: Tuple
-    blocks: Dict[int, int]           # device -> block id
-    tokens: int                      # prompt tokens this entry covers
-    is_tail: bool = False            # partial (< block_tokens) last block
-    refs: Set[str] = field(default_factory=set)
-    ready: bool = False              # data plane has written the KV
-
-
-@dataclass
 class PrefixMatch:
-    """Result of a longest-prefix lookup for one request."""
-    n_full: int = 0                        # matched full blocks
-    tail: Optional[PrefixEntry] = None     # matched partial tail block
-    tokens: int = 0                        # total cached tokens
-    full_keys: List[Tuple] = field(default_factory=list)
-    tail_key: Optional[Tuple] = None
-    tail_len: int = 0
-    cpu_hits: int = 0         # host-tier index hits (no device blocks)
+    """Result of a longest-prefix lookup for one request.
+
+    ``tokens`` (= ``n_full * bt + partial_len``) is the device-servable
+    coverage; ``matched_tokens`` is the raw token-tree match, which can be
+    longer when trailing blocks were reclaimed or are still unready.
+    """
+    n_full: int = 0                        # physically shareable full blocks
+    partial_len: int = 0                   # matched tokens inside the next
+    tokens: int = 0                        #   block (COW-forked, not shared)
+    matched_tokens: int = 0                # raw radix match length
+    full_entries: List[BlockEntry] = field(default_factory=list)
+    pin_path: List[RadixNode] = field(default_factory=list)
+    src_entry: Optional[BlockEntry] = None  # COW source for the partial
+    src_path: List[RadixNode] = field(default_factory=list)  # descent to it
+    cpu_hits: int = 0                      # host-only hits (no device blocks)
 
     def __bool__(self) -> bool:
-        return self.n_full > 0 or self.tail is not None
+        return self.tokens > 0
 
 
 class PrefixStore:
@@ -78,112 +87,191 @@ class PrefixStore:
         self.pools = {p.device: p for p in pools}
         self.host = host
         self.bt = block_tokens
-        self.entries: Dict[Tuple, PrefixEntry] = {}
-        self.by_block: Dict[Tuple[int, int], PrefixEntry] = {}
-        self.pins: Dict[str, List[PrefixEntry]] = {}       # rid -> entries
-        self.unready: Dict[str, List[PrefixEntry]] = {}    # publisher -> new
-        # refcount-0 entries, oldest release first (reclaim order)
-        self.lru: "OrderedDict[Tuple, PrefixEntry]" = OrderedDict()
+        self.tree = RadixTree(block_tokens, on_split=self._on_split)
+        self.by_block: Dict[Tuple[int, int], BlockEntry] = {}
+        # rid -> pinned nodes, appended shallow-to-deep (release walks the
+        # list reversed so refs drop bottom-up and path pinning never
+        # breaks mid-release)
+        self.pins: Dict[str, List[RadixNode]] = {}
+        # rid -> leading run of shared block ids per device, in table order
+        # (acquired full blocks, then published/adopted blocks). This is
+        # what ``pinned_count`` reports and what ``release`` strips from
+        # the request's tables.
+        self.pin_blocks: Dict[str, Dict[int, List[int]]] = {}
+        self.unready: Dict[str, List[BlockEntry]] = {}   # publisher -> new
+        self.host_nodes: Dict[int, RadixNode] = {}       # host bid -> node
+        # reclaim victim queue: one frontier sweep feeds a whole burst of
+        # reclaims instead of an O(tree) walk per freed block. Entries are
+        # validated at pop time (node unpinned, entry live, block still
+        # cached), so stale items are skipped and no invalidation hooks
+        # are needed; a drained/stale queue triggers one fresh sweep.
+        self._victims: List[Tuple[RadixNode, int]] = []
         # store-internal lifecycle counters only; hit/COW accounting lives
         # in the engine's metrics (counted once, at admission commit)
         self.stats = {"published": 0, "reclaimed": 0}
         for p in pools:
             p.reclaim_cb = self._on_reclaim
             p.victim_cb = self._lru_victim
+        if host is not None:
+            host.release_cb = self._on_host_release
 
-    # ---- keys ----------------------------------------------------------------
-    def keys_for(self, prompt_tokens: Sequence[int],
-                 full_keys: Optional[List[Tuple]] = None):
-        """(full block keys, tail key or None, tail length)."""
-        if full_keys is None:
-            full_keys = block_hashes(prompt_tokens, self.bt)
-        rem = len(prompt_tokens) % self.bt
-        tail_key = None
-        if rem:
-            prev = full_keys[-1] if full_keys else ("root",)
-            tail_key = ("tail", prev, tuple(prompt_tokens[-rem:]))
-        return full_keys, tail_key, rem
+    # ---- lookup --------------------------------------------------------------
+    def match(self, prompt_tokens: Sequence[int]) -> PrefixMatch:
+        """Longest device-servable shared prefix for a prompt.
 
-    # ---- lookup / pin --------------------------------------------------------
-    def match(self, full_keys: List[Tuple], tail_key: Optional[Tuple],
-              tail_len: int = 0) -> PrefixMatch:
-        """Longest leading run of *ready* entries; tail only on a full run.
+        Walks the radix tree token-by-token, then scans block indices from
+        0 for the contiguous run of *ready, full, device-resident* entries
+        along the matched path. If the token match runs past the full-block
+        run into the next block (mid-block divergence) a COW source entry
+        is located in the subtree below the branch point — every block
+        there holds identical KV for the matched positions.
 
-        ``tail_len`` is the prompt's tail-block token count (``keys_for``'s
-        third result); it is carried through on hit AND miss so publishers
-        can reuse the match for ``publish`` without recomputing keys."""
+        A match ending mid-edge SPLITS the node at the boundary (SGLang
+        style) so the returned pin path covers exactly the matched tokens:
+        without the split, pinning the partially matched node would drag
+        every entry of its divergent remainder into the unreclaimable
+        shared state for the sharer's whole lifetime."""
+        path, matched = self.tree.walk(prompt_tokens)
+        if path and matched < path[-1].end:
+            # walk guarantees >= 1 matched edge token on the trailing node
+            path[-1] = self.tree._split(path[-1], matched - path[-1].start)
+        avail: Dict[int, BlockEntry] = {}
+        for node in path:
+            avail.update(node.entries)
+        full: List[BlockEntry] = []
         n = 0
-        for k in full_keys:
-            e = self.entries.get(k)
-            if e is None or not e.ready:
+        while True:
+            e = avail.get(n)
+            if (e is None or not e.ready or e.tokens < self.bt
+                    or (n + 1) * self.bt > matched
+                    or any(d not in e.blocks for d in self.pools)):
                 break
+            full.append(e)
             n += 1
-        tail = None
-        if tail_key is not None and n == len(full_keys):
-            e = self.entries.get(tail_key)
-            if e is not None and e.ready:
-                tail = e
-        covered = n * self.bt + (tail.tokens if tail is not None else 0)
-        return PrefixMatch(n, tail, covered, list(full_keys), tail_key,
-                           tail_len or (tail.tokens if tail else 0))
+        # pin only what the request will reference: nodes covering the
+        # full-block run. Deeper token-matched nodes (beyond a gap, or the
+        # partial region) are pinned via src_path — and only while a COW
+        # source needs protecting — so a short match never drags another
+        # prompt's suffix blocks into the unreclaimable shared state.
+        cut = path.index(full[-1].node) + 1 if full else 0
+        partial_len, src_entry, src_path = 0, None, []
+        rem = matched - n * self.bt
+        if path and 0 < rem < self.bt and n == matched // self.bt:
+            src_entry, descent = self._find_cow_src(path[-1], n, rem)
+            if src_entry is not None:
+                partial_len = rem
+                src_path = path[cut:] + descent
+        return PrefixMatch(n, partial_len, n * self.bt + partial_len,
+                           matched, full, path[:cut], src_entry, src_path)
 
+    def _find_cow_src(self, branch: RadixNode, idx: int, rem: int):
+        """A ready device block for index ``idx`` at/below ``branch``.
+
+        Every node in the branch subtree extends the matched prefix, so any
+        such block holds valid KV for the first ``rem`` matched positions
+        of the block — the publisher's own divergent tokens sit at offsets
+        >= ``rem`` and are overwritten by the sharer's suffix prefill.
+        Breadth-first so the shallowest (cheapest-to-pin) source wins."""
+        queue = deque([(branch, [])])
+        while queue:
+            node, descent = queue.popleft()
+            e = node.entries.get(idx)
+            if (e is not None and e.ready and e.tokens >= rem
+                    and all(d in e.blocks for d in self.pools)):
+                return e, descent
+            for c in node.children.values():
+                queue.append((c, descent + [c]))
+        return None, []
+
+    # ---- pin / fork ----------------------------------------------------------
     def acquire(self, rid: str, m: PrefixMatch) -> Dict[int, List[int]]:
-        """Pin the matched blocks for ``rid``; returns per-device block ids
-        of the full entries (prefix-ordered). The tail entry is pinned too —
-        the caller must immediately ``cow_fork`` it, since its block will
-        receive writes past the shared boundary."""
+        """Pin the matched path (plus the descent to the COW source) for
+        ``rid``; returns the per-device ids of the shared full blocks in
+        prefix order. Pin-before-allocate: once pinned, the allocation for
+        the request's private blocks cannot reclaim these."""
+        for node in m.pin_path:
+            self._pin(rid, node)
+        for node in m.src_path:
+            self._pin(rid, node)
+        pb = self.pin_blocks.setdefault(
+            rid, {d: [] for d in self.pools})
         out: Dict[int, List[int]] = {d: [] for d in self.pools}
-        for k in m.full_keys[:m.n_full]:
-            e = self.entries[k]
-            self._pin(rid, e)
+        for e in m.full_entries:
             for d, bid in e.blocks.items():
                 out[d].append(bid)
-        if m.tail is not None:
-            self._pin(rid, m.tail)
+                pb[d].append(bid)
         return out
 
-    def cow_fork(self, rid: str, entry: PrefixEntry) -> Dict[int, int]:
-        """Copy-on-write: ``rid`` will write inside ``entry``'s block, so it
-        gives up its pin and clones the content into a private block instead.
-        Returns the per-device *source* block ids for the data-plane copy."""
-        self._unpin(rid, entry)
-        return dict(entry.blocks)
+    def cow_fork(self, rid: str, m: PrefixMatch) -> Dict[int, int]:
+        """Copy-on-write commit: ``rid`` will write inside the partially
+        matched block, so it takes a private clone instead of a pin. Drops
+        the pins that existed only to protect the source (the descent below
+        the branch point) and returns the per-device *source* block ids for
+        the data-plane copy."""
+        for node in reversed(m.src_path):
+            self._unpin(rid, node)
+        return dict(m.src_entry.blocks)
 
     # ---- publish -------------------------------------------------------------
-    def publish(self, rid: str, blocks_by_device: Dict[int, List[int]],
-                full_keys: List[Tuple], tail_key: Optional[Tuple],
-                tail_len: int, agent_type: Optional[str] = None,
-                start: int = 0) -> int:
-        """Register ``rid``'s prompt blocks (``blocks_by_device`` is its
-        per-device block table, shared prefix first) as shared entries,
-        starting at block index ``start`` (the already-acquired run).
+    def publish(self, rid: str, prompt_tokens: Sequence[int],
+                blocks_by_device: Dict[int, List[int]],
+                start: int = 0, agent_type: Optional[str] = None) -> int:
+        """Register ``rid``'s prompt blocks from block index ``start`` (its
+        already-acquired shared run) as shared entries along its token
+        path, splitting the tree at the branch point.
 
-        Publication stops at the first key another request already owns, so
-        a request's pinned blocks are always a contiguous leading run of its
-        table (the invariant offload/eviction stripping relies on). New
-        entries are *unready* until ``mark_ready`` — the prefill that fills
-        them has not executed yet."""
-        made: List[PrefixEntry] = []
-        i = start
-        for k in full_keys[start:]:
-            if k in self.entries:
-                break
-            e = PrefixEntry(k, {d: blocks_by_device[d][i]
-                                for d in self.pools}, self.bt)
-            self._register(rid, e, agent_type)
+        Adoption stops at the first index another publisher already backs:
+        a request's shared blocks are always a contiguous leading run of
+        its table (the invariant offload/eviction stripping relies on).
+        New entries are *unready* until ``mark_ready`` — their prefill has
+        not executed yet. Adoption moves ownership to the store (the
+        publisher's agent type no longer holds the block against its
+        reservation floor)."""
+        T = len(prompt_tokens)
+        if T == 0:
+            return 0
+        path = self.tree.insert(prompt_tokens)
+        # deepest entry wins per index (a stored prompt's partial tail can
+        # be shadowed by a longer prompt's full block further down the path)
+        avail: Dict[int, BlockEntry] = {}
+        for node in path:
+            avail.update(node.entries)
+        pb = self.pin_blocks.setdefault(
+            rid, {d: [] for d in self.pools})
+        made: List[BlockEntry] = []
+        for idx in range(start, -(-T // self.bt)):
+            valid = min((idx + 1) * self.bt, T) - idx * self.bt
+            prev = avail.get(idx)
+            if prev is not None and prev.tokens >= valid:
+                break           # foreign coverage: stop, keep run contiguous
+            if any(idx >= len(blocks_by_device.get(d, []))
+                   for d in self.pools):
+                break           # table under-sized (defensive; engine bug)
+            last = idx * self.bt + valid - 1
+            node = next(nd for nd in path if nd.start <= last < nd.end)
+            e = BlockEntry(idx, {d: blocks_by_device[d][idx]
+                                 for d in self.pools}, valid, node=node)
+            node.entries[idx] = e
+            for nd in path:     # pin the path down to the adopting node
+                self._pin(rid, nd)
+                if nd is node:
+                    break
+            for d, bid in e.blocks.items():
+                self.by_block[(d, bid)] = e
+                p = self.pools[d]
+                p.meta[bid].owner = SHARED_OWNER
+                if agent_type is not None:
+                    p.type_held[agent_type] = max(
+                        0, p.type_held.get(agent_type, 0) - 1)
+                pb[d].append(bid)
             made.append(e)
-            i += 1
-        else:
-            if (tail_key is not None and i == len(full_keys)
-                    and tail_key not in self.entries):
-                e = PrefixEntry(tail_key, {d: blocks_by_device[d][i]
-                                           for d in self.pools},
-                                tail_len, is_tail=True)
-                self._register(rid, e, agent_type)
-                made.append(e)
         if made:
             self.unready.setdefault(rid, []).extend(made)
             self.stats["published"] += len(made)
+        # adoption that broke early (foreign coverage) can leave the
+        # freshly inserted leaf hollow — drop it rather than leak a
+        # token-only node per unique suffix
+        self.tree.maybe_remove(path[-1])
         return len(made)
 
     def mark_ready(self, rid: str) -> None:
@@ -193,127 +281,207 @@ class PrefixStore:
 
     # ---- release / refcounts -------------------------------------------------
     def release(self, rid: str, req=None) -> None:
-        """Drop every pin held by ``rid`` (finish / eviction). When ``req``
-        is given, the shared block ids are stripped from its per-device
-        tables so the caller can free the remaining private blocks normally.
-        Entries at refcount zero go to the LRU (ready) or are deleted and
-        freed outright (never filled). Pins are dropped deepest-first so
-        the LRU reclaims a chain from its tail: match() walks the chain
-        from the root, so reclaiming the root first would orphan every
-        deeper cached block (valid KV that could never match again)."""
-        for e in reversed(self.pins.pop(rid, [])):
-            e.refs.discard(rid)
-            if req is not None:
-                for d, bid in e.blocks.items():
-                    lst = req.gpu_blocks_by_device.get(d)
-                    if lst and bid in lst:
-                        lst.remove(bid)
-            if not e.refs:
-                if e.ready:
-                    self._to_lru(e)
-                else:
-                    self._drop(e)
-        self.unready.pop(rid, None)
+        """Drop every pin held by ``rid`` (finish / eviction / rollback).
+
+        Entries the publisher never filled are deleted and their blocks
+        freed outright; nodes whose last pin drops move their (ready)
+        entries to the reclaimable LRU. Refs are dropped deepest-first so
+        path pinning holds at every intermediate state. When ``req`` is
+        given, the shared block ids are stripped from its per-device
+        tables so the caller can free the remaining private blocks."""
+        for e in self.unready.pop(rid, []):
+            if not e.ready:
+                self._drop_entry(e)
+        for node in reversed(self.pins.pop(rid, [])):
+            node.refs.discard(rid)
+            if not node.refs:
+                self._node_released(node)
+        pb = self.pin_blocks.pop(rid, None)
+        if req is not None and pb:
+            for d, ids in pb.items():
+                lst = req.gpu_blocks_by_device.get(d)
+                if lst:
+                    for bid in ids:
+                        if bid in lst:
+                            lst.remove(bid)
 
     def pinned_count(self, rid: str) -> int:
-        return len(self.pins.get(rid, []))
+        """Leading shared blocks in ``rid``'s device-0 table."""
+        pb = self.pin_blocks.get(rid)
+        return len(pb[0]) if pb else 0
 
-    def refcount(self, key: Tuple) -> int:
-        e = self.entries.get(key)
-        return len(e.refs) if e else 0
+    def refcount(self, prompt_tokens: Sequence[int]) -> int:
+        """Pins on the node ending exactly at ``len(prompt_tokens)``."""
+        node = self.tree.node_at(prompt_tokens)
+        return len(node.refs) if node is not None else 0
+
+    @property
+    def lru(self) -> List[BlockEntry]:
+        """Reclaimable (ready, refcount-0) entries — test/introspection."""
+        return [e for e in set(self.by_block.values())
+                if e.ready and not e.node.refs]
 
     # ---- host tier (§6.3 CPU prefix index, mooncake mode) --------------------
-    def host_publish(self, host_blocks: Sequence[int],
-                     hashes: Sequence[Tuple]) -> None:
-        if self.host is not None:
-            self.host.index_hashes(host_blocks, hashes)
+    def host_publish(self, prompt_tokens: Sequence[int],
+                     host_blocks: Sequence[int], start: int = 0) -> None:
+        """Attach host block ids to the tree nodes covering block indices
+        ``[start, start + len(host_blocks))`` of this prompt. Unlike the
+        PR 2 hash chain, attachment works at any depth — a suffix offload
+        behind a device-resident shared prefix is still matchable because
+        device and host walk the same tree."""
+        if self.host is None or not host_blocks:
+            return
+        cover = min(len(prompt_tokens),
+                    (start + len(host_blocks)) * self.bt)
+        path = self.tree.insert(prompt_tokens[:cover])
+        for j, hb in enumerate(host_blocks):
+            idx = start + j
+            last = (idx + 1) * self.bt - 1
+            if last >= cover:
+                break           # only whole prompt blocks are addressable
+            node = next(nd for nd in path if nd.start <= last < nd.end)
+            node.host[idx] = hb
+            self.host_nodes[hb] = node
+        self.tree.maybe_remove(path[-1])    # drop a leaf left hollow
 
-    def host_match(self, hashes: Sequence[Tuple]) -> int:
+    def host_match(self, prompt_tokens: Sequence[int]) -> int:
+        """Leading full-block run servable by *either* tier along the
+        matched path (host-resident, or ready on device).
+
+        Counting device-backed indices too is what makes the two tiers
+        compose: a host copy of block ``k`` sitting behind ``k`` device-
+        resident blocks extends the run to ``k+1`` — the H2D promotion
+        path could fill exactly that gap. The engine dedups by
+        subtracting its device-tier ``n_full``, so ``cpu_prefix_hits``
+        counts only blocks the device tier cannot serve by itself."""
         if self.host is None:
             return 0
-        return len(self.host.lookup_prefix(hashes))
+        path, matched = self.tree.walk(prompt_tokens)
+        hosts: Dict[int, int] = {}
+        avail: Dict[int, BlockEntry] = {}
+        for node in path:
+            hosts.update(node.host)
+            avail.update(node.entries)
+        n = 0
+        while (n + 1) * self.bt <= matched:
+            e = avail.get(n)
+            if n not in hosts and not (
+                    e is not None and e.ready and e.tokens >= self.bt):
+                break
+            n += 1
+        return n
+
+    def _on_host_release(self, blocks: Sequence[int]) -> None:
+        """Host pool freed blocks (upload finished): unindex them."""
+        for hb in blocks:
+            node = self.host_nodes.pop(hb, None)
+            if node is None:
+                continue
+            for idx, b in list(node.host.items()):
+                if b == hb:
+                    del node.host[idx]
+            self.tree.maybe_remove(node)
 
     # ---- internals -----------------------------------------------------------
-    def _pin(self, rid: str, e: PrefixEntry) -> None:
-        if not e.refs:
-            self._to_shared(e)
-        e.refs.add(rid)
-        self.pins.setdefault(rid, []).append(e)
+    def _pin(self, rid: str, node: RadixNode) -> None:
+        if rid in node.refs:
+            return
+        if not node.refs:
+            self._node_to_shared(node)
+        node.refs.add(rid)
+        self.pins.setdefault(rid, []).append(node)
 
-    def _unpin(self, rid: str, e: PrefixEntry) -> None:
-        e.refs.discard(rid)
+    def _unpin(self, rid: str, node: RadixNode) -> None:
+        if rid not in node.refs:
+            return
+        node.refs.discard(rid)
         pins = self.pins.get(rid)
-        if pins and e in pins:
-            pins.remove(e)
-        if not e.refs:
-            self._to_lru(e) if e.ready else self._drop(e)
+        if pins and node in pins:
+            pins.remove(node)
+        if not node.refs:
+            self._node_released(node)
 
-    def _register(self, rid: str, e: PrefixEntry, agent_type) -> None:
-        """Adopt freshly allocated request blocks as shared infrastructure:
-        ownership moves from the request to the store (its agent type no
-        longer holds them against its reservation floor)."""
-        self.entries[e.key] = e
-        e.refs.add(rid)
-        self.pins.setdefault(rid, []).append(e)
-        for d, bid in e.blocks.items():
-            self.by_block[(d, bid)] = e
-            p = self.pools[d]
-            p.meta[bid].owner = SHARED_OWNER
-            p.meta[bid].hash_key = e.key
-            if agent_type is not None:
-                p.type_held[agent_type] = max(
-                    0, p.type_held.get(agent_type, 0) - 1)
+    def _node_to_shared(self, node: RadixNode) -> None:
+        """First pin landed: LRU (reclaimable) -> pinned shared-held."""
+        for e in node.entries.values():
+            for d, bid in e.blocks.items():
+                p = self.pools[d]
+                p.cached_blocks.discard(bid)
+                p.meta[bid].owner = SHARED_OWNER
 
-    def _to_shared(self, e: PrefixEntry) -> None:
-        """LRU (reclaimable) -> pinned shared-held."""
-        for d, bid in e.blocks.items():
-            p = self.pools[d]
-            if bid in p.cached_blocks:
-                p.cached_blocks.remove(bid)
-                p.prefix_index.pop(e.key, None)
-            p.meta[bid].owner = SHARED_OWNER
-            p.meta[bid].hash_key = e.key
-        self.lru.pop(e.key, None)
+    def _node_released(self, node: RadixNode) -> None:
+        """Last pin dropped: entries stay cached, blocks reclaimable."""
+        self.tree.tick += 1
+        node.tick = self.tree.tick
+        for e in node.entries.values():
+            assert e.ready, "unready entry outlived its publisher's pins"
+            for d, bid in e.blocks.items():
+                p = self.pools[d]
+                p.meta[bid].owner = None
+                p.cached_blocks.add(bid)
+        self.tree.maybe_remove(node)
 
-    def _to_lru(self, e: PrefixEntry) -> None:
-        """Refcount hit zero: content stays cached, blocks reclaimable."""
-        for d, bid in e.blocks.items():
-            p = self.pools[d]
-            p.meta[bid].owner = None
-            p.meta[bid].hash_key = e.key
-            p.prefix_index[e.key] = bid
-            p.cached_blocks.add(bid)
-        self.lru[e.key] = e
-        self.lru.move_to_end(e.key)
-
-    def _drop(self, e: PrefixEntry) -> None:
+    def _drop_entry(self, e: BlockEntry) -> None:
         """Delete an entry and free its blocks (content never valid)."""
-        self.entries.pop(e.key, None)
-        self.lru.pop(e.key, None)
+        node = e.node
+        node.entries.pop(e.index, None)
         for d, bid in e.blocks.items():
             self.by_block.pop((d, bid), None)
             p = self.pools[d]
-            if bid in p.cached_blocks:
-                p.cached_blocks.remove(bid)
-                p.prefix_index.pop(e.key, None)
+            p.cached_blocks.discard(bid)
             p.meta[bid].owner = None
             p.meta[bid].hash_key = None
             p.free_list.append(bid)
+        self.tree.maybe_remove(node)
 
+    def _on_split(self, upper: RadixNode, lower: RadixNode) -> None:
+        """Tree split under live pins: the upper half inherits the pins,
+        so every pin list holding ``lower`` must also hold ``upper``
+        (shallower, inserted just before it). Host back-pointers for the
+        indices that moved up follow."""
+        for rid in upper.refs:
+            pins = self.pins.get(rid)
+            if pins is not None and lower in pins and upper not in pins:
+                pins.insert(pins.index(lower), upper)
+        for hb in upper.host.values():
+            self.host_nodes[hb] = upper
+
+    # ---- pool hooks ----------------------------------------------------------
     def _lru_victim(self, device: int) -> Optional[int]:
-        """Reclaim choice for ``DevicePool._pop_free``: oldest release."""
-        for e in self.lru.values():
-            return e.blocks.get(device)
+        """Reclaim choice for ``DevicePool._pop_free``: the last block of
+        the least-recently-released *frontier* node — deepest-first, so a
+        chain is consumed from its tail and the leading run stays
+        matchable. Amortized via ``_victims`` (popped from the end:
+        oldest node first, deepest entry of each node first)."""
+        for _ in range(2):
+            while self._victims:
+                node, idx = self._victims.pop()
+                e = node.entries.get(idx)
+                if e is None or node.refs:
+                    continue            # stale: entry reclaimed / node pinned
+                if (idx != max(node.entries)
+                        or self.tree.has_backed_descendant(node)):
+                    continue            # stale: no longer the deepest —
+                                        # reclaiming it would strand deeper
+                                        # cached blocks (republished chain)
+                bid = e.blocks.get(device)
+                if bid is not None and bid in self.pools[device].cached_blocks:
+                    return bid
+            frontier = self.tree.frontier()
+            if not frontier:
+                return None
+            frontier.sort(key=lambda n: n.tick, reverse=True)
+            self._victims = [(n, i) for n in frontier
+                             for i in sorted(n.entries)]
         return None
 
     def _on_reclaim(self, device: int, bid: int, key) -> None:
         """A pool reclaimed a cached block: prune the entry and free its
-        mirror copies on the other devices (a partial prefix is useless)."""
+        mirror copies on the other devices (a partial mirror is useless)."""
         e = self.by_block.pop((device, bid), None)
         if e is None:
             return
-        self.entries.pop(e.key, None)
-        self.lru.pop(e.key, None)
+        e.node.entries.pop(e.index, None)
         self.stats["reclaimed"] += 1
         for d, b in e.blocks.items():
             if d == device:
@@ -322,6 +490,40 @@ class PrefixStore:
             p = self.pools[d]
             if b in p.cached_blocks:
                 p.cached_blocks.remove(b)
-                p.prefix_index.pop(e.key, None)
-                p.meta[b].hash_key = None
+                p.meta[b].owner = None
                 p.free_list.append(b)
+        self.tree.maybe_remove(e.node)
+
+    # ---- invariants (property-test surface) ----------------------------------
+    def check_invariants(self) -> None:
+        """Assert the full store + tree + pool invariant set. Called by
+        the property/fuzz suite after every operation."""
+        self.tree.check_structure()
+        total_refs = sum(len(n.refs) for n in self.tree.nodes())
+        total_pins = sum(len(v) for v in self.pins.values())
+        assert total_refs == total_pins, "refcounts out of sync with pins"
+        for rid, nodes in self.pins.items():
+            assert len(set(map(id, nodes))) == len(nodes)
+            for n in nodes:
+                assert rid in n.refs, f"{rid} pin list holds unpinned node"
+        reachable = set(map(id, self.tree.nodes()))
+        entries = set(self.by_block.values())
+        for e in entries:
+            assert id(e.node) in reachable, "orphan node holds live entry"
+            assert e.node.entries.get(e.index) is e
+        for d, p in self.pools.items():
+            free, cached = set(p.free_list), set(p.cached_blocks)
+            assert not free & cached
+            for bid in cached:
+                e = self.by_block.get((d, bid))
+                assert e is not None and e.ready and not e.node.refs, \
+                    f"cached block {bid} not a refcount-0 ready entry"
+            for (dd, bid), e in self.by_block.items():
+                if dd != d:
+                    continue
+                assert bid not in free, f"entry block {bid} on free list"
+                if e.node.refs:
+                    assert p.meta[bid].owner == SHARED_OWNER
+                    assert bid not in cached
+                else:
+                    assert e.ready and bid in cached

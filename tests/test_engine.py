@@ -40,6 +40,43 @@ def test_block_conservation_after_run(mode):
     assert eng.host.used == 0 or eng.cfg.cpu_prefix_cache  # mooncake keeps index
 
 
+def test_host_hits_counted_and_deduped_against_device_tier():
+    """Satellite fix: with BOTH tiers on, host hits used to be invisible
+    (the device match early-returned before host_match ran). Now they are
+    counted — but deduplicated: a block the device tier serves is never a
+    cpu hit, so prefix_saved_tokens (device) and cpu_prefix_hits (host)
+    never double-count."""
+    from repro.core.graph import AppGraph
+    from repro.core.request import Request
+    eng = Engine(EngineConfig.preset("mooncake", gpu_blocks=64,
+                                     prefix_cache=True), A100_PCIE)
+    store, p = eng.prefix_store, eng.pools[0]
+    prompt = list(range(3 * A100_PCIE.block_tokens))        # 3 full blocks
+    bbd = {0: p.allocate(3, "a")}
+    store.publish("a", prompt, bbd, start=0)
+    store.mark_ready("a")
+    hb = eng.host.allocate(3, "a")
+    store.host_publish(prompt, hb, start=0)                 # same 3 blocks
+
+    g = AppGraph("t")
+    node = g.add_agent("n", "w", len(prompt), decode_len=4)
+    r = Request(rid="q", app_id="t", node=node, graph=g, arrival=0.0,
+                prompt_tokens=prompt)
+    m = eng._prefix_match(r)
+    assert m.n_full == 3 and m.cpu_hits == 0                # fully deduped
+
+    # device tier evaporates (release + reclaim): host hits become visible
+    store.release("a")
+    p.allocate(len(p.free_list), "x")
+    p.allocate(3, "y")                                      # reclaims cached
+    m2 = eng._prefix_match(r)
+    assert m2.n_full == 0 and m2.cpu_hits == 3
+    # host-only modes (plain mooncake) keep the old root-anchored counting
+    eng2 = Engine(EngineConfig.preset("mooncake", gpu_blocks=64), A100_PCIE)
+    eng2.prefix_store.host_publish(prompt, eng2.host.allocate(3, "h"))
+    assert eng2._prefix_match(r).cpu_hits == 3
+
+
 def test_offload_cycle_counts_consistent():
     eng, rep = run("tokencake", n_apps=10)
     assert rep["offloads"] == rep["uploads"]

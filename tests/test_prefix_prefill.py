@@ -209,6 +209,129 @@ def test_prefix_sharing_composes_with_offload_end_to_end():
     assert not eng.prefix_store.pins
 
 
+def test_multi_agent_mid_block_divergence_shares_sublinearly():
+    """N agents fan out over one app prefix that ends MID-BLOCK (3 full
+    blocks + 8 tokens) and diverge right there — the dominant sharing
+    shape in multi-agent traces, invisible to the PR 2 hash chain past
+    the aligned blocks. All sharers must (a) hold the same 3 physical
+    device blocks, (b) COW-fork the partial fourth and reuse its 8 cached
+    tokens, (c) produce prefill logits identical to an unshared dense
+    prefill, with (d) total device usage sub-linear in N."""
+    rng = np.random.default_rng(7)
+    prefix = [int(t) for t in rng.integers(0, 50000, 3 * BT + 8)]
+    n_agents = 4
+    suffixes = [[int(t) for t in rng.integers(0, 50000, 9 + i)]
+                for i in range(n_agents)]
+
+    eng, backend = mk_engine(gpu_blocks=96)
+    submit_one(eng, prefix + suffixes[0], decode_len=48, name="a0")
+    step(eng)                      # a0 admitted, publishes the whole prompt
+    used_single = eng.cfg.gpu_blocks - eng.pools[0].free
+    for i in range(1, n_agents):
+        submit_one(eng, prefix + suffixes[i], decode_len=48, name=f"a{i}")
+    step(eng)                      # sharers admitted concurrently
+    reqs = {r.rid.split("/")[-1]: r for r in eng.running}
+    assert len(reqs) == n_agents
+    r0 = reqs["a0"]
+    for i in range(1, n_agents):
+        r = reqs[f"a{i}"]
+        # (a) ≥ 3 physical blocks shared (PR 2 baseline for this shape: the
+        # aligned run at best; the partial fourth never). The count can
+        # exceed 3: each sharer publishes its own branch (fork + suffix),
+        # becoming a publisher itself.
+        assert r.shared_prefix_blocks >= 3
+        assert r.gpu_blocks[:3] == r0.gpu_blocks[:3]
+        # (b) mid-block coverage: 3 full blocks + 8 partial tokens cached
+        assert r.prefix_cached_tokens == 3 * BT + 8
+        # the forked fourth block is private
+        assert r.gpu_blocks[3] != r0.gpu_blocks[3]
+    assert eng.metrics["cow_forks"] == n_agents - 1
+    assert eng.metrics["prefix_saved_tokens"] >= (n_agents - 1) * (3 * BT + 8)
+    # (d) sub-linear device usage: N agents cost far less than N singles
+    used_all = eng.cfg.gpu_blocks - eng.pools[0].free
+    assert used_all < n_agents * used_single
+    assert used_all <= used_single + (n_agents - 1) * (used_single - 3)
+    eng.prefix_store.check_invariants()
+    # (c) every agent's logits equal an unshared dense prefill
+    for i in range(n_agents):
+        got = backend.last_prefill_logits[reqs[f"a{i}"].rid]
+        want = dense_prefill_logits(backend, prefix + suffixes[i])
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+    # run to completion: decodes stay isolated, store drains clean
+    for _ in range(60):
+        step(eng)
+        if not (eng.running or eng.waiting or eng.events):
+            break
+    assert not eng.prefix_store.pins
+    eng.prefix_store.check_invariants()
+
+
+def test_preemption_and_offload_keep_radix_pins_coherent():
+    """Radix pins under the two disruptive paths at once: preempt one
+    sharer mid-decode, offload another, and verify the shared ancestors
+    survive both, the preempted sharer re-pins the SAME physical blocks,
+    and prefix_saved_tokens / cow_forks stay consistent."""
+    from repro.core.request import ReqState
+    rng = np.random.default_rng(11)
+    prefix = [int(t) for t in rng.integers(0, 50000, 2 * BT + 6)]
+    sfx = [[int(t) for t in rng.integers(0, 50000, 8 + i)] for i in range(3)]
+
+    eng, backend = mk_engine(gpu_blocks=64)
+    submit_one(eng, prefix + sfx[0], decode_len=40, name="a")
+    step(eng)
+    submit_one(eng, prefix + sfx[1], decode_len=40, name="b")
+    submit_one(eng, prefix + sfx[2], decode_len=40, name="c")
+    step(eng)
+    reqs = {r.rid.split("/")[-1]: r for r in eng.running}
+    ra, rb, rc = reqs["a"], reqs["b"], reqs["c"]
+    anc = list(rb.gpu_blocks[:2])
+    assert anc == rc.gpu_blocks[:2] == ra.gpu_blocks[:2]
+    forks0 = eng.metrics["cow_forks"]
+    assert forks0 == 2
+    step(eng)                                     # decode a little
+
+    # preempt sharer b mid-decode: its pins drop, ancestors must survive
+    # (a and c still pin them)
+    eng._evict(rb, None)
+    saved0 = eng.metrics["prefix_saved_tokens"]
+    eng.prefix_store.check_invariants()
+    from repro.kvcache.prefix_store import SHARED_OWNER
+    for bid in anc:
+        assert eng.pools[0].meta[bid].owner == SHARED_OWNER
+
+    # offload sharer c while b is waiting: only private blocks move
+    rc.state = ReqState.STALLED
+    eng.stalled[rc.rid] = rc
+    eng.running.remove(rc)
+    eng._start_offload(rc)
+    assert len(rc.host_blocks) == rc.offloadable_blocks
+    eng._process_events_until(eng.stream_free_at + 1e-6)
+    # table kept exactly the pinned run: the 2 ancestors plus c's own
+    # published branch blocks (c is a publisher of its fork + suffix)
+    assert rc.gpu_blocks[:2] == anc
+    assert len(rc.gpu_blocks) == rc.shared_prefix_blocks
+
+    # b re-admits: must re-pin the SAME surviving ancestors and re-fork
+    # (its old branch survives in the LRU, so the partial hit can run past
+    # the ancestor blocks through its own previously published tail)
+    step(eng)
+    assert rb.state == ReqState.RUNNING
+    assert rb.gpu_blocks[:2] == anc
+    assert rb.prefix_cached_tokens >= 2 * BT + 6
+    assert eng.metrics["prefix_saved_tokens"] > saved0
+    assert eng.metrics["cow_forks"] == forks0 + 1   # the re-fork
+    eng.prefix_store.check_invariants()
+
+    # and b's decode reproduces its pre-preemption stream
+    gen_before = list(backend.generated[rb.rid])
+    for _ in range(40):
+        step(eng)
+        if rb.done:
+            break
+    assert backend.generated[rb.rid][:len(gen_before)] == gen_before
+    eng.prefix_store.check_invariants()
+
+
 def test_prompt_exceeding_allocation_is_counted_not_silent():
     from repro.core.graph import AppGraph as AG
     from repro.core.request import Request

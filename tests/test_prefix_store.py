@@ -1,4 +1,4 @@
-"""Ref-counted COW prefix store: unit + engine-level control-plane tests."""
+"""Radix-tree COW prefix store: unit + engine-level control-plane tests."""
 import pytest
 
 from repro.core.block_pool import DevicePool, HostPool, block_hashes
@@ -16,27 +16,21 @@ def mk_store(num_devices=1, blocks=32):
     return PrefixStore(pools, host, BT), pools, host
 
 
-def prep(store, pools, rid, tokens, start_block=0):
-    """Allocate + publish ``tokens`` worth of prompt blocks for ``rid``."""
-    full, tail_key, tail_len = store.keys_for(tokens)
+def prep(store, pools, rid, tokens):
+    """Allocate + publish + mark_ready ``tokens`` worth of prompt blocks."""
     need = -(-len(tokens) // BT)
     bbd = {p.device: p.allocate(need, rid, agent_type="t") for p in pools}
-    store.publish(rid, bbd, full, tail_key, tail_len, agent_type="t")
+    store.publish(rid, tokens, bbd, start=0, agent_type="t")
     store.mark_ready(rid)
-    return full, tail_key, tail_len, bbd
-
-
-def pool_state(p: DevicePool):
-    owned = {b for b, m in p.meta.items() if m.owner is not None}
-    return len(p.free_list), len(p.cached_blocks), owned
+    store.check_invariants()
+    return bbd
 
 
 def test_publish_acquire_refcounts_and_lru_lifecycle():
     store, pools, _ = mk_store()
     p = pools[0]
     toks = list(range(8))                       # 2 full blocks, no tail
-    full, tk, tl, bbd = prep(store, pools, "a", toks)
-    assert tk is None
+    bbd = prep(store, pools, "a", toks)
     # publisher holds the pin; blocks owned by the shared sentinel
     assert store.pinned_count("a") == 2
     for b in bbd[0]:
@@ -45,133 +39,316 @@ def test_publish_acquire_refcounts_and_lru_lifecycle():
     assert p.type_held["t"] == 0
 
     # a second request pins the same physical blocks (no exclusive claim)
-    m = store.match(full, None)
-    assert m.n_full == 2 and m.tokens == 8
+    m = store.match(toks)
+    assert m.n_full == 2 and m.tokens == 8 and m.partial_len == 0
     got = store.acquire("b", m)
     assert got[0] == bbd[0]
-    assert store.refcount(full[0]) == 2
+    assert store.refcount(toks) == 2
 
     # releases: refcount 2 -> 1 -> 0 (LRU, reclaimable but still indexed)
     store.release("a")
-    assert store.refcount(full[0]) == 1
+    assert store.refcount(toks) == 1
     assert not p.cached_blocks
     store.release("b")
-    assert store.refcount(full[0]) == 0
+    store.check_invariants()
+    assert store.refcount(toks) == 0
     assert set(bbd[0]) == p.cached_blocks
     assert p.free == p.num_blocks               # cached counts as free
     # still matchable from the LRU
-    m2 = store.match(full, None)
-    assert m2.n_full == 2
+    assert store.match(toks).n_full == 2
 
 
-def test_reclaim_under_pressure_prunes_index_lru_first():
+def test_mid_block_divergence_shares_full_blocks_and_cow_forks_partial():
+    """THE radix upgrade: two prompts sharing 2.5 blocks diverge mid-block.
+    The PR 2 hash chain shared the 2 aligned blocks at best and nothing of
+    the third; the tree shares the 2 full blocks AND hands out a COW
+    source for the partial third."""
+    store, pools, _ = mk_store()
+    p = pools[0]
+    toks_a = list(range(12))                    # 3 full blocks
+    bbd = prep(store, pools, "a", toks_a)
+
+    toks_b = toks_a[:10] + [99, 98, 97]         # diverges inside block 2
+    m = store.match(toks_b)
+    assert m.n_full == 2 and m.partial_len == 2 and m.tokens == 10
+    got = store.acquire("b", m)
+    assert got[0] == bbd[0][:2]                 # same physical full blocks
+    src = store.cow_fork("b", m)
+    assert src[0] == bbd[0][2]                  # fork source = a's block 2
+    assert store.pinned_count("b") == 2         # partial is private, not shared
+    store.check_invariants()
+
+    # b publishes its branch: fork block + suffix become a sibling branch
+    priv = p.allocate(2, "b", agent_type="t")
+    store.publish("b", toks_b, {0: got[0] + priv}, start=2, agent_type="t")
+    store.mark_ready("b")
+    store.check_invariants()
+    # an identical-to-b prompt now matches THROUGH the branch point
+    m2 = store.match(toks_b)
+    assert m2.n_full == 3 and m2.partial_len == 1 and m2.tokens == 13
+    # and a's own path is still fully matchable
+    m3 = store.match(toks_a)
+    assert m3.n_full == 3 and m3.tokens == 12
+    store.release("a")
+    store.release("b")
+    store.check_invariants()
+
+
+def test_extension_prompt_publishes_past_a_cached_tail():
+    """B = A + suffix: A's partial tail must not block B from publishing
+    its deeper blocks (B's full block for the same index lives on B's
+    deeper node and shadows A's tail for B-path matches)."""
+    store, pools, _ = mk_store()
+    p = pools[0]
+    toks_a = list(range(10))                    # 2 full + 2-token tail
+    prep(store, pools, "a", toks_a)
+    toks_b = toks_a + [77, 78, 79, 80, 81, 82]  # 4 full blocks
+    m = store.match(toks_b)
+    assert m.n_full == 2 and m.partial_len == 2     # via a's tail
+    got = store.acquire("b", m)
+    src = store.cow_fork("b", m)
+    priv = p.allocate(2, "b", agent_type="t")
+    made = store.publish("b", toks_b, {0: got[0] + priv}, start=2,
+                         agent_type="t")
+    assert made == 2                            # fork block + block 3
+    store.mark_ready("b")
+    store.check_invariants()
+    assert store.match(toks_b).n_full == 4      # deep match now possible
+    # a's exact prompt still resolves through its own tail
+    ma = store.match(toks_a)
+    assert ma.n_full == 2 and ma.partial_len == 2
+    store.release("a")
+    store.release("b")
+
+
+def test_reclaim_under_pressure_prunes_lru_first():
     store, pools, _ = mk_store(blocks=6)
     p = pools[0]
-    fa, _, _, ba = prep(store, pools, "a", list(range(8)))      # blocks x2
-    fb, _, _, bb = prep(store, pools, "b", list(range(100, 108)))
+    ta, tb = list(range(8)), list(range(100, 108))
+    prep(store, pools, "a", ta)
+    prep(store, pools, "b", tb)
     store.release("a")                                          # oldest
     store.release("b")
     # exhaust the free list; next allocations reclaim cached blocks LRU-first
     p.allocate(2, "x")                                          # free list
     p.allocate(2, "y")                                          # reclaims a's
-    assert store.match(fa, None).n_full == 0                    # pruned
-    assert store.match(fb, None).n_full == 2                    # survives
+    assert store.match(ta).n_full == 0                          # pruned
+    assert store.match(tb).n_full == 2                          # survives
     p.allocate(2, "z")
-    assert store.match(fb, None).n_full == 0
-    assert not store.entries and not store.lru and not store.by_block
+    assert store.match(tb).n_full == 0
+    store.check_invariants()
+    assert not store.by_block
 
 
 def test_reclaim_takes_chain_tail_first_keeping_leading_run_matchable():
     """Reclaiming the chain ROOT would orphan every deeper cached block
-    (match walks from the root); the LRU must give up depth, not roots."""
+    (match walks from the root); the frontier must give up depth, not
+    roots."""
     store, pools, _ = mk_store(blocks=3)
     p = pools[0]
-    full, _, _, _ = prep(store, pools, "a", list(range(12)))  # 3-block chain
+    toks = list(range(12))                      # 3-block chain
+    prep(store, pools, "a", toks)
     store.release("a")
     p.allocate(1, "x")              # pressure: reclaims ONE cached block
-    m = store.match(full, None)
-    assert m.n_full == 2            # leading run survives (tail reclaimed)
+    assert store.match(toks).n_full == 2        # leading run survives
     p.allocate(1, "y")
-    assert store.match(full, None).n_full == 1
+    assert store.match(toks).n_full == 1
+    store.check_invariants()
 
 
-def test_tail_match_and_cow_fork():
+def test_deepest_branch_reclaimed_before_shared_ancestors():
+    """Two branches off one ancestor: pressure eats branch tails before
+    the shared ancestor blocks, and never under a live pin."""
+    store, pools, _ = mk_store(blocks=6)
+    p = pools[0]
+    ta = list(range(8))                         # ancestor: 2 blocks
+    bbd = prep(store, pools, "a", ta)
+    tb = ta + [55, 56, 57, 58]                  # branch b: +1 block
+    m = store.match(tb)
+    got = store.acquire("b", m)
+    priv = p.allocate(1, "b", agent_type="t")
+    store.publish("b", tb, {0: got[0] + priv}, start=2, agent_type="t")
+    store.mark_ready("b")
+    store.release("b")
+    # a STILL pins the ancestor; b's branch tail is the only legal victim
+    p.allocate(3, "x")              # free list empty now
+    p.allocate(1, "y")              # must reclaim b's branch block
+    assert store.match(ta).n_full == 2
+    assert store.match(tb).n_full == 2          # tail gone, ancestors live
+    for b in bbd[0]:
+        assert p.meta[b].owner == SHARED_OWNER  # pinned throughout
+    store.check_invariants()
+    store.release("a")
+
+
+def test_stale_victim_queue_respects_regrown_depth():
+    """Review-flagged: the amortized victim queue can hold an ancestor
+    entry from an old sweep; if the chain regrows deeper cached blocks,
+    popping that stale entry would free the root and strand every deeper
+    block. Pop-time validation must re-check frontier membership."""
+    store, pools, _ = mk_store(blocks=8)
+    p = pools[0]
+    ta = list(range(8))
+    prep(store, pools, "a", ta)                 # blocks idx 0,1
+    store.release("a")
+    held = p.allocate(6, "x")                   # exhaust the free list
+    p.allocate(1, "y")                          # sweep + reclaim idx 1;
+    assert store.match(ta).n_full == 1          # (node, idx 0) left queued
+    p.release(held)                             # pressure off
+
+    tb = ta + [50, 51, 52, 53]                  # regrow the chain deeper
+    m = store.match(tb)
+    got = store.acquire("b", m)
+    tbl = {0: got[0] + p.allocate(2, "b", agent_type="t")}
+    store.publish("b", tb, tbl, start=m.n_full, agent_type="t")
+    store.mark_ready("b")
+    store.release("b")
+    assert store.match(tb).n_full == 3          # healed: 3 cached blocks
+
+    p.allocate(len(p.free_list), "z")
+    p.allocate(1, "w")                          # one reclaim: deepest only
+    assert store.match(tb).n_full == 2, \
+        "stale queue entry sacrificed an ancestor"
+    store.check_invariants()
+
+
+def test_publish_blocked_by_unready_coverage_leaves_no_hollow_leaf():
+    """Review-flagged leak: B = A + suffix admitted while A's entries are
+    still unready publishes nothing (foreign coverage at index 0), but
+    its insert had already materialized a leaf for the suffix — that
+    hollow node must be dropped, not leaked per unique suffix."""
     store, pools, _ = mk_store()
     p = pools[0]
-    toks = list(range(11))                      # 2 full blocks + 3-token tail
-    full, tk, tl, bbd = prep(store, pools, "a", toks)
-    assert tk is not None and tl == 3
-    assert store.pinned_count("a") == 3         # 2 full + tail
-
-    m = store.match(full, tk)
-    assert m.tail is not None and m.tokens == 11
-    store.acquire("b", m)
-    assert len(m.tail.refs) == 2
-    src = store.cow_fork("b", m.tail)
-    assert src[0] == bbd[0][2]
-    assert m.tail.refs == {"a"}                 # b's pin dropped
-    assert store.pinned_count("b") == 2         # full blocks only
+    ta = list(range(8))
+    store.publish("a", ta, {0: p.allocate(2, "a", agent_type="t")},
+                  start=0, agent_type="t")      # unready
+    tb = ta + [50, 51, 52, 53]
+    assert not store.match(tb)                  # unready: no hit
+    tbl = {0: p.allocate(3, "b", agent_type="t")}
+    assert store.publish("b", tb, tbl, start=0, agent_type="t") == 0
+    _, matched = store.tree.walk(tb)
+    assert matched == len(ta), "hollow suffix leaf leaked into the tree"
+    n_nodes = len(store.tree.nodes())
+    assert store.publish("b", tb, tbl, start=0, agent_type="t") == 0
+    assert len(store.tree.nodes()) == n_nodes   # idempotent, no growth
+    store.check_invariants()
+    store.release("a")
+    store.release("b")
 
 
 def test_tail_diverging_tokens_do_not_match():
     store, pools, _ = mk_store()
-    toks = list(range(11))
-    full, tk, tl, _ = prep(store, pools, "a", toks)
+    toks = list(range(11))                      # 2 full + 3-token tail
+    prep(store, pools, "a", toks)
     other = toks[:10] + [999]
-    f2, tk2, _ = store.keys_for(other)
-    assert f2 == full and tk2 != tk
-    m = store.match(f2, tk2)
-    assert m.n_full == 2 and m.tail is None     # full blocks hit, tail miss
+    m = store.match(other)
+    assert m.n_full == 2                        # full blocks hit
+    assert m.partial_len == 2                   # 2 common tail tokens COW
+    assert m.tokens == 10
+    none = store.match([999] * 8)
+    assert not none
 
 
 def test_unready_entries_never_match_and_free_on_release():
     store, pools, _ = mk_store()
     p = pools[0]
     toks = list(range(8))
-    full, tk, tl = store.keys_for(toks)
     bbd = {0: p.allocate(2, "a", agent_type="t")}
-    store.publish("a", bbd, full, tk, tl, agent_type="t")
-    assert store.match(full, None).n_full == 0  # not ready yet
+    store.publish("a", toks, bbd, start=0, agent_type="t")
+    assert store.match(toks).n_full == 0        # not ready yet
     # publisher evicted before its prefill ran: entries deleted, blocks freed
     store.release("a")
-    assert not store.entries
+    store.check_invariants()
+    assert not store.by_block
     assert p.free == p.num_blocks and not p.cached_blocks
 
 
 def test_multi_device_entries_mirror_blocks():
     store, pools, _ = mk_store(num_devices=2)
     toks = list(range(8))
-    full, tk, tl, bbd = prep(store, pools, "a", toks)
-    m = store.match(full, None)
+    bbd = prep(store, pools, "a", toks)
+    m = store.match(toks)
     got = store.acquire("b", m)
     assert got[0] == bbd[0] and got[1] == bbd[1]
     store.release("a")
     store.release("b")
     # reclaim on device 0 frees the mirror copy on device 1 too
     pools[0].allocate(pools[0].num_blocks, "x")
-    assert not store.entries
+    store.check_invariants()
+    assert not store.by_block
     assert pools[1].free == pools[1].num_blocks
     assert not pools[1].cached_blocks
 
 
 def test_publish_stops_at_foreign_entry_keeps_pins_contiguous():
+    """A request's shared blocks must stay a contiguous leading run of its
+    table: publication stops at the first index another publisher already
+    backs (here: blocks 1..2 survive a mid-chain reclaim of block 0)."""
     store, pools, _ = mk_store()
     p = pools[0]
     toks = list(range(12))                      # 3 full blocks
-    full, _, _, bbd = prep(store, pools, "a", toks)
-    # simulate a mid-chain reclaim: a's entry 0 is gone, 1 and 2 remain
+    bbd = prep(store, pools, "a", toks)
     store.release("a")
-    e0 = store.entries[full[0]]
-    store._drop(e0)
-    # a new request matches nothing (chain broken at block 0) and must not
-    # publish duplicates past the foreign entries at index 1..2
-    m = store.match(full, None)
-    assert m.n_full == 0
+    # simulate a mid-chain reclaim: a's block 0 is gone, 1 and 2 remain
+    store._on_reclaim(0, bbd[0][0], None)
+    p.cached_blocks.remove(bbd[0][0])
+    p.free_list.append(bbd[0][0])
+    assert store.match(toks).n_full == 0        # chain broken at block 0
     blocks = {0: p.allocate(3, "b", agent_type="t")}
-    made = store.publish("b", blocks, full, None, 0, agent_type="t",
-                         start=0)
+    made = store.publish("b", toks, blocks, start=0, agent_type="t")
     assert made == 1                            # only block 0 republished
     assert store.pinned_count("b") == 1
+    store.check_invariants()
+
+
+def test_sharer_pins_only_its_coverage_not_the_divergent_suffix():
+    """Review-flagged retention bug: a sharer matching 1 block of a
+    10-block prompt must NOT drag the publisher's 9 divergent-suffix
+    blocks into the unreclaimable shared state — match splits the node at
+    the boundary so the pin covers exactly the matched tokens."""
+    store, pools, _ = mk_store(blocks=16)
+    p = pools[0]
+    toks_a = list(range(40))                    # 10 full blocks, one node
+    bbd = prep(store, pools, "a", toks_a)
+    store.release("a")                          # all 10 reclaimable
+    assert len(p.cached_blocks) == 10
+
+    toks_b = toks_a[:4] + [900, 901]            # shares exactly block 0
+    m = store.match(toks_b)
+    assert m.n_full == 1 and m.partial_len == 0
+    store.acquire("b", m)
+    # only block 0 left the reclaimable pool
+    assert len(p.cached_blocks) == 9
+    assert p.meta[bbd[0][0]].owner == SHARED_OWNER
+    for bid in bbd[0][1:]:
+        assert p.meta[bid].owner is None and bid in p.cached_blocks
+    # pressure can still reclaim the suffix while b lives
+    p.allocate(6, "x")                          # free list
+    p.allocate(5, "y")                          # reclaims 5 suffix blocks
+    assert p.meta[bbd[0][0]].owner == SHARED_OWNER   # b's pin survives
+    store.check_invariants()
+    store.release("b")
+    store.check_invariants()
+
+
+def test_cow_source_pinned_until_fork_commits():
+    """Between acquire and cow_fork the source block must be unreclaimable
+    (allocation for the sharer's private blocks runs in between)."""
+    store, pools, _ = mk_store(blocks=4)
+    p = pools[0]
+    toks = list(range(12))
+    bbd = prep(store, pools, "a", toks)
+    store.release("a")                          # everything refcount-0
+    m = store.match(toks[:10] + [99])           # partial hit on block 2
+    assert m.partial_len == 2
+    store.acquire("b", m)
+    # pressure while b holds the pins: the source block must survive
+    p.allocate(1, "x")
+    assert p.meta[bbd[0][2]].owner == SHARED_OWNER
+    src = store.cow_fork("b", m)
+    assert src[0] == bbd[0][2]
+    store.check_invariants()
+    store.release("b")
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +377,18 @@ def test_multi_device_prefix_hits_and_conservation():
     # no dangling pins or unready entries after the run
     assert not eng.prefix_store.pins
     assert not eng.prefix_store.unready
+    eng.prefix_store.check_invariants()
+
+
+def test_mid_block_divergence_produces_cow_forks_under_load():
+    """The synthetic workload's shared app prefix is NOT block-aligned
+    (sys_len = prompt_len // 2), so agents diverge mid-block — the radix
+    store must fork there; the PR 2 chain saw only aligned-run hits."""
+    eng, rep = run("vllm_prefix", n_apps=8)
+    assert rep["cow_forks"] > 0
+    assert rep["prefix_saved_tokens"] > rep["prefix_hits"] * \
+        eng.platform.block_tokens  # partial tokens saved beyond full blocks
+    eng.prefix_store.check_invariants()
 
 
 def test_prefix_sharing_is_concurrent_not_exclusive():
@@ -240,7 +429,8 @@ def test_engine_modes_unaffected_without_prefix_cache():
     eng, rep = run("tokencake", n_apps=6)
     assert rep["apps_finished"] == 6
     assert rep["prefix_hits"] == 0 and rep["cow_forks"] == 0
-    assert not eng.prefix_store.entries
+    assert not eng.prefix_store.by_block    # no device entries ever made
+    eng.prefix_store.check_invariants()
 
 
 def test_publisher_finishing_within_first_quantum_still_caches_prefix():
@@ -268,7 +458,9 @@ def test_publisher_finishing_within_first_quantum_still_caches_prefix():
 
 def test_block_hashes_offset_dependence():
     """Chained hashes: identical tokens at different block offsets must
-    hash differently (content-only hashing would alias them)."""
+    hash differently (content-only hashing would alias them). The hash
+    chain remains the pool-local legacy index; the radix store does not
+    use it."""
     rep4 = [7, 7, 7, 7]
     h_first = block_hashes(rep4, 4)              # block 0
     h_second = block_hashes(list(range(4)) + rep4, 4)  # same content, block 1

@@ -1,0 +1,418 @@
+"""Property-based + fuzz tests for the radix prefix index.
+
+Random operation sequences (publish / match / release / mark_ready /
+allocation pressure) run against a brute-force token-list oracle, with the
+full store+tree+pool invariant set re-checked after every operation:
+
+ * refcounts sum to pins; pin lists and node refs agree;
+ * path pinning: no unpinned node has a pinned descendant, so LRU reclaim
+   can never free an ancestor out from under a pin;
+ * no orphan nodes; every live entry sits on a reachable node at the
+   position its last valid token dictates; no block owned twice;
+ * pool conservation: free/cached/pinned sets are disjoint and complete.
+
+Match-length contract against the oracle:
+
+ * soundness (always): the match never exceeds the longest common prefix
+   with any ready published prompt — the store cannot invent tokens;
+ * exactness (no-pressure regime, publish+ready atomic): the match equals
+   the oracle LCP **token for token**, including mid-block partial
+   coverage — the radix property the PR 2 hash chain lacked.
+
+The plain seeded tests drive 500+ sequences with no optional deps; the
+``@given`` variants run the same machinery under real ``hypothesis`` when
+installed (they skip via ``_hypothesis_stub`` otherwise, and a dedicated
+CI fuzz job runs them with the real package).
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+from repro.core.block_pool import DevicePool, HostPool
+from repro.kvcache.prefix_store import PrefixStore
+from repro.kvcache.radix_index import RadixTree
+
+BT = 4
+
+
+def lcp(a, b) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# tree-only: walk == brute-force longest common prefix
+# ---------------------------------------------------------------------------
+
+def run_tree_sequence(seed: int, n_ops: int = 30):
+    rng = np.random.default_rng(seed)
+    tree = RadixTree(BT)
+    inserted = []
+    for _ in range(n_ops):
+        if inserted and rng.random() < 0.6:
+            base = list(inserted[int(rng.integers(len(inserted)))])
+            cut = int(rng.integers(0, len(base) + 1))
+            toks = base[:cut] + [int(x) for x in
+                                 rng.integers(100, 120, int(rng.integers(0, 9)))]
+            toks = toks or [int(rng.integers(0, 8))]
+        else:
+            toks = [int(x) for x in
+                    rng.integers(0, 8, int(rng.integers(1, 17)))]
+        if rng.random() < 0.5:
+            tree.insert(toks)
+            inserted.append(toks)
+        _, matched = tree.walk(toks)
+        want = max((lcp(toks, p) for p in inserted), default=0)
+        assert matched == want, (seed, toks, matched, want)
+        tree.check_structure()
+
+
+def test_tree_walk_equals_bruteforce_lcp_200_seeds():
+    for seed in range(200):
+        run_tree_sequence(seed)
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=150, deadline=None)
+def test_tree_walk_equals_bruteforce_lcp_hypothesis(seed):
+    run_tree_sequence(seed, n_ops=40)
+
+
+# ---------------------------------------------------------------------------
+# store fuzz driver: random lifecycles against the oracle
+# ---------------------------------------------------------------------------
+
+class StoreDriver:
+    """Random publish/match/release/ready/pressure sequences.
+
+    ``atomic_ready`` publishes flip ready immediately (the exactness
+    regime); ``pressure`` interleaves external allocations that force LRU
+    reclaim (soundness-only regime — the oracle cannot predict evictions).
+    """
+
+    def __init__(self, seed: int, blocks: int = 256, devices: int = 1,
+                 atomic_ready: bool = True, pressure: bool = False):
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.pools = [DevicePool(blocks, d) for d in range(devices)]
+        self.host = HostPool(64)
+        self.store = PrefixStore(self.pools, self.host, BT)
+        self.atomic = atomic_ready
+        self.pressure = pressure
+        self.ready_prompts = []          # oracle: matchable content
+        self.pending = {}                # rid -> tokens (unready publish)
+        self.live = {}                   # rid -> {"tokens", "table"}
+        self.ext = []                    # pressure allocations (device ids)
+        self.host_recs = []              # oracle: (tokens, start, host ids)
+        self.n = 0
+
+    # -- helpers ---------------------------------------------------------------
+    def gen_tokens(self):
+        r = self.rng
+        pool = self.ready_prompts + [v["tokens"] for v in self.live.values()]
+        if pool and r.random() < 0.7:
+            # shared prefix + divergence at a RANDOM (often mid-block) cut
+            base = list(pool[int(r.integers(len(pool)))])
+            cut = int(r.integers(0, len(base) + 1))
+            toks = base[:cut] + [int(x) for x in
+                                 r.integers(100, 200, int(r.integers(0, 12)))]
+            return toks or [int(r.integers(0, 50))]
+        return [int(x) for x in r.integers(0, 50, int(r.integers(1, 21)))]
+
+    def check_match(self, toks, m):
+        best = max((lcp(toks, p) for p in self.ready_prompts), default=0)
+        assert m.tokens <= best, \
+            f"seed {self.seed}: matched {m.tokens} > oracle lcp {best}"
+        assert m.tokens == m.n_full * BT + m.partial_len
+        assert 0 <= m.partial_len < BT
+        if self.atomic and not self.pressure:
+            assert self.store.stats["reclaimed"] == 0
+            assert m.tokens == best, \
+                f"seed {self.seed}: matched {m.tokens} != oracle lcp {best}"
+
+    # -- ops -------------------------------------------------------------------
+    def op_publish(self):
+        toks = self.gen_tokens()
+        need = -(-len(toks) // BT)
+        m = self.store.match(toks)
+        self.check_match(toks, m)
+        rid = f"r{self.n}"
+        self.n += 1
+        got = self.store.acquire(rid, m)
+        # pin-before-allocate, then re-check: pinning pulls matched blocks
+        # out of the reclaimable set, shrinking ``free`` — on shortfall,
+        # roll back exactly like the engine's admission defer
+        if any(p.free < need - m.n_full for p in self.pools):
+            self.store.release(rid)
+            return
+        table = {}
+        for p in self.pools:
+            table[p.device] = got.get(p.device, []) + p.allocate(
+                need - m.n_full, rid, agent_type="t")
+        if m.partial_len:
+            src = self.store.cow_fork(rid, m)
+            assert set(src) == {p.device for p in self.pools}
+        self.store.publish(rid, toks, table, start=m.n_full, agent_type="t")
+        assert self.store.pinned_count(rid) <= need
+        self.live[rid] = {"tokens": toks, "table": table}
+        if self.atomic or self.rng.random() < 0.6:
+            self.store.mark_ready(rid)
+            self.ready_prompts.append(toks)
+        else:
+            self.pending[rid] = toks
+
+    def op_mark_ready(self):
+        if not self.pending:
+            return
+        keys = sorted(self.pending)
+        rid = keys[int(self.rng.integers(len(keys)))]
+        self.store.mark_ready(rid)
+        self.ready_prompts.append(self.pending.pop(rid))
+
+    def op_release(self):
+        if not self.live:
+            return
+        keys = sorted(self.live)
+        rid = keys[int(self.rng.integers(len(keys)))]
+        state = self.live.pop(rid)
+        req = SimpleNamespace(gpu_blocks_by_device={
+            d: list(v) for d, v in state["table"].items()})
+        self.store.release(rid, req)
+        for p in self.pools:
+            p.release(req.gpu_blocks_by_device.get(p.device, []),
+                      agent_type="t")
+        if rid in self.pending:
+            # never became ready: release dropped its entries outright
+            del self.pending[rid]
+
+    def op_match(self):
+        toks = self.gen_tokens()
+        self.check_match(toks, self.store.match(toks))
+
+    def op_pressure(self):
+        if not self.pressure:
+            return
+        r = self.rng
+        if self.ext and r.random() < 0.5:
+            d, blocks = self.ext.pop(int(r.integers(len(self.ext))))
+            self.pools[d].release(blocks)
+            return
+        p = self.pools[int(r.integers(len(self.pools)))]
+        n = int(r.integers(1, 9))
+        if p.free >= n:
+            self.ext.append((p.device, p.allocate(n, "ext")))
+
+    # -- host tier -------------------------------------------------------------
+    def _host_backed(self, q, idx) -> bool:
+        return any(lcp(q, toks) >= (idx + 1) * BT
+                   and start <= idx < start + len(ids)
+                   for toks, start, ids in self.host_recs)
+
+    def expected_host_match(self, q) -> int:
+        """Brute-force host oracle: the leading run where each index is
+        host-backed or (exact regime) device-served."""
+        best_dev = max((lcp(q, p) for p in self.ready_prompts), default=0)
+        n = 0
+        while self._host_backed(q, n) or best_dev >= (n + 1) * BT:
+            n += 1
+        return n
+
+    def op_host_publish(self):
+        toks = self.gen_tokens()
+        nfull = len(toks) // BT
+        if nfull == 0 or self.host.free == 0:
+            return
+        start = int(self.rng.integers(0, nfull))
+        count = min(int(self.rng.integers(1, nfull - start + 1)),
+                    self.host.free)
+        # skip overlapping re-publishes: an index overwrite would leave
+        # the older record's host ids dangling in the oracle
+        if any(self._host_backed(toks, i) for i in range(start, start + count)):
+            return
+        ids = self.host.allocate(count, f"h{self.n}")
+        self.n += 1
+        self.store.host_publish(toks, ids, start=start)
+        self.host_recs.append((toks, start, ids))
+        self.op_host_match()
+
+    def op_host_release(self):
+        if not self.host_recs:
+            return
+        toks, start, ids = self.host_recs.pop(
+            int(self.rng.integers(len(self.host_recs))))
+        self.host.release(ids)               # release_cb unhooks the tree
+        self.op_host_match()
+
+    def op_host_match(self):
+        q = self.gen_tokens()
+        hm = self.store.host_match(q)
+        want = self.expected_host_match(q)
+        if self.atomic and not self.pressure:
+            assert hm == want, \
+                f"seed {self.seed}: host_match {hm} != oracle {want}"
+        else:
+            assert hm <= want, \
+                f"seed {self.seed}: host_match {hm} > oracle bound {want}"
+
+    def run(self, n_ops: int = 25):
+        ops = [self.op_publish, self.op_publish, self.op_match,
+               self.op_release, self.op_mark_ready, self.op_pressure,
+               self.op_host_publish, self.op_host_match,
+               self.op_host_release]
+        for _ in range(n_ops):
+            ops[int(self.rng.integers(len(ops)))]()
+            self.store.check_invariants()
+        # drain: every release path must leave the world conserved
+        for rid in sorted(self.live):
+            state = self.live[rid]
+            req = SimpleNamespace(gpu_blocks_by_device={
+                d: list(v) for d, v in state["table"].items()})
+            self.store.release(rid, req)
+            for p in self.pools:
+                p.release(req.gpu_blocks_by_device.get(p.device, []),
+                          agent_type="t")
+            self.store.check_invariants()
+        for d, blocks in self.ext:
+            self.pools[d].release(blocks)
+        for _, _, ids in self.host_recs:
+            self.host.release(ids)
+        self.host_recs = []
+        self.store.check_invariants()
+        assert not self.store.pins and not self.store.unready
+        assert not self.store.host_nodes, \
+            f"seed {self.seed}: host index not unhooked on release"
+        assert self.host.free == self.host.num_blocks
+        for p in self.pools:
+            assert p.free == p.num_blocks, \
+                f"seed {self.seed}: leaked blocks on device {p.device}"
+
+
+def test_store_fuzz_exact_oracle_350_seeds():
+    """No-pressure regime: match length must EQUAL the oracle LCP —
+    including mid-block partials — across 350 random sequences."""
+    for seed in range(350):
+        StoreDriver(seed, atomic_ready=True, pressure=False).run()
+
+
+def test_store_fuzz_eviction_pressure_200_seeds():
+    """Pressure regime: reclaim fires; soundness + invariants must hold
+    (never frees under a pin, never matches phantom tokens, conserves
+    every pool) across 200 random sequences."""
+    for seed in range(200):
+        StoreDriver(1_000_000 + seed, blocks=24, atomic_ready=False,
+                    pressure=True).run(n_ops=35)
+
+
+def test_store_fuzz_multi_device_60_seeds():
+    """TP mirroring: every entry holds one block per device; reclaim on
+    one device prunes the mirrors."""
+    for seed in range(40):
+        StoreDriver(2_000_000 + seed, devices=2, atomic_ready=True,
+                    pressure=False).run()
+    for seed in range(20):
+        StoreDriver(3_000_000 + seed, blocks=24, devices=2,
+                    atomic_ready=False, pressure=True).run(n_ops=30)
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.booleans(), st.booleans())
+@settings(max_examples=120, deadline=None)
+def test_store_fuzz_hypothesis(seed, pressure, two_dev):
+    StoreDriver(seed, blocks=24 if pressure else 256,
+                devices=2 if two_dev else 1,
+                atomic_ready=not pressure, pressure=pressure
+                ).run(n_ops=30)
+
+
+# ---------------------------------------------------------------------------
+# targeted regression shapes the fuzzer found interesting
+# ---------------------------------------------------------------------------
+
+def test_deep_extension_chain_reclaims_without_recursion_error():
+    """Extension prompts grow the tree one node per prompt; the reclaim
+    frontier walk must be iterative — a recursive version blows the
+    default interpreter stack (~1000 frames) exactly when allocation
+    pressure needs a victim."""
+    depth = 1100
+    pool = DevicePool(depth + 60, 0)
+    store = PrefixStore([pool], HostPool(4), BT)
+    toks = []
+    for i in range(depth):
+        toks = toks + [i % 7, (i * 3) % 7, (i * 5) % 7, i % 11]  # +1 block
+        rid = f"r{i}"
+        m = store.match(toks)
+        got = store.acquire(rid, m)
+        tbl = {0: got[0] + pool.allocate(1, rid)}
+        if m.partial_len:
+            store.cow_fork(rid, m)
+        store.publish(rid, toks, tbl, start=m.n_full)
+        store.mark_ready(rid)
+        store.release(rid)
+    assert len(store.tree.nodes()) == depth + 1
+    pool.allocate(len(pool.free_list), "x")
+    pool.allocate(40, "y")                  # victims walk the deep chain
+    assert store.match(toks).n_full == depth - 40   # strictly deepest-first
+    store.check_invariants()
+
+
+def test_split_under_live_pin_keeps_release_coherent():
+    """Publishing a diverging prompt splits a node the first request still
+    pins; the split must propagate the pin to the new upper half or the
+    release leaks a refcount."""
+    d = StoreDriver(0)
+    store, p = d.store, d.pools[0]
+    toks_a = list(range(12))
+    ba = {0: p.allocate(3, "a", agent_type="t")}
+    store.publish("a", toks_a, ba, 0, "t")
+    store.mark_ready("a")
+    # "a" still pinned; "b" diverges mid-edge -> splits a's node
+    toks_b = toks_a[:6] + [99, 98]
+    m = store.match(toks_b)
+    got = store.acquire("b", m)
+    tb = {0: got[0] + p.allocate(1, "b", agent_type="t")}
+    if m.partial_len:
+        store.cow_fork("b", m)
+    store.publish("b", toks_b, tb, m.n_full, "t")
+    store.mark_ready("b")
+    store.check_invariants()
+    store.release("a")
+    store.release("b")
+    store.check_invariants()
+    assert not store.pins
+    assert sum(len(n.refs) for n in store.tree.nodes()) == 0
+
+
+def test_unready_publisher_eviction_under_concurrent_pin():
+    """A sharer pins the path; the publisher of a DEEPER unready branch is
+    evicted first. Its unfilled blocks must free without touching the
+    pinned ancestors."""
+    d = StoreDriver(0)
+    store, p = d.store, d.pools[0]
+    toks_a = list(range(8))
+    ba = {0: p.allocate(2, "a", agent_type="t")}
+    store.publish("a", toks_a, ba, 0, "t")
+    store.mark_ready("a")
+    toks_b = toks_a + [50, 51, 52, 53]
+    m = store.match(toks_b)
+    got = store.acquire("b", m)
+    tb = {0: got[0] + p.allocate(1, "b", agent_type="t")}
+    store.publish("b", toks_b, tb, m.n_full, "t")   # unready
+    free_before = p.free
+    store.release("b")      # evicted before prefill: deep entry dropped
+    store.check_invariants()
+    assert p.free == free_before + 1
+    assert store.match(toks_b).n_full == 2          # a's run still matches
+    assert store.match(toks_b).tokens == 8
+    store.release("a")
+    store.check_invariants()
