@@ -1,0 +1,133 @@
+"""CI bench-regression gate.
+
+Compares the ``--quick`` JSON output of ``prefill_bench`` / ``decode_bench``
+against a committed baseline (``results/bench/baseline.json``) and exits
+non-zero when a gated metric regressed past the tolerance band — the
+``bench-smoke`` job fails instead of merely uploading artifacts.
+
+Gated metrics are the *scale-free speedups* (suffix-vs-full prefill, jitted-
+vs-eager decode): they measure what the data-plane PRs actually claim and
+are stable across runner hardware. Absolute tokens/sec columns are recorded
+in the baseline for inspection but only gated under ``--absolute`` (a CI
+runner is not the machine the baseline was measured on).
+
+Usage:
+    python benchmarks/check_regression.py RESULTS.json [RESULTS.json ...] \
+        --baseline results/bench/baseline.json [--tolerance 0.25] \
+        [--absolute] [--update]
+
+``--update`` rewrites the baseline from the given results (run it locally
+after an intentional perf change and commit the file).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# per-bench row identity and gated metric columns
+ROW_KEYS = {
+    "prefill": ("n_req", "prefix_blocks", "suffix_tokens"),
+    "decode": ("batch",),
+    "fig12_mooncake": ("row",),
+    "fig18_tiered": ("row",),
+}
+GATED = {
+    "prefill": ("speedup",),
+    "decode": ("speedup",),
+}
+ABSOLUTE = {
+    "prefill": ("suffix_tok_s", "full_tok_s"),
+    "decode": ("jit_tok_s", "eager_tok_s"),
+}
+
+
+def _row_id(bench: str, row: dict) -> str:
+    keys = ROW_KEYS.get(bench, tuple(sorted(row)))
+    return ",".join(f"{k}={row[k]}" for k in keys if k in row)
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(bench: str, base_rows: list, cur_rows: list, tol: float,
+            absolute: bool) -> list:
+    """Return a list of failure strings for one bench."""
+    failures = []
+    base_by_id = {_row_id(bench, r): r for r in base_rows}
+    cur_by_id = {_row_id(bench, r): r for r in cur_rows}
+    metrics = GATED.get(bench, ())
+    if absolute:
+        metrics = metrics + ABSOLUTE.get(bench, ())
+    for rid, base in base_by_id.items():
+        cur = cur_by_id.get(rid)
+        if cur is None:
+            failures.append(f"{bench}[{rid}]: row missing from results "
+                            "(grid shrank without updating the baseline)")
+            continue
+        for m in metrics:
+            if m not in base:
+                continue
+            b, c = float(base[m]), float(cur.get(m, 0.0))
+            floor = b * (1.0 - tol)
+            if c < floor:
+                failures.append(
+                    f"{bench}[{rid}].{m}: {c:.3f} < {floor:.3f} "
+                    f"(baseline {b:.3f}, tolerance {tol:.0%})")
+    for rid in cur_by_id:
+        if rid not in base_by_id:
+            print(f"note: {bench}[{rid}] has no baseline row "
+                  "(new grid point — run --update to start gating it)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", nargs="+",
+                    help="bench JSON files ({'bench': .., 'rows': [..]})")
+    ap.add_argument("--baseline", default="results/bench/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate machine-dependent tokens/sec columns")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from these results")
+    args = ap.parse_args()
+
+    current = {}
+    for path in args.results:
+        data = load(path)
+        current[data["bench"]] = data["rows"]
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump({"tolerance": args.tolerance, "benches": current},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline} "
+              f"({', '.join(sorted(current))})")
+        return 0
+
+    baseline = load(args.baseline)
+    failures = []
+    for bench, rows in baseline["benches"].items():
+        if bench not in current:
+            print(f"note: baseline bench '{bench}' not in results, skipped")
+            continue
+        failures += compare(bench, rows, current[bench], args.tolerance,
+                            args.absolute)
+    if failures:
+        print("BENCH REGRESSION:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    gated = [b for b in baseline["benches"] if b in current]
+    print(f"bench regression gate passed ({', '.join(sorted(gated))}, "
+          f"tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,8 +8,20 @@ suggestion is a cost-model swap: ICI-tier per-block constants (~10x PCIe).
 Expected effect: the Alg.-1 hard gate ``T_fc <= T_transfer`` admits much
 shorter stalls (file I/O at ~100 ms becomes offloadable), so offload counts
 rise and latency drops further — bounded by the lien-protected admission.
+
+The ``*_promote`` rows add host-tier promotion on top: offloaded prompt
+blocks indexed in the radix tree are uploaded back into device blocks on a
+later same-prefix hit instead of being recomputed, so the tier's bandwidth
+is paid back in saved prefill tokens (``promotion_saved_tokens``).
+
+Standalone: ``python benchmarks/fig18_tiered.py [--quick] [--json PATH]``.
 """
 import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import A100_PCIE, CsvWriter, run_engine
 
@@ -21,16 +33,37 @@ ICI_TIER = dataclasses.replace(
 
 def run(csv: CsvWriter, quick: bool = False):
     out = {}
+    scale = dict(n_apps=8, max_time=10000.0) if quick else {}
     for name, plat in [("host_tier", A100_PCIE), ("ici_tier", ICI_TIER)]:
-        rep = run_engine("tokencake", qps=1.0, platform=plat)
+        rep = run_engine("tokencake", qps=1.0, platform=plat, **scale)
         out[name] = rep
         csv.row(f"fig18.{name}", rep["avg_latency"] * 1e6,
                 f"avg_s={rep['avg_latency']:.1f};"
                 f"offloads={rep['offloads']};"
                 f"p90_s={rep['p90_latency']:.1f}")
-    base = run_engine("baseline", qps=1.0, platform=A100_PCIE)
+        # promotion-on row: the tier serves prefix hits back to the device
+        rep = run_engine("tokencake", qps=1.0, platform=plat,
+                         host_promotion=True, **scale)
+        out[f"{name}_promote"] = rep
+        csv.row(f"fig18.{name}_promote", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"offloads={rep['offloads']};"
+                f"promotions={rep['promotions']};"
+                f"promotion_saved_tokens={rep['promotion_saved_tokens']};"
+                f"h2d_bytes={rep['h2d_bytes']}")
+    base = run_engine("baseline", qps=1.0, platform=A100_PCIE, **scale)
+    out["baseline"] = base
     d_host = (1 - out["host_tier"]["avg_latency"] / base["avg_latency"]) * 100
     d_ici = (1 - out["ici_tier"]["avg_latency"] / base["avg_latency"]) * 100
     csv.row("fig18.delta_vs_vllm", d_ici,
             f"host_tier_pct={d_host:.1f};ici_tier_pct={d_ici:.1f}")
     return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_args, write_json
+    args = bench_args()
+    out = run(CsvWriter(), quick=args.quick)
+    rows = [dict(rep, row=name) for name, rep in out.items()]
+    if args.json:
+        write_json("fig18_tiered", rows, args.json)

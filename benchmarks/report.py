@@ -91,6 +91,30 @@ def bench_section(prefix: str) -> str:
     return "```\n" + "\n".join(out) + "\n```"
 
 
+def promotion_table() -> str:
+    """Host-tier promotion summary across the tiered-cache figures: pulls
+    the promotion metrics (promotions / promoted_blocks /
+    promotion_saved_tokens / h2d_bytes / prefill_tokens) out of the fig12
+    and fig18 rows' derived columns into one table."""
+    path = os.path.join(ROOT, "results/bench/summary.csv")
+    if not os.path.exists(path):
+        return "(run benchmarks first)"
+    keys = ("promotions", "promoted_blocks", "promotion_saved_tokens",
+            "prefill_tokens", "h2d_bytes")
+    rows = ["| row | " + " | ".join(keys) + " |",
+            "|---|" + "---|" * len(keys)]
+    for line in open(path).read().splitlines():
+        if not (line.startswith("fig12") or line.startswith("fig18")):
+            continue
+        name, _, derived = line.split(",", 2)
+        kv = dict(p.split("=", 1) for p in derived.split(";") if "=" in p)
+        if not any(k in kv for k in keys[:3]):
+            continue
+        rows.append(f"| {name} | "
+                    + " | ".join(kv.get(k, "-") for k in keys) + " |")
+    return "\n".join(rows)
+
+
 SECTIONS = {
     "dryrun_table": dryrun_table,
     "roofline_table": roofline_table,
@@ -105,6 +129,7 @@ SECTIONS = {
     "fig16": lambda: bench_section("fig16"),
     "fig17": lambda: bench_section("fig17"),
     "fig18": lambda: bench_section("fig18"),
+    "promotion_table": promotion_table,
 }
 
 

@@ -40,6 +40,9 @@ class SimBackend:
     def copy_blocks(self, src, dst, device=0):
         pass
 
+    def promote_blocks(self, host_blocks, gpu_blocks):
+        pass
+
     def invalidate(self, rid):
         pass
 
@@ -176,6 +179,13 @@ class JaxBackend:
         TP mirror copies on other devices are accounting-only here."""
         if device == 0:
             self.cache.copy_blocks(src, dst)
+
+    def promote_blocks(self, host_blocks: List[int], gpu_blocks: List[int]):
+        """Engine hook: host-tier prefix promotion — materialize the
+        host-saved KV of a prefix hit into freshly allocated pool pages
+        (all layers in one ``block_scatter_layers`` launch per tensor,
+        the same H2D data plane request uploads ride)."""
+        self.cache.upload(host_blocks, gpu_blocks)
 
     def invalidate(self, rid: str):
         """Engine hook: the request's device blocks were released (evicted)

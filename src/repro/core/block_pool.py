@@ -187,14 +187,30 @@ class DevicePool:
 
 
 class HostPool:
-    """CPU offload pool: free-list recycling (§6.3). The CPU prefix index
-    lives in ``kvcache.prefix_store``'s radix tree (host ids attached to
-    token-path nodes); ``release_cb`` unhooks it when blocks free."""
+    """CPU offload pool: free-list recycling (§6.3) plus a content cache
+    tier for the H2D promotion path.
+
+    A host block's KV *content* stays addressable through the prefix
+    store's radix tree (host ids attached to token-path nodes), so blocks
+    can outlive their owning request: when an upload finishes, indexed
+    prompt copies are ``retire``d into the ``cached`` LRU instead of being
+    freed — a later same-prefix request promotes them back to device
+    blocks without paying a fresh D2H. Cached blocks are reclaimable
+    (``free`` counts them) oldest-retired-first; ``release_cb`` unhooks
+    the radix index when a block is reclaimed or freed. ``promote()`` is
+    the transfer handoff: it pins the source blocks of an in-flight H2D
+    promotion so neither LRU reclaim nor an owner release can recycle a
+    block the copy stream is still reading."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self.free_list: List[int] = list(range(num_blocks))
         self.owner: Dict[int, Optional[str]] = {}
+        # cached content tier: owner released, KV still indexed by the
+        # prefix store. Insertion order is the LRU order (dict-as-ordered-
+        # set; ``touch`` refreshes recency on a promotion hit).
+        self.cached: Dict[int, None] = {}
+        self.pins: Dict[int, int] = {}     # in-flight H2D promotion reads
         # prefix-store hook (kvcache.prefix_store): fires with the freed
         # block ids so the radix index can unhook its host-tier entries.
         # None when no store is attached.
@@ -202,26 +218,87 @@ class HostPool:
 
     @property
     def free(self) -> int:
-        return len(self.free_list)
+        """Blocks allocatable right now (unpinned cached are reclaimable).
+        On the per-step hot path (snapshot, offload gate): O(pins) — the
+        handful of in-flight promotion sources — never O(cached)."""
+        return (len(self.free_list) + len(self.cached)
+                - sum(1 for b in self.pins if b in self.cached))
 
     @property
     def used(self) -> int:
-        return self.num_blocks - self.free
+        return self.num_blocks - len(self.free_list) - len(self.cached)
 
     def allocate(self, n: int, owner: str) -> List[int]:
         if n > self.free:
             raise OutOfBlocks(f"host pool: need {n}, free {self.free}")
-        blocks = [self.free_list.pop() for _ in range(n)]
-        for b in blocks:
+        blocks = []
+        for _ in range(n):
+            if self.free_list:
+                b = self.free_list.pop()
+            else:
+                b = self._reclaim_cached()
             self.owner[b] = owner
+            blocks.append(b)
         return blocks
 
+    def _reclaim_cached(self) -> int:
+        """Evict the oldest-retired unpinned cached block (LRU); the
+        release callback unhooks its radix-index entry first."""
+        for b in self.cached:
+            if not self.pins.get(b):
+                del self.cached[b]
+                if self.release_cb is not None:
+                    self.release_cb([b])
+                return b
+        raise OutOfBlocks("host pool: only pinned cached blocks left")
+
     def release(self, blocks: Sequence[int]) -> None:
+        freed = []
         for b in blocks:
             self.owner.pop(b, None)
-            self.free_list.append(b)
-        if self.release_cb is not None and blocks:
-            self.release_cb(blocks)
+            self.cached.pop(b, None)
+            if self.pins.get(b):
+                # an in-flight promotion still reads this block: park it in
+                # the cached tier; reclaim skips it until the pin drops
+                self.cached[b] = None
+            else:
+                self.free_list.append(b)
+                freed.append(b)
+        if self.release_cb is not None and freed:
+            self.release_cb(freed)
+
+    # ---- content cache tier (H2D promotion sources) --------------------------
+    def retire(self, blocks: Sequence[int]) -> None:
+        """Upload finished but the content stays indexed: move the blocks
+        to the cached LRU instead of freeing them (no release_cb — the
+        radix index keeps its host entries until reclaim)."""
+        for b in blocks:
+            self.owner.pop(b, None)
+            self.cached.pop(b, None)     # re-retire refreshes recency
+            self.cached[b] = None
+
+    def touch(self, blocks: Sequence[int]) -> None:
+        """Refresh LRU recency of cached blocks (promotion hit)."""
+        for b in blocks:
+            if b in self.cached:
+                del self.cached[b]
+                self.cached[b] = None
+
+    def promote(self, blocks: Sequence[int]) -> None:
+        """Handoff to an H2D promotion transfer: pin the source blocks
+        for the duration of the copy (refcounted — concurrent promotions
+        may read the same host copy)."""
+        for b in blocks:
+            self.pins[b] = self.pins.get(b, 0) + 1
+
+    def promote_done(self, blocks: Sequence[int]) -> None:
+        """Transfer complete (or cancelled): drop the promotion pins."""
+        for b in blocks:
+            left = self.pins.get(b, 0) - 1
+            if left > 0:
+                self.pins[b] = left
+            else:
+                self.pins.pop(b, None)
 
 
 def block_hashes(token_ids: Sequence[int], block_tokens: int,

@@ -54,6 +54,11 @@ class EngineConfig:
     max_prefill_tokens: int = 16384      # per iteration
     prefix_cache: bool = False           # device prefix cache (vLLM-Prefix)
     cpu_prefix_cache: bool = False       # §6.3 CPU prefix index
+    # host-tier promotion: on a host hit, upload the CPU-cached prefix
+    # blocks into fresh device blocks (charged upload_time on the shared
+    # transfer stream) instead of recomputing them. Composes with any
+    # mode that indexes offloaded prompt blocks (mooncake / tokencake).
+    host_promotion: bool = False
     spatial_enabled: bool = True
     temporal_enabled: bool = True
     reactive_offload: bool = False       # Mooncake-style pressure offload
@@ -149,6 +154,10 @@ class Engine:
             "prefix_hits": 0, "cpu_prefix_hits": 0,
             "recomputed_tokens": 0, "decoded_tokens": 0,
             "prefix_saved_tokens": 0, "cow_forks": 0,
+            # host-tier promotion (H2D upload of CPU-cached prefixes)
+            "promotions": 0, "promoted_blocks": 0,
+            "promotion_saved_tokens": 0, "promotion_waits": 0,
+            "prefill_tokens": 0, "h2d_bytes": 0, "d2h_bytes": 0,
         }
         self.util_samples: List[Tuple[float, float, float]] = []
         self.app_latencies: List[float] = []
@@ -219,15 +228,8 @@ class Engine:
         """§6.2 call_finish endpoint: observed time feeds Eq. 1; resume."""
         self.temporal.on_call_finish(req, self.clock)
         if req.state == ReqState.STALLED:
-            req.current_fc = None
-            req.segment += 1
-            req.generated_in_segment = 0
             self.stalled.pop(req.rid, None)
-            if req.done:
-                self._finish_request(req)
-            else:
-                req.state = ReqState.RUNNING
-                self.running.append(req)
+            self._resume_segment(req)
         # offloaded / transfer in flight: resume via the upload path, which
         # sees fc_actual_end set and treats the request as overdue
 
@@ -327,6 +329,22 @@ class Engine:
         return out
 
     # ---------------------------------------------------------------- transfers
+    def _schedule_transfer(self, n_blocks: int, direction: str,
+                           event: str, payload) -> float:
+        """Serialize a block transfer on the single copy stream (offloads,
+        uploads and prefix promotions all share it) and schedule the
+        completion event; returns the completion time."""
+        dur = (self.platform.offload_time(n_blocks) if direction == "d2h"
+               else self.platform.upload_time(n_blocks))
+        start = max(self.clock, self.stream_free_at)
+        self.stream_free_at = start + dur
+        self.metrics["swap_blocks"] += n_blocks
+        key = "d2h_bytes" if direction == "d2h" else "h2d_bytes"
+        self.metrics[key] += n_blocks * self.platform.block_bytes
+        self.temporal.swapped_blocks += n_blocks
+        self._push(self.stream_free_at, event, payload)
+        return self.stream_free_at
+
     def _start_offload(self, req: Request) -> None:
         # only the private blocks move; the store-pinned shared prefix (the
         # leading ``shared_prefix_blocks`` of every device table) stays
@@ -342,7 +360,8 @@ class Engine:
         # PR 2 hash chain could only index root-anchored runs)
         n_prompt_full = len(req.prompt_tokens) // bt
         idxable = max(0, min(shared + n, n_prompt_full) - shared)
-        if idxable and (self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled):
+        if idxable and (self.cfg.cpu_prefix_cache or self.cfg.temporal_enabled
+                        or self.cfg.host_promotion):
             self.prefix_store.host_publish(req.prompt_tokens,
                                            req.host_blocks[:idxable],
                                            start=shared)
@@ -350,19 +369,14 @@ class Engine:
             p.mark_pending_free(
                 req.gpu_blocks_by_device.get(p.device, [])[shared:],
                 agent_type=req.agent_type)
-        dur = self.platform.offload_time(n)
-        start = max(self.clock, self.stream_free_at)
-        self.stream_free_at = start + dur
         req.state = ReqState.PENDING_OFFLOAD
         self.offloaded[req.rid] = req
         self.stalled.pop(req.rid, None)
         self.metrics["offloads"] += 1
-        self.metrics["swap_blocks"] += n
         self.temporal.offload_count += 1
-        self.temporal.swapped_blocks += n
         if self.backend is not None:
             self.backend.copy_out(req)
-        self._push(self.stream_free_at, "offload_done", req.rid)
+        self._schedule_transfer(n, "d2h", "offload_done", req.rid)
 
     def _finish_offload(self, req: Request) -> None:
         shared = req.shared_prefix_blocks
@@ -378,17 +392,12 @@ class Engine:
 
     def _start_upload(self, req: Request) -> None:
         n = len(req.host_blocks)
-        dur = self.platform.upload_time(n)
-        start = max(self.clock, self.stream_free_at)
-        self.stream_free_at = start + dur
         req.state = ReqState.PENDING_UPLOAD
         self.metrics["uploads"] += 1
-        self.metrics["swap_blocks"] += n
         self.temporal.upload_count += 1
-        self.temporal.swapped_blocks += n
         if self.backend is not None:
             self.backend.copy_in(req)
-        self._push(self.stream_free_at, "upload_done", req.rid)
+        self._schedule_transfer(n, "h2d", "upload_done", req.rid)
 
     def _finish_upload(self, req: Request) -> None:
         # reserved device-0 blocks become the live KV blocks, appended after
@@ -398,24 +407,66 @@ class Engine:
         req.gpu_blocks_by_device[0] = (req.gpu_blocks_by_device.get(0, [])
                                        + list(req.reserved_upload_blocks))
         req.reserved_upload_blocks = []
-        self.host.release(req.host_blocks)
+        # shared H2D handoff (also used by promotion completion): host
+        # copies still indexed in the radix tree retire into the cached
+        # host tier — a later same-prefix request promotes them without a
+        # fresh D2H — the rest free outright
+        self.prefix_store.host_handoff(req.host_blocks)
         req.host_blocks = []
         req.state = ReqState.UPLOADED
         self.offloaded.pop(req.rid, None)
         # resume: if the tool already finished, rejoin the running batch
         if req.fc_actual_end and req.fc_actual_end <= self.clock:
-            req.current_fc = None
-            req.segment += 1
-            req.generated_in_segment = 0
-            if req.done:
-                self._finish_request(req)
-            else:
-                req.state = ReqState.RUNNING
-                self.running.append(req)
+            self._resume_segment(req)
         else:
             # early upload: wait (resident) for call_finish
             req.state = ReqState.STALLED
             self.stalled[req.rid] = req
+
+    def _resume_segment(self, req: Request) -> None:
+        """Shared post-stall resume bookkeeping (``call_finish`` for
+        resident requests, ``_finish_upload`` for offloaded ones)."""
+        req.current_fc = None
+        req.segment += 1
+        req.generated_in_segment = 0
+        if req.done:
+            self._finish_request(req)
+        else:
+            req.state = ReqState.RUNNING
+            self.running.append(req)
+
+    # ---- host-tier prefix promotion (H2D upload of CPU-cached prefixes) -----
+    def _start_promotion(self, req: Request, m: PrefixMatch) -> None:
+        """Admission found host-cached prefix blocks the device tier
+        cannot serve: upload them into the destination blocks just
+        allocated at table positions ``[n_full, n_full + k)`` and publish
+        them (unready) into the same radix nodes the host copies sit on.
+        The transfer is charged ``upload_time(k)`` on the shared stream;
+        the entries flip ready at ``promotion_done`` so concurrent
+        sharers only ever read post-``upload_done`` KV. The requester's
+        own suffix prefill starts right after the promoted run."""
+        k = len(m.promo)
+        dests = {p.device: req.gpu_blocks_by_device[p.device][
+            m.n_full:m.n_full + k] for p in self.pools}
+        pid = self.prefix_store.promote(req.rid, m, dests)
+        if self.backend is not None:
+            self.backend.promote_blocks([hb for _, hb in m.promo], dests[0])
+        self.metrics["promotions"] += 1
+        self.metrics["promoted_blocks"] += k
+        self.metrics["promotion_saved_tokens"] += k * self.platform.block_tokens
+        self.temporal.promotion_count += 1
+        # the requester's suffix prefill attends over the promoted KV, so
+        # its compute is gated until the copy stream delivers it — the
+        # promotion's latency cost lands on the requester, not just on
+        # later transfers sharing the stream
+        req.promo_ready_at = self._schedule_transfer(
+            k, "h2d", "promotion_done", pid)
+
+    def _finish_promotion(self, pid: int) -> None:
+        """``upload_done`` for a promotion: entries become readable by
+        sharers; a cancelled promotion (requester evicted mid-transfer)
+        only drops the host pins — exactly once, never a double release."""
+        self.prefix_store.promotion_done(pid)
 
     # ----------------------------------------------------------------- finish
     def _finish_request(self, req: Request) -> None:
@@ -477,6 +528,10 @@ class Engine:
         self.prefix_store.release(victim.rid, victim)
         victim.shared_prefix_blocks = 0
         victim.prefix_cached_tokens = 0
+        # the in-flight promotion (if any) was just cancelled: drop the
+        # compute gate too, or the readmission would idle out the rest of
+        # a transfer it no longer depends on
+        victim.promo_ready_at = 0.0
         self.spatial.release(victim, cache=False)
         if self.backend is not None:
             # the data plane must forget the evicted cache: the allocator
@@ -509,7 +564,7 @@ class Engine:
             self._phase_uploads(snap, reactive=True)
 
         # Phase 4: admission
-        self._phase_admission()
+        self._phase_admission(snap)
         return snap
 
     def _phase_uploads(self, snap: PressureSnapshot, reactive=False):
@@ -548,6 +603,12 @@ class Engine:
 
     def _phase_offloads(self, snap: PressureSnapshot):
         fresh, self._fresh_stalled = self._fresh_stalled, []
+        # prefix-aware selection (ROADMAP): when several requests stall in
+        # the same step, evaluate the mostly-private ones first — they free
+        # the most device bytes per transferred block (their pinned shared
+        # prefix stays resident either way) and their indexed remainder
+        # becomes promotable host inventory
+        fresh.sort(key=lambda r: -self.temporal.private_frac(r))
         for req in fresh:
             if req.state != ReqState.STALLED:
                 continue
@@ -572,9 +633,16 @@ class Engine:
                     self.host.free >= req.offloadable_blocks:
                 self._start_offload(req)
 
-    def _phase_admission(self):
+    def _phase_admission(self, snap: Optional[PressureSnapshot] = None):
         if not self.waiting:
             return
+        # host-tier promotion budget (blocks): arbitrated by the Temporal
+        # Scheduler against the pending predictive uploads that share the
+        # transfer stream and the device headroom
+        promo_budget = 0
+        if self.cfg.host_promotion:
+            promo_budget = self.temporal.promotion_budget(
+                snap if snap is not None else self.snapshot())
         # refresh P_req (Eq. 5) before every batch decision
         ap = self._app_progress()
         bp = self._branch_progress()
@@ -603,7 +671,22 @@ class Engine:
                 deferred.append(req)
                 continue
             m = self._prefix_match(req)
-            new_tokens = max(req.context_len - m.tokens, 1)
+            if m.pending_promo:
+                # the block this request needs next is already riding an
+                # in-flight promotion: wait for its upload_done instead of
+                # recomputing it (or paying a duplicate transfer) — the
+                # entry becomes pinnable at the next scheduling step
+                self.metrics["promotion_waits"] += 1
+                deferred.append(req)
+                continue
+            k_promo = min(len(m.promo), promo_budget) if m.promo else 0
+            if k_promo < len(m.promo):   # budget-trimmed: shrink pin scope
+                m.promo = m.promo[:k_promo]
+                last = (m.n_full + k_promo) * bt - 1
+                m.promo_path = [nd for nd in m.promo_path
+                                if nd.start <= last]
+            covered = (m.n_full + k_promo) * bt if k_promo else m.tokens
+            new_tokens = max(req.context_len - covered, 1)
             if new_tokens > prefill_budget:
                 deferred.append(req)
                 continue
@@ -614,9 +697,13 @@ class Engine:
                            if due <= est_release and d > 0)
             # pin the matched prefix BEFORE allocating: pinned blocks are
             # unreclaimable, so the allocation below cannot evict the very
-            # blocks this request is about to share (rolled back on defer)
+            # blocks this request is about to share (rolled back on defer).
+            # The promotion hold extends the same discipline to the host
+            # sources and their radix nodes.
             if m:
                 self._claim_prefix(req, m)
+            if k_promo:
+                self.prefix_store.promote_hold(req.rid, m)
             if self.cfg.spatial_enabled:
                 route = self.spatial.admit(
                     req, need_new, headroom=self._headroom() + debt_due)
@@ -646,12 +733,15 @@ class Engine:
                         p.device, []).extend(blocks)
             if m:
                 self._commit_prefix(req, m)
+            if k_promo:
+                self._start_promotion(req, m)
+                promo_budget -= k_promo
             if m.cpu_hits:
                 self.metrics["cpu_prefix_hits"] += m.cpu_hits
             req.cached_prefix_blocks = m.n_full
-            req.prefix_cached_tokens = m.tokens
+            req.prefix_cached_tokens = covered
             if self.cfg.prefix_cache:
-                self._publish_prefix(req, m)
+                self._publish_prefix(req, m, start=m.n_full + k_promo)
             req.shared_prefix_blocks = self.prefix_store.pinned_count(req.rid)
             req.state = ReqState.RUNNING
             req.prefill_pending = new_tokens
@@ -676,10 +766,15 @@ class Engine:
         here, modeled as H2D in timing (§6.3). Host hits are deduplicated
         against device coverage — only blocks the device tier cannot serve
         count as cpu hits, so ``prefix_saved_tokens`` (device-tier) and
-        ``cpu_prefix_hits`` never double-count a block."""
+        ``cpu_prefix_hits`` never double-count a block. With
+        ``host_promotion`` the same walk also returns the host-backed run
+        past the device coverage as a promotion candidate (``m.promo``) —
+        promoted entries live in the device tier afterwards, so the tree
+        is matched even when the vLLM-style device cache is off."""
         m = PrefixMatch()
-        if self.cfg.prefix_cache:
-            m = self.prefix_store.match(req.prompt_tokens)
+        if self.cfg.prefix_cache or self.cfg.host_promotion:
+            m = self.prefix_store.match(req.prompt_tokens,
+                                        promote=self.cfg.host_promotion)
         if self.cfg.cpu_prefix_cache and req.generated_total == 0:
             # carried on the match, counted only when admission commits —
             # a deferred request must not re-count its hit every retry
@@ -721,14 +816,18 @@ class Engine:
                     dst = req.gpu_blocks_by_device[d][m.n_full]
                     self.backend.copy_blocks([s], [dst], device=d)
 
-    def _publish_prefix(self, req: Request, m: PrefixMatch):
+    def _publish_prefix(self, req: Request, m: PrefixMatch,
+                        start: Optional[int] = None):
         """Register the request's prompt blocks as shared entries along
         its token path, splitting the radix tree at the branch point (live
         sharing: concurrent same-prefix requests pin them once the prefill
-        has executed and ``mark_ready`` fires)."""
+        has executed and ``mark_ready`` fires). ``start`` skips the
+        already-shared leading run — the acquired full blocks plus any
+        promotion destinations published by ``_start_promotion``."""
         made = self.prefix_store.publish(
             req.rid, req.prompt_tokens, req.gpu_blocks_by_device,
-            start=m.n_full, agent_type=req.agent_type)
+            start=m.n_full if start is None else start,
+            agent_type=req.agent_type)
         if made:
             self._pending_ready.append(req.rid)
 
@@ -742,17 +841,30 @@ class Engine:
         boundary (max skew = quantum * iter_time, well under tool latency).
         """
         prefill_tokens = 0
+        # a request whose prefix promotion is still on the copy stream
+        # cannot compute yet — its suffix prefill attends over KV the
+        # transfer has not delivered. Gate both its prefill and decode
+        # until ``promo_ready_at``: the transfer's latency lands on the
+        # requester itself, not only on later transfers sharing the stream
+        gated = [r.promo_ready_at for r in self.running
+                 if r.promo_ready_at > self.clock]
         for req in self.running:
-            if req.prefill_pending:
+            if req.prefill_pending and req.promo_ready_at <= self.clock:
                 prefill_tokens += req.prefill_pending
+                self.metrics["prefill_tokens"] += req.prefill_pending
                 self.metrics["recomputed_tokens"] += max(
                     req.prefill_pending - len(req.prompt_tokens), 0)
                 req.prefill_pending = 0
 
-        decode_batch = [r for r in self.running]
+        decode_batch = [r for r in self.running
+                        if r.promo_ready_at <= self.clock]
         duration = 0.0
         if prefill_tokens:
             duration += self.platform.recompute_time(prefill_tokens)
+        if not decode_batch and gated:
+            # nothing computable this step: jump to the earliest promotion
+            # delivery instead of micro-stepping toward it
+            duration = max(duration, min(gated) - self.clock)
         if decode_batch:
             q = self.cfg.sched_quantum
             pre_grown = self.backend is not None
@@ -778,8 +890,16 @@ class Engine:
             # dropped instead of cached.
             if self._pending_ready:
                 pending, self._pending_ready = self._pending_ready, []
+                gated_rids = {r.rid for r in self.running
+                              if r.promo_ready_at > self.clock}
                 for rid in pending:
-                    self.prefix_store.mark_ready(rid)
+                    if rid in gated_rids:
+                        # promotion-gated publisher: its suffix prefill
+                        # was deferred with its decode — entries stay
+                        # unready until the prefill actually executes
+                        self._pending_ready.append(rid)
+                    else:
+                        self.prefix_store.mark_ready(rid)
             self._post_decode(decode_batch, q, grown=pre_grown)
         return max(duration, 1e-4)
 
@@ -853,6 +973,8 @@ class Engine:
                 req = self._find(payload)
                 if req is not None:
                     self._finish_upload(req)
+            elif kind == "promotion_done":
+                self._finish_promotion(payload)
 
     def _find(self, rid: str) -> Optional[Request]:
         for coll in (self.stalled, self.offloaded):

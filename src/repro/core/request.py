@@ -86,6 +86,10 @@ class Request:
 
     priority: float = 0.0                # P_req, refreshed per batch (Eq. 5)
     prefill_pending: int = 0             # tokens to (re)compute at admission
+    # host-tier promotion in flight: the suffix prefill depends on KV the
+    # copy stream is still uploading, so compute is gated until this time
+    # (0.0 = no gate). Set by engine._start_promotion, inert once passed.
+    promo_ready_at: float = 0.0
 
     # ---- derived -------------------------------------------------------------
     @property

@@ -45,6 +45,10 @@ class TemporalConfig:
     w_critical: float = 0.6                  # dominant penalty
     w_near_done: float = 0.25
     w_churn: float = 0.15
+    # prefix-aware selection (ROADMAP): penalize shared-heavy victims —
+    # their pinned prefix blocks stay resident, so each transferred byte
+    # frees less memory. Mostly-private requests (share 0) are unchanged.
+    w_private: float = 0.15
 
 
 @dataclass
@@ -67,9 +71,16 @@ class TemporalScheduler:
         # counters for the evaluation
         self.offload_count = 0
         self.upload_count = 0
+        self.promotion_count = 0
         self.rejected_offloads = 0
         self.swapped_blocks = 0
         self.emergency_offloads = 0
+
+    @staticmethod
+    def private_frac(req: Request) -> float:
+        """Fraction of a request's device blocks that would actually move
+        on offload (shared prefix blocks stay pinned on device)."""
+        return req.offloadable_blocks / max(req.num_gpu_blocks, 1)
 
     # ------------------------------------------------------------- forecasting
     def predict_fc(self, req: Request) -> float:
@@ -129,6 +140,12 @@ class TemporalScheduler:
             penalty += c.w_critical * importance
             penalty += c.w_near_done * req.completion_frac()
             penalty += c.w_churn * min(req.migration_count / 3.0, 1.0)
+        # prefix-aware offload policy: prefer victims whose blocks are
+        # mostly private — the cheapest freed byte. A shared-heavy victim
+        # moves few blocks per request disrupted (its pinned prefix stays
+        # resident either way), and its private remainder is what the
+        # host tier indexes for later promotion.
+        penalty += c.w_private * (1.0 - self.private_frac(req))
         score -= penalty
 
         if score <= c.score_threshold:
@@ -158,6 +175,17 @@ class TemporalScheduler:
         d_crit = snapshot.waiting_demand_critical
         b_shared = snapshot.shared_free
         return max(0, snapshot.free_blocks - max(0, d_crit - b_shared))
+
+    def promotion_budget(self, snapshot: PressureSnapshot) -> int:
+        """Device blocks a prefix promotion may claim this step.
+
+        Promotions share the transfer stream *and* the device headroom
+        with predictive uploads; blocks already owed to offloaded agents
+        (the pending upload debt) are served first — a promotion must
+        never displace the resume of a stalled agent whose return the
+        Temporal Scheduler planned for (§4.3)."""
+        return max(0, self.upload_budget(snapshot)
+                   - snapshot.pending_upload_debt)
 
     def upload_priority(self, req: Request, now: float,
                         importance: float) -> float:

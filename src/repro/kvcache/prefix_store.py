@@ -66,6 +66,14 @@ class PrefixMatch:
     ``tokens`` (= ``n_full * bt + partial_len``) is the device-servable
     coverage; ``matched_tokens`` is the raw token-tree match, which can be
     longer when trailing blocks were reclaimed or are still unready.
+
+    ``promo`` is the host-tier promotion run: the contiguous host-backed
+    full blocks right past the device-servable run that an H2D upload
+    could turn into device entries (filled only when the lookup ran with
+    ``promote=True``). ``pending_promo`` flags that the first unservable
+    block is *already* being promoted by another request's in-flight
+    transfer — the caller should wait for ``upload_done`` rather than
+    recompute or start a duplicate transfer.
     """
     n_full: int = 0                        # physically shareable full blocks
     partial_len: int = 0                   # matched tokens inside the next
@@ -76,9 +84,21 @@ class PrefixMatch:
     src_entry: Optional[BlockEntry] = None  # COW source for the partial
     src_path: List[RadixNode] = field(default_factory=list)  # descent to it
     cpu_hits: int = 0                      # host-only hits (no device blocks)
+    promo: List[Tuple[int, int]] = field(default_factory=list)  # (idx, host)
+    promo_path: List[RadixNode] = field(default_factory=list)   # pin targets
+    pending_promo: bool = False            # in-flight promotion at boundary
 
     def __bool__(self) -> bool:
         return self.tokens > 0
+
+
+@dataclass
+class _Promotion:
+    """One in-flight host→device prefix promotion (transfer scheduled)."""
+    rid: str                               # requesting publisher
+    entries: List[BlockEntry]              # unready device entries
+    host_blocks: List[int]                 # pinned H2D sources
+    cancelled: bool = False                # requester released mid-transfer
 
 
 class PrefixStore:
@@ -106,9 +126,18 @@ class PrefixStore:
         # cached), so stale items are skipped and no invalidation hooks
         # are needed; a drained/stale queue triggers one fresh sweep.
         self._victims: List[Tuple[RadixNode, int]] = []
+        # H2D promotion lifecycle: pin-before-allocate holds (rid -> host
+        # sources pinned while the engine allocates destinations), then
+        # in-flight transfer records keyed by promotion id. ``release``
+        # cancels a requester's live promotions (entries dropped, record
+        # kept so the completion event still unpins exactly once).
+        self._promo_seq = 0
+        self._promo_holds: Dict[str, List[int]] = {}
+        self._promos: Dict[int, _Promotion] = {}
+        self._promos_by_rid: Dict[str, set] = {}
         # store-internal lifecycle counters only; hit/COW accounting lives
         # in the engine's metrics (counted once, at admission commit)
-        self.stats = {"published": 0, "reclaimed": 0}
+        self.stats = {"published": 0, "reclaimed": 0, "promoted": 0}
         for p in pools:
             p.reclaim_cb = self._on_reclaim
             p.victim_cb = self._lru_victim
@@ -116,7 +145,8 @@ class PrefixStore:
             host.release_cb = self._on_host_release
 
     # ---- lookup --------------------------------------------------------------
-    def match(self, prompt_tokens: Sequence[int]) -> PrefixMatch:
+    def match(self, prompt_tokens: Sequence[int],
+              promote: bool = False) -> PrefixMatch:
         """Longest device-servable shared prefix for a prompt.
 
         Walks the radix tree token-by-token, then scans block indices from
@@ -130,7 +160,15 @@ class PrefixStore:
         style) so the returned pin path covers exactly the matched tokens:
         without the split, pinning the partially matched node would drag
         every entry of its divergent remainder into the unreclaimable
-        shared state for the sharer's whole lifetime."""
+        shared state for the sharer's whole lifetime.
+
+        With ``promote=True`` the lookup also fills the host-tier
+        promotion run (``m.promo``): the contiguous host-backed full
+        blocks right past the device-servable run, ready to be uploaded
+        into fresh device blocks and attached to the *same* nodes their
+        host copies sit on. A promo run and a mid-block COW fork are
+        mutually exclusive (the fork needs the match to end inside the
+        first unservable block; promotion needs it fully matched)."""
         path, matched = self.tree.walk(prompt_tokens)
         if path and matched < path[-1].end:
             # walk guarantees >= 1 matched edge token on the trailing node
@@ -161,8 +199,49 @@ class PrefixStore:
             if src_entry is not None:
                 partial_len = rem
                 src_path = path[cut:] + descent
-        return PrefixMatch(n, partial_len, n * self.bt + partial_len,
-                           matched, full, path[:cut], src_entry, src_path)
+        m = PrefixMatch(n, partial_len, n * self.bt + partial_len,
+                        matched, full, path[:cut], src_entry, src_path)
+        if promote:
+            self._scan_promotable(m, path, matched)
+        return m
+
+    def _scan_promotable(self, m: PrefixMatch, path: List[RadixNode],
+                         matched: int) -> None:
+        """Fill ``m.promo``: the contiguous run of host-backed full blocks
+        starting right where the device-servable run ends. An index that
+        already carries a device entry is never promotable — if that entry
+        is an in-flight promotion (another request's transfer), flag
+        ``pending_promo`` so the caller waits for ``upload_done`` instead
+        of recomputing or starting a duplicate transfer."""
+        hosts: Dict[int, int] = {}
+        avail: Dict[int, BlockEntry] = {}
+        for node in path:
+            hosts.update(node.host)
+            avail.update(node.entries)
+        idx = m.n_full
+        promo: List[Tuple[int, int]] = []
+        while (idx + 1) * self.bt <= matched:
+            e = avail.get(idx)
+            if e is not None:
+                if not e.ready and e.source == "promo" and not promo:
+                    m.pending_promo = True
+                break                    # device entry exists: not ours
+            if idx not in hosts:
+                break
+            promo.append((idx, hosts[idx]))
+            idx += 1
+        if not promo:
+            return
+        m.promo = promo
+        last = idx * self.bt - 1         # last promoted token position
+        m.promo_path = [nd for nd in path if nd.start <= last]
+        # a promotion run and a mid-block COW fork are mutually exclusive
+        # by construction: the fork needs the match to END inside block
+        # n_full (matched < (n_full+1)*bt) while the first promotable
+        # index needs that block fully matched ((n_full+1)*bt <= matched).
+        # So trimming the promo run later (transfer-budget pressure) never
+        # costs the request fork coverage it would otherwise have had.
+        assert not m.partial_len, "COW fork coexists with a promo run"
 
     def _find_cow_src(self, branch: RadixNode, idx: int, rem: int):
         """A ready device block for index ``idx`` at/below ``branch``.
@@ -211,6 +290,93 @@ class PrefixStore:
         for node in reversed(m.src_path):
             self._unpin(rid, node)
         return dict(m.src_entry.blocks)
+
+    # ---- host → device promotion ---------------------------------------------
+    def promote_hold(self, rid: str, m: PrefixMatch) -> None:
+        """Pin-before-allocate for a promotion (PR 3 discipline): pin the
+        token path covering the promoted run and the source host blocks
+        BEFORE the engine allocates destination blocks, so neither device
+        reclaim (triggered by that very allocation) nor host reclaim can
+        invalidate the hit mid-admission. Rolled back by ``release``."""
+        for node in m.promo_path:
+            self._pin(rid, node)
+        hbs = [hb for _, hb in m.promo]
+        self.host.promote(hbs)
+        self._promo_holds[rid] = hbs
+
+    def promote(self, rid: str, m: PrefixMatch,
+                blocks_by_device: Dict[int, List[int]]) -> int:
+        """Admission committed: attach *unready* device entries for the
+        promoted blocks at the SAME radix nodes their host copies sit on
+        (device and host tier share one tree), owned by the store and
+        pinned by ``rid``. The entries flip ready only at ``upload_done``
+        (``promotion_done``), so sharers never read in-flight KV; the
+        host pins move from the admission hold to the transfer record.
+        Returns the promotion id for the engine's completion event."""
+        hbs = self._promo_holds.pop(rid)
+        pb = self.pin_blocks.setdefault(rid, {d: [] for d in self.pools})
+        entries: List[BlockEntry] = []
+        for j, (idx, _hb) in enumerate(m.promo):
+            last = (idx + 1) * self.bt - 1
+            node = next(nd for nd in m.promo_path
+                        if nd.start <= last < nd.end)
+            e = BlockEntry(idx, {d: blocks_by_device[d][j]
+                                 for d in self.pools}, self.bt,
+                           node=node, source="promo")
+            node.entries[idx] = e
+            for d, bid in e.blocks.items():
+                self.by_block[(d, bid)] = e
+                self.pools[d].meta[bid].owner = SHARED_OWNER
+                pb[d].append(bid)
+            entries.append(e)
+        pid = self._promo_seq = self._promo_seq + 1
+        self._promos[pid] = _Promotion(rid, entries, hbs)
+        self._promos_by_rid.setdefault(rid, set()).add(pid)
+        self.stats["promoted"] += len(entries)
+        return pid
+
+    def promotion_done(self, pid: int) -> bool:
+        """Transfer-complete event: flip the promoted entries ready
+        (sharers may now pin and read them) and hand the host sources
+        back via the shared H2D handoff. Exactly-once: a cancelled
+        promotion (requester released mid-transfer) already dropped its
+        entries — only the host pins drop, and False is returned."""
+        promo = self._promos.pop(pid, None)
+        if promo is None:
+            return False
+        by_rid = self._promos_by_rid.get(promo.rid)
+        if by_rid is not None:
+            by_rid.discard(pid)
+            if not by_rid:
+                del self._promos_by_rid[promo.rid]
+        self.host_handoff(promo.host_blocks, pinned=True)
+        if promo.cancelled:
+            return False
+        for e in promo.entries:
+            e.ready = True
+        return True
+
+    def host_handoff(self, blocks: Sequence[int], pinned: bool = False)\
+            -> None:
+        """Block-adoption handoff shared by the two H2D completion paths
+        (request upload in ``engine._finish_upload`` and promotion in
+        ``promotion_done``): the transfer stops reading the host copies.
+        Upload sources (owned) retire — copies still indexed in the tree
+        stay cached so a future hit promotes without a fresh D2H, the
+        rest free. Promotion sources (pinned) drop the transfer pin and
+        get an LRU touch: a hot host copy keeps surviving reclaim."""
+        if self.host is None:
+            return
+        if pinned:
+            self.host.promote_done(blocks)
+            self.host.touch([b for b in blocks if b in self.host_nodes])
+            return
+        kept = [b for b in blocks if b in self.host_nodes]
+        if kept:
+            self.host.retire(kept)
+        rest = [b for b in blocks if b not in self.host_nodes]
+        if rest:
+            self.host.release(rest)
 
     # ---- publish -------------------------------------------------------------
     def publish(self, rid: str, prompt_tokens: Sequence[int],
@@ -292,6 +458,21 @@ class PrefixStore:
         for e in self.unready.pop(rid, []):
             if not e.ready:
                 self._drop_entry(e)
+        # cancel the requester's in-flight promotions: unfilled entries
+        # drop (their device blocks free), but the transfer record stays
+        # so the pending ``promotion_done`` event still releases the host
+        # pins exactly once (never a double-release). An admission hold
+        # that never became a transfer rolls its host pins back here.
+        hbs = self._promo_holds.pop(rid, None)
+        if hbs is not None:
+            self.host.promote_done(hbs)
+        for pid in self._promos_by_rid.pop(rid, set()):
+            promo = self._promos[pid]
+            promo.cancelled = True
+            for e in promo.entries:
+                if not e.ready:
+                    self._drop_entry(e)
+            promo.entries = []
         for node in reversed(self.pins.pop(rid, [])):
             node.refs.discard(rid)
             if not node.refs:
@@ -527,3 +708,16 @@ class PrefixStore:
                     assert bid not in cached
                 else:
                     assert e.ready and bid in cached
+        for promo in self._promos.values():
+            for e in promo.entries:
+                assert not e.ready, "in-flight promotion entry became ready"
+                assert promo.rid in e.node.refs, \
+                    "promotion entry on a node its requester doesn't pin"
+            for hb in promo.host_blocks:
+                assert self.host.pins.get(hb, 0) > 0, \
+                    f"in-flight promotion source {hb} unpinned"
+        if self.host is not None:
+            hfree, hcached = set(self.host.free_list), set(self.host.cached)
+            assert not hfree & hcached, "host block both free and cached"
+            for hb in self.host.pins:
+                assert hb not in hfree, f"pinned host block {hb} on free list"

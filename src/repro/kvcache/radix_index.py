@@ -44,12 +44,19 @@ class BlockEntry:
     a full block, fewer for the partial last block of a stored prompt (the
     remaining slots hold the publisher's decode writes — past every stored
     token path, never matchable, so sharers COW-fork before writing).
+
+    ``source`` distinguishes why an entry is unready: ``"prefill"``
+    entries flip ready within the publisher's admission quantum, while
+    ``"promo"`` entries are H2D promotions in flight on the transfer
+    stream for a *multi-step* window — the store tells sharers to wait
+    for those instead of recomputing (or double-transferring) the blocks.
     """
     index: int                       # block index = position // block_tokens
     blocks: Dict[int, int]           # device -> physical block id
     tokens: int                      # valid leading tokens in the block
-    ready: bool = False              # prefill has written the KV
+    ready: bool = False              # prefill/upload has written the KV
     node: "RadixNode" = None         # owning node (kept in sync on splits)
+    source: str = "prefill"          # "prefill" | "promo" (H2D in flight)
 
 
 def _entry_last_token(e: "BlockEntry", bt: int) -> int:

@@ -131,3 +131,56 @@ def test_prefix_cache_lookup_and_reclaim():
     assert len(pool.cached_blocks) == 2
     assert len(pool.lookup_prefix(hashes)) <= 2
     assert pool.free == 2
+
+
+def test_host_pool_cache_tier_retire_reclaim_and_promotion_pins():
+    """Host-tier promotion plumbing: retired blocks stay reclaimable
+    (free counts them) and LRU-reclaim oldest-first via release_cb;
+    promotion pins shield in-flight H2D sources from reclaim AND from an
+    owner release racing the transfer."""
+    pool = HostPool(8)
+    unhooked = []
+    pool.release_cb = lambda blocks: unhooked.extend(blocks)
+
+    a = pool.allocate(3, "a")
+    b = pool.allocate(2, "b")
+    pool.retire(a)                      # owner released, content indexed
+    assert pool.used == 2 and pool.free == 6
+    assert list(pool.cached) == a
+    assert not unhooked                 # retire keeps the index hooked
+
+    pool.promote([a[0]])                # in-flight H2D reads a[0]
+    assert pool.free == 5               # pinned cached block not allocatable
+
+    # pressure: free list (3) drains first, then cached LRU oldest-first,
+    # skipping the pinned block
+    got = pool.allocate(5, "c")
+    assert set(a[1:]) <= set(got)
+    assert sorted(unhooked) == sorted(a[1:])
+    assert a[0] in pool.cached and pool.pins[a[0]] == 1
+
+    pool.promote_done([a[0]])
+    assert not pool.pins
+    pool.allocate(1, "d")               # now reclaimable
+    assert a[0] in unhooked
+
+    # owner release during an in-flight promotion parks the block in the
+    # cached tier instead of freeing it under the transfer
+    pool.promote([b[0]])
+    pool.release(b)
+    assert b[0] in pool.cached and b[0] not in pool.free_list
+    assert b[1] in pool.free_list
+    pool.promote_done([b[0]])
+    total = (len(pool.free_list) + len(pool.cached)
+             + sum(1 for blk in range(8) if pool.owner.get(blk) is not None))
+    assert total == 8
+
+
+def test_host_pool_touch_refreshes_lru_order():
+    pool = HostPool(4)
+    a = pool.allocate(4, "a")
+    pool.retire(a)
+    pool.touch([a[0]])                  # a[0] becomes most-recently-used
+    got = pool.allocate(3, "b")
+    assert a[0] not in got              # survived: reclaim ate the others
+    assert a[0] in pool.cached

@@ -1,0 +1,386 @@
+"""Host-tier prefix promotion: H2D upload of CPU-cached prefixes.
+
+Lifecycle coverage of the promotion subsystem:
+  * a host hit past device coverage allocates destination blocks, charges
+    ``upload_time`` on the shared transfer stream, and publishes device
+    entries into the SAME radix nodes the host copies sit on;
+  * the entries are unready while the transfer is in flight — a
+    concurrent same-prefix sharer waits (``promotion_waits``) and only
+    pins/reads the entries post-``upload_done``;
+  * promotion arbitrates against pending predictive uploads on the
+    Temporal Scheduler's budget (upload debt is served first);
+  * a promoted-but-idle host copy survives its owner's upload (retired
+    into the cached host tier) and is LRU-reclaimed under host pressure;
+  * cancel-during-transfer (requester evicted) never double-releases the
+    destination or host blocks;
+  * with the real JaxBackend, the promoted-run suffix prefill produces
+    logits identical to an unshared dense prefill.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.graph import AppGraph
+from repro.core.request import ReqState
+
+BT = A100_PCIE.block_tokens   # 16
+
+# transfers slow enough to stay in flight across several engine steps
+SLOW_PCIE = dataclasses.replace(A100_PCIE, name="slow_pcie",
+                                upload_ms_per_block=400.0)
+
+
+def mk_engine(platform=A100_PCIE, gpu_blocks=64, host_blocks=64, **kw):
+    kw.setdefault("max_running", 8)
+    cfg = EngineConfig.preset("mooncake", gpu_blocks=gpu_blocks,
+                              host_blocks=host_blocks,
+                              sched_quantum=4, host_promotion=True, **kw)
+    return Engine(cfg, platform)
+
+
+def submit_one(eng, prompt, decode_len=64, name="n0", fc=False):
+    from repro.core.graph import SearchNode
+    g = AppGraph(f"app{len(eng.apps)}")
+    if fc:
+        # two segments: a forced stall/offload can resume into segment 1
+        g.add_agent(name, "w", len(prompt), decode_segments=[decode_len, 8],
+                    func_calls=[SearchNode()])
+    else:
+        g.add_agent(name, "w", len(prompt), decode_len=decode_len)
+    return eng.submit_app(g, eng.clock, prompt_tokens={0: list(prompt)})
+
+
+def step(eng):
+    eng._process_events_until(eng.clock)
+    eng.schedule_step()
+    if eng.running:
+        eng.clock += eng.execute_iteration()
+    else:
+        eng.clock += 1e-3
+
+
+def offload_now(eng, req):
+    """Force the stall->offload path and drain the D2H transfer."""
+    req.state = ReqState.STALLED
+    eng.stalled[req.rid] = req
+    if req in eng.running:
+        eng.running.remove(req)
+    req.fc_predicted_end = eng.clock + 1e9   # park: no predictive upload
+    eng._start_offload(req)
+    eng._process_events_until(eng.stream_free_at + 1e-9)
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+
+
+def mk_shared_prompts(seed=0, prefix_blocks=3):
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(0, 50000, prefix_blocks * BT)]
+    sfx = [[int(t) for t in rng.integers(0, 50000, 7 + i)] for i in range(3)]
+    return prefix, sfx
+
+
+def test_promotion_lifecycle_host_hit_to_device_publish():
+    """B's host hit is promoted H2D: destinations allocated, transfer
+    charged upload_time on the shared stream, entries unready in flight;
+    concurrent sharer C waits and pins only post-upload_done."""
+    eng = mk_engine(platform=SLOW_PCIE)
+    prefix, sfx = mk_shared_prompts()
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+    assert len(eng.prefix_store.host_nodes) == 3   # 3 prompt blocks indexed
+
+    stream0 = eng.stream_free_at
+    clock0 = eng.clock
+    submit_one(eng, prefix + sfx[1], name="b")
+    submit_one(eng, prefix + sfx[2], name="c")   # concurrent sharer
+    step(eng)
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    assert eng.metrics["promotions"] == 1
+    assert eng.metrics["promoted_blocks"] == 3
+    assert eng.metrics["promotion_saved_tokens"] == 3 * BT
+    assert eng.metrics["cpu_prefix_hits"] == 3
+    # charged upload_time(3) on the shared transfer stream
+    assert eng.stream_free_at >= stream0 + SLOW_PCIE.upload_time(3) - 1e-9
+    assert eng.metrics["h2d_bytes"] == 3 * SLOW_PCIE.block_bytes
+    # the requester's own suffix prefill starts after the promoted run —
+    # and is gated until the transfer delivers: its prefill has not been
+    # charged yet, and the step jumped the clock toward upload_done
+    assert rb.prefix_cached_tokens == 3 * BT
+    assert rb.shared_prefix_blocks == 3
+    assert rb.prefill_pending > 0                    # gated, not executed
+    assert rb.promo_ready_at >= clock0 + SLOW_PCIE.upload_time(3) - 1e-9
+    # in-flight: entries attached to the radix nodes but unready
+    store = eng.prefix_store
+    entries = [store.by_block[(0, bid)] for bid in rb.gpu_blocks[:3]]
+    assert all(not e.ready and e.source == "promo" for e in entries)
+    # each promoted entry sits on a node that also carries its host copy
+    assert all(e.index in e.node.host for e in entries)
+
+    # the concurrent sharer saw the in-flight entries at the same
+    # admission round: it must wait for upload_done, not recompute and
+    # not start a duplicate transfer
+    assert eng.metrics["promotion_waits"] >= 1
+    assert eng.metrics["promotions"] == 1            # no duplicate
+    assert not any(r.rid.endswith("c") for r in eng.running)
+
+    # transfer completes: entries ready, C admits and pins them
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    step(eng)
+    assert all(e.ready for e in entries)
+    rc = next(r for r in eng.running if r.rid.endswith("c"))
+    assert rc.gpu_blocks[:3] == rb.gpu_blocks[:3]    # same physical blocks
+    assert rc.prefix_cached_tokens >= 3 * BT
+    assert eng.metrics["promotions"] == 1
+    assert eng.metrics["prefix_hits"] >= 3
+    store.check_invariants()
+
+
+def test_promotion_denied_when_upload_debt_consumes_budget():
+    """Pending predictive-upload debt is served before promotions: when
+    the offloaded agents are owed every free block, a host hit stays a
+    lookup (recompute), not a transfer."""
+    eng = mk_engine(gpu_blocks=12, host_blocks=64)
+    prefix, sfx = mk_shared_prompts(seed=1)
+    submit_one(eng, prefix + sfx[0], name="a1")
+    step(eng)
+    (ra1,) = eng.running
+    offload_now(eng, ra1)
+    rng = np.random.default_rng(99)
+    submit_one(eng, [int(t) for t in rng.integers(0, 50000, 120)], name="a2")
+    step(eng)
+    ra2 = next(r for r in eng.running if r.rid.endswith("a2"))
+    offload_now(eng, ra2)
+    debt = len(ra1.host_blocks) + len(ra2.host_blocks)
+    snap = eng.snapshot()
+    assert snap.pending_upload_debt == debt >= snap.free_blocks
+    assert eng.temporal.promotion_budget(snap) == 0
+
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    assert eng.metrics["promotions"] == 0
+    assert eng.metrics["cpu_prefix_hits"] == 3       # hit counted, not paid
+    assert rb.prefix_cached_tokens == 0              # full recompute
+    assert not eng.host.pins and not eng.prefix_store._promo_holds
+    eng.prefix_store.check_invariants()
+
+
+def test_promoted_idle_host_copy_lru_reclaimed_under_pressure():
+    """After its owner uploads back, a host prefix copy retires into the
+    cached host tier (still promotable, repeat hits pay no fresh D2H) and
+    is LRU-reclaimed — unindexed from the radix tree — when the host pool
+    needs blocks."""
+    eng = mk_engine(gpu_blocks=64, host_blocks=8)
+    prefix, sfx = mk_shared_prompts(seed=2)
+    submit_one(eng, prefix + sfx[0], name="a", fc=True)
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+    # bring A back: overdue upload path (tool already returned)
+    ra.fc_predicted_end = eng.clock
+    ra.fc_actual_end = eng.clock
+    for _ in range(6):
+        step(eng)
+        if ra.rid not in eng.offloaded:
+            break
+    assert ra.rid not in eng.offloaded
+    # host copies retired, not freed: indexed + cached + zero owned
+    assert eng.host.used == 0
+    assert len(eng.host.cached) >= 3
+    assert eng.prefix_store.host_match(prefix + sfx[1]) == 3
+    # host pressure reclaims the idle copies and unhooks the index
+    eng.host.allocate(eng.host.free, "pressure")
+    assert eng.prefix_store.host_match(prefix + sfx[1]) == 0
+    assert not eng.prefix_store.host_nodes
+    eng.prefix_store.check_invariants()
+
+
+def test_repeat_hit_promotes_from_retired_copy_without_new_offload():
+    """The retired host copy serves a second promotion: no new D2H
+    (offloads stays 1) and the copy's recency is refreshed."""
+    eng = mk_engine(gpu_blocks=64, host_blocks=32)
+    prefix, sfx = mk_shared_prompts(seed=3)
+    submit_one(eng, prefix + sfx[0], name="a", fc=True)
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+    ra.fc_predicted_end = ra.fc_actual_end = eng.clock
+    for _ in range(6):
+        step(eng)
+        if ra.rid not in eng.offloaded:
+            break
+    assert eng.metrics["offloads"] == 1
+    # run A to completion: its device blocks were private (mooncake never
+    # publishes its own prompt), so the device tier holds no copy of the
+    # prefix — only the retired host cache can serve B
+    while any(not r.done for a in eng.apps.values()
+              for r in a.node_request.values()) and eng.clock < 1e5:
+        step(eng)
+    assert eng.host.used == 0 and len(eng.host.cached) >= 3
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)
+    assert eng.metrics["promotions"] == 1            # promoted from cache
+    assert eng.metrics["offloads"] == 1              # no fresh D2H
+    eng.prefix_store.check_invariants()
+
+
+def test_cancel_during_transfer_never_double_releases():
+    """Satellite regression: requester evicted while its promotion is in
+    flight. Its pins drop and the unready entries free their destination
+    blocks once; the later promotion_done event must only drop the host
+    pins — never free the destinations a second time."""
+    eng = mk_engine(platform=SLOW_PCIE)
+    prefix, sfx = mk_shared_prompts(seed=4)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    assert eng.metrics["promotions"] == 1
+    store, p = eng.prefix_store, eng.pools[0]
+    assert store._promos and not any(pr.cancelled
+                                     for pr in store._promos.values())
+
+    eng._evict(rb, None)                             # cancel mid-transfer
+    assert rb.promo_ready_at == 0.0   # compute gate dropped with the promo
+    assert all(pr.cancelled for pr in store._promos.values())
+    free_after_evict = p.free
+    assert len(set(p.free_list)) == len(p.free_list)
+
+    # completion event fires on the dead promotion: host pins drop, and
+    # nothing is released twice
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    eng._process_events_until(eng.clock)
+    assert not store._promos
+    assert not eng.host.pins
+    assert p.free == free_after_evict
+    assert len(set(p.free_list)) == len(p.free_list), "double-release!"
+    assert p.free + len(p.pending_free) == p.num_blocks
+    store.check_invariants()
+
+    # the path stays healthy: B re-admits and promotes again cleanly
+    step(eng)
+    assert rb.state == ReqState.RUNNING
+    assert eng.metrics["promotions"] == 2
+    store.check_invariants()
+
+
+def test_promotion_rollback_on_admission_defer_releases_hold():
+    """Pin-before-allocate discipline: a request that pins a promotion
+    hold but then fails admission rolls the host pins and node pins back
+    (no leaked holds, store drains clean)."""
+    eng = mk_engine(gpu_blocks=16, host_blocks=64, max_running=1)
+    prefix, sfx = mk_shared_prompts(seed=5)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+    # occupy the engine with another running request so B hits max_running
+    submit_one(eng, [int(x) for x in range(64)], name="x")
+    step(eng)
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)                         # B deferred (max_running=1)
+    assert not eng.prefix_store._promo_holds
+    assert not eng.host.pins
+    eng.prefix_store.check_invariants()
+
+
+class TestPromotionE2E:
+    """Acceptance: with the real JaxBackend, request B admits after A's
+    prefix was offloaded, its host hit is promoted H2D, it prefills only
+    the suffix, and its logits equal an unshared dense prefill."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax.numpy as jnp
+        from repro.configs.base import ModelConfig
+        from repro.core.backend import JaxBackend
+        from repro.models import model as M
+
+        cfg = ModelConfig(name="tiny-f32", arch_type="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=50000, dtype="float32")
+        ecfg = EngineConfig.preset("mooncake", gpu_blocks=64, host_blocks=32,
+                                   max_running=8, sched_quantum=4,
+                                   host_promotion=True)
+        backend = JaxBackend(cfg, ecfg, A100_PCIE)
+        eng = Engine(ecfg, A100_PCIE, backend=backend)
+
+        prefix, sfx = mk_shared_prompts(seed=7)
+        prompt_a, prompt_b = prefix + sfx[0], prefix + sfx[1]
+
+        # reference: B's prompt decoded alone on a fresh engine
+        ref_ecfg = EngineConfig.preset("baseline", gpu_blocks=64,
+                                       host_blocks=32, max_running=8,
+                                       sched_quantum=4)
+        ref_backend = JaxBackend(cfg, ref_ecfg, A100_PCIE, key=backend.key)
+        ref_backend.params = backend.params
+        ref_eng = Engine(ref_ecfg, A100_PCIE, backend=ref_backend)
+        submit_one(ref_eng, prompt_b, decode_len=16)
+        for _ in range(30):
+            step(ref_eng)
+            if not (ref_eng.running or ref_eng.waiting or ref_eng.events):
+                break
+        (ref_rid, ref_toks), = ref_backend.generated.items()
+
+        submit_one(eng, prompt_a, decode_len=48, name="a")
+        step(eng)
+        (ra,) = eng.running
+        offload_now(eng, ra)
+        uploads_before = eng.metrics["uploads"]
+        prefill_before = eng.metrics["prefill_tokens"]
+        stream0 = eng.stream_free_at
+        submit_one(eng, prompt_b, decode_len=16, name="b")
+        step(eng)          # admits B + starts the promotion (B gated)
+        step(eng)          # transfer delivered: B's suffix prefill runs
+        rb = next(r for r in eng.running if r.rid.endswith("b"))
+        return dict(eng=eng, backend=backend, cfg=cfg, rb=rb,
+                    prompt_b=prompt_b, ref_toks=ref_toks,
+                    ref_backend=ref_backend, stream0=stream0,
+                    uploads_before=uploads_before,
+                    prefill_before=prefill_before, M=M, jnp=jnp)
+
+    def test_promotion_metrics_and_stream_charge(self, setup):
+        eng = setup["eng"]
+        assert eng.metrics["promotions"] == 1
+        assert eng.metrics["promoted_blocks"] == 3
+        assert eng.metrics["promotion_saved_tokens"] == 3 * BT
+        assert eng.metrics["uploads"] == setup["uploads_before"]
+        assert eng.stream_free_at >= (setup["stream0"]
+                                      + A100_PCIE.upload_time(3) - 1e-9)
+
+    def test_suffix_only_prefill(self, setup):
+        rb, prompt_b = setup["rb"], setup["prompt_b"]
+        assert rb.prefix_cached_tokens == 3 * BT
+        # the engine charged B only its suffix, not the promoted run
+        delta = (setup["eng"].metrics["prefill_tokens"]
+                 - setup["prefill_before"])
+        assert delta == len(prompt_b) - 3 * BT
+        assert setup["backend"].cache_len[rb.rid] >= len(prompt_b)
+
+    def test_logits_equal_unshared_dense_prefill(self, setup):
+        M, jnp = setup["M"], setup["jnp"]
+        backend, cfg = setup["backend"], setup["cfg"]
+        toks = [t % cfg.vocab_size for t in setup["prompt_b"]]
+        batch = {"tokens": jnp.asarray([toks], jnp.int32)}
+        want, _ = M.prefill(cfg, backend.params, batch)
+        got = backend.last_prefill_logits[setup["rb"].rid]
+        np.testing.assert_allclose(
+            got, np.asarray(want[0, 0], np.float32), atol=2e-4, rtol=2e-4)
+
+    def test_decode_continues_identically(self, setup):
+        eng, rb = setup["eng"], setup["rb"]
+        for _ in range(40):
+            step(eng)
+            if rb.done:
+                break
+        got = setup["backend"].generated[rb.rid][:16]
+        assert got == setup["ref_toks"][:16]
+        eng.prefix_store.check_invariants()

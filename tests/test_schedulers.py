@@ -251,3 +251,68 @@ def test_reserve_step_never_overshoots(host_n, reserved_n, budget):
     deficit = len(req.host_blocks) - len(req.reserved_upload_blocks)
     assert 0 <= n <= max(0, math.ceil(deficit / 2))
     assert n <= max(budget, 0)
+
+
+class TestPromotionArbitration:
+    """Host-tier promotion shares the transfer stream / device headroom
+    with predictive uploads; pending upload debt is served first."""
+
+    def test_budget_is_upload_budget_minus_debt(self):
+        import dataclasses
+        sched, pools, host = mk_temporal()
+        snap = mk_snapshot(free=100)
+        assert sched.promotion_budget(snap) == sched.upload_budget(snap)
+        indebted = dataclasses.replace(snap, pending_upload_debt=70)
+        assert sched.promotion_budget(indebted) == \
+            sched.upload_budget(indebted) - 70
+        drowned = dataclasses.replace(snap, pending_upload_debt=10_000)
+        assert sched.promotion_budget(drowned) == 0
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(1, 400), st.integers(0, 400), st.integers(0, 500))
+    def test_budget_never_negative_and_bounded_by_upload(self, free, crit,
+                                                         debt):
+        import dataclasses
+        sched, pools, host = mk_temporal()
+        snap = dataclasses.replace(
+            mk_snapshot(free=free, wait_crit=crit),
+            pending_upload_debt=debt)
+        b = sched.promotion_budget(snap)
+        assert 0 <= b <= sched.upload_budget(snap)
+
+
+class TestPrefixAwareOffloadPolicy:
+    """ROADMAP selection rule: prefer stalling victims whose blocks are
+    mostly private — the cheapest freed byte (pinned shared prefix blocks
+    never move, so a shared-heavy victim frees little per disruption)."""
+
+    def _stalled(self, pools, blocks=40, shared=0):
+        r = mk_request()
+        r.gpu_blocks_by_device[0] = pools[0].allocate(blocks, r.rid)
+        r.shared_prefix_blocks = shared
+        r.current_fc = SearchNode(predict_time=3.0)
+        return r
+
+    def test_private_victim_scores_higher(self):
+        sched, pools, host = mk_temporal()
+        waiting = [mk_request(prompt=100)]
+        snap = mk_snapshot(free=100, wait_tot=100, waiting=1)
+        private = self._stalled(pools, blocks=40, shared=0)
+        shared = self._stalled(pools, blocks=40, shared=30)
+        d_priv = sched.should_offload(private, waiting, snap, {})
+        d_shar = sched.should_offload(shared, waiting, snap, {})
+        assert d_priv.score > d_shar.score
+        assert sched.private_frac(private) == 1.0
+        assert sched.private_frac(shared) == 0.25
+
+    def test_all_private_request_unpenalized(self):
+        """share 0 => zero penalty: pre-promotion benchmark behavior of
+        the non-prefix modes is bit-identical."""
+        sched, pools, host = mk_temporal()
+        req = self._stalled(pools, blocks=40, shared=0)
+        waiting = [mk_request(prompt=100)]
+        snap = mk_snapshot(free=100, wait_tot=100, waiting=1)
+        base = sched.should_offload(req, waiting, snap, {})
+        sched.cfg.w_private = 0.0
+        no_term = sched.should_offload(req, waiting, snap, {})
+        assert base.score == no_term.score
