@@ -9,7 +9,10 @@ turns on host-tier promotion: a CPU prefix hit is *uploaded back* into
 device blocks (charged ``upload_time`` on the transfer stream) instead of
 being recomputed, so the tiered cache actually pays back its D2H cost —
 visible as ``promotions``/``promotion_saved_tokens`` and a lower
-``prefill_tokens`` than the lookup-only row.
+``prefill_tokens`` than the lookup-only row. ``mooncake_promote_cost``
+runs the same workload under the transfer-economics admission (cost-model
+cutoff + promote-vs-recompute crossover); on this unchunked platform its
+zero-backlog decisions are bit-identical to always-promote.
 
 Standalone: ``python benchmarks/fig12_mooncake.py [--quick] [--json PATH]``
 (the CI ``sim-smoke`` job runs ``--quick`` and asserts the promotion row
@@ -50,14 +53,35 @@ def run(csv: CsvWriter, quick: bool = False):
                 f"prefix_hits={rep['prefix_hits']};"
                 f"prefix_saved_tokens={rep['prefix_saved_tokens']}")
         # host-tier promotion: CPU hits are uploaded H2D instead of
-        # recomputed — the honest tiered-cache mooncake
+        # recomputed — the honest tiered-cache mooncake (always-promote,
+        # the pre-economics policy)
         rep = run_engine("mooncake", qps=qps, platform=A100_PCIE,
-                         host_promotion=True, **scale)
+                         host_promotion=True, promotion_policy="always",
+                         **scale)
         out[(qps, "mooncake_promote")] = rep
         csv.row(f"fig12.qps{qps}.mooncake_promote", rep["avg_latency"] * 1e6,
                 f"avg_s={rep['avg_latency']:.1f};"
                 f"promotions={rep['promotions']};"
                 f"promoted_blocks={rep['promoted_blocks']};"
+                f"promotion_saved_tokens={rep['promotion_saved_tokens']};"
+                f"prefill_tokens={rep['prefill_tokens']};"
+                f"h2d_bytes={rep['h2d_bytes']}")
+        # transfer-economics policy row: the cost model trims the
+        # promotable run / elects recompute under stream backlog. On this
+        # unchunked platform zero-backlog decisions are bit-identical to
+        # always-promote — the row demonstrates the default policy is
+        # free where the stream is never the bottleneck
+        rep = run_engine("mooncake", qps=qps, platform=A100_PCIE,
+                         host_promotion=True, promotion_policy="cost",
+                         **scale)
+        out[(qps, "mooncake_promote_cost")] = rep
+        csv.row(f"fig12.qps{qps}.mooncake_promote_cost",
+                rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"promotions={rep['promotions']};"
+                f"promotion_cutoffs={rep['promotion_cutoffs']};"
+                f"recompute_elections={rep['recompute_elections']};"
+                f"promo_blocks_trimmed={rep['promo_blocks_trimmed']};"
                 f"promotion_saved_tokens={rep['promotion_saved_tokens']};"
                 f"prefill_tokens={rep['prefill_tokens']};"
                 f"h2d_bytes={rep['h2d_bytes']}")

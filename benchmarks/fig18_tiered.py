@@ -14,7 +14,20 @@ blocks indexed in the radix tree are uploaded back into device blocks on a
 later same-prefix hit instead of being recomputed, so the tier's bandwidth
 is paid back in saved prefill tokens (``promotion_saved_tokens``).
 
-Standalone: ``python benchmarks/fig18_tiered.py [--quick] [--json PATH]``.
+The ``*_promote_cost`` rows run the transfer-economics admission policy
+against the same workload: the cost model cuts the promotable run at the
+marginal block where upload stops beating recompute and elects a full
+recompute when the shared stream is backlogged past the crossover.
+On the unchunked host tier this is (near-)identical to always-promote —
+the zero-backlog full-run decision is bit-identical by construction. The
+``chunked_tier`` platform stages transfers through a 4-block pinned
+buffer (one 10 ms launch per chunk, Mooncake-style swap granularity):
+there the always-promote policy overpays for short tails and backlogged
+runs, and the cost model's cutoffs/elections win end-to-end latency.
+
+Standalone: ``python benchmarks/fig18_tiered.py [--quick] [--json PATH]``
+(the CI ``sim-smoke`` job asserts the chunked cost row trims/elects and
+is no slower than always-promote).
 """
 import dataclasses
 import os
@@ -30,6 +43,20 @@ ICI_TIER = dataclasses.replace(
     offload_ms_per_block=0.012, upload_ms_per_block=0.012,
     transfer_fixed_ms=0.02)
 
+# staging-buffer chunked copy stream: each 4-block chunk pays the launch
+# latency again, so large transfers are relatively expensive and short
+# tails past a chunk boundary are cheaper to recompute than to upload
+CHUNKED_TIER = dataclasses.replace(
+    A100_PCIE, name="a100_chunked_stream",
+    stream_chunk_blocks=4, transfer_fixed_ms=10.0)
+
+ECON = ("promotions", "promotion_cutoffs", "recompute_elections",
+        "promo_blocks_trimmed", "promotion_saved_tokens", "prefill_tokens")
+
+
+def _econ_cols(rep) -> str:
+    return ";".join(f"{k}={rep[k]}" for k in ECON)
+
 
 def run(csv: CsvWriter, quick: bool = False):
     out = {}
@@ -42,8 +69,10 @@ def run(csv: CsvWriter, quick: bool = False):
                 f"offloads={rep['offloads']};"
                 f"p90_s={rep['p90_latency']:.1f}")
         # promotion-on row: the tier serves prefix hits back to the device
+        # (always-promote = the pre-economics policy, the comparison base)
         rep = run_engine("tokencake", qps=1.0, platform=plat,
-                         host_promotion=True, **scale)
+                         host_promotion=True, promotion_policy="always",
+                         **scale)
         out[f"{name}_promote"] = rep
         csv.row(f"fig18.{name}_promote", rep["avg_latency"] * 1e6,
                 f"avg_s={rep['avg_latency']:.1f};"
@@ -51,6 +80,27 @@ def run(csv: CsvWriter, quick: bool = False):
                 f"promotions={rep['promotions']};"
                 f"promotion_saved_tokens={rep['promotion_saved_tokens']};"
                 f"h2d_bytes={rep['h2d_bytes']}")
+    # cost-model policy row on the unchunked host tier: zero-backlog
+    # decisions are bit-identical to always-promote, so this row shows
+    # the default policy costs nothing where there is nothing to save
+    rep = run_engine("tokencake", qps=1.0, platform=A100_PCIE,
+                     host_promotion=True, promotion_policy="cost", **scale)
+    out["host_tier_promote_cost"] = rep
+    csv.row("fig18.host_tier_promote_cost", rep["avg_latency"] * 1e6,
+            f"avg_s={rep['avg_latency']:.1f};" + _econ_cols(rep))
+    # chunked-stream tier: the policy comparison that earns its keep —
+    # same platform, always-promote vs cost-model admission
+    for policy in ("always", "cost"):
+        rep = run_engine("tokencake", qps=1.0, platform=CHUNKED_TIER,
+                         host_promotion=True, promotion_policy=policy,
+                         **scale)
+        row = ("chunked_tier_promote" if policy == "always"
+               else "chunked_tier_promote_cost")
+        out[row] = rep
+        csv.row(f"fig18.{row}", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"stream_wait_s={rep['stream_wait_s']:.1f};"
+                + _econ_cols(rep))
     base = run_engine("baseline", qps=1.0, platform=A100_PCIE, **scale)
     out["baseline"] = base
     d_host = (1 - out["host_tier"]["avg_latency"] / base["avg_latency"]) * 100

@@ -93,14 +93,15 @@ def bench_section(prefix: str) -> str:
 
 def promotion_table() -> str:
     """Host-tier promotion summary across the tiered-cache figures: pulls
-    the promotion metrics (promotions / promoted_blocks /
-    promotion_saved_tokens / h2d_bytes / prefill_tokens) out of the fig12
-    and fig18 rows' derived columns into one table."""
+    the promotion and transfer-economics metrics (promotions / cutoffs /
+    recompute elections / trimmed blocks / saved tokens / bytes) out of
+    the fig12 and fig18 rows' derived columns into one table."""
     path = os.path.join(ROOT, "results/bench/summary.csv")
     if not os.path.exists(path):
         return "(run benchmarks first)"
-    keys = ("promotions", "promoted_blocks", "promotion_saved_tokens",
-            "prefill_tokens", "h2d_bytes")
+    keys = ("promotions", "promotion_cutoffs", "recompute_elections",
+            "promo_blocks_trimmed", "promoted_blocks",
+            "promotion_saved_tokens", "prefill_tokens", "h2d_bytes")
     rows = ["| row | " + " | ".join(keys) + " |",
             "|---|" + "---|" * len(keys)]
     for line in open(path).read().splitlines():

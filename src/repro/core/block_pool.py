@@ -19,6 +19,7 @@ between the simulator and the JAX engine.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -186,6 +187,17 @@ class DevicePool:
         return hit
 
 
+@dataclass
+class CachedBlockMeta:
+    """Capacity-policy state of one cached host block: when it last
+    entered or was hit in the cached tier (recency) and how many times a
+    promotion has hit it (frequency). The block's request group lives in
+    ``HostPool.group_of`` / ``group_cached`` — the authoritative quota
+    accounting — not here."""
+    last_touch: float = 0.0
+    hits: int = 1
+
+
 class HostPool:
     """CPU offload pool: free-list recycling (§6.3) plus a content cache
     tier for the H2D promotion path.
@@ -193,24 +205,52 @@ class HostPool:
     A host block's KV *content* stays addressable through the prefix
     store's radix tree (host ids attached to token-path nodes), so blocks
     can outlive their owning request: when an upload finishes, indexed
-    prompt copies are ``retire``d into the ``cached`` LRU instead of being
-    freed — a later same-prefix request promotes them back to device
-    blocks without paying a fresh D2H. Cached blocks are reclaimable
-    (``free`` counts them) oldest-retired-first; ``release_cb`` unhooks
-    the radix index when a block is reclaimed or freed. ``promote()`` is
-    the transfer handoff: it pins the source blocks of an in-flight H2D
-    promotion so neither LRU reclaim nor an owner release can recycle a
-    block the copy stream is still reading."""
+    prompt copies are ``retire``d into the ``cached`` tier instead of
+    being freed — a later same-prefix request promotes them back to
+    device blocks without paying a fresh D2H. Cached blocks are
+    reclaimable (``free`` counts them); ``release_cb`` unhooks the radix
+    index when a block is reclaimed or freed. ``promote()`` is the
+    transfer handoff: it pins the source blocks of an in-flight H2D
+    promotion so neither reclaim nor an owner release can recycle a block
+    the copy stream is still reading.
+
+    Capacity policy (frequency + TTL + per-group quota, replacing the
+    pure-LRU reclaim): each cached block carries a hit-count-decayed
+    hotness score ``hits * exp(-age / hit_decay)`` — reclaim evicts the
+    coldest unpinned block, so a prefix that keeps getting promoted
+    outlives an idle one regardless of retire order (with no hits and no
+    clock the score degenerates to retire order, i.e. plain LRU). Blocks
+    idle past ``cache_ttl`` since their last touch score as expired and
+    are swept by ``expire()`` (the Temporal Scheduler runs the sweep each
+    step, so offload capacity — the predictive-upload plans' host
+    destination — is reclaimed from cold copies *before* an allocation
+    has to). When ``group_quota_frac > 0``, a request group holding more
+    than that fraction of the pool in cached copies is reclaimed from
+    first (coldest within the over-quota group), so one chatty app cannot
+    squeeze every other app's promotable inventory out of the host tier.
+    Knobs are wired from ``TemporalConfig`` by the Temporal Scheduler."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self.free_list: List[int] = list(range(num_blocks))
         self.owner: Dict[int, Optional[str]] = {}
         # cached content tier: owner released, KV still indexed by the
-        # prefix store. Insertion order is the LRU order (dict-as-ordered-
-        # set; ``touch`` refreshes recency on a promotion hit).
+        # prefix store. Insertion order (dict-as-ordered-set) is the
+        # tie-break order of the frequency score — equal-score reclaim is
+        # oldest-retired-first, and ``touch`` refreshes recency.
         self.cached: Dict[int, None] = {}
+        self.cached_meta: Dict[int, CachedBlockMeta] = {}
+        self.group_of: Dict[int, str] = {}   # block -> request group
+        # cached blocks per group, maintained incrementally so the quota
+        # check in _reclaim_cached is O(1), not an O(cached) rebuild per
+        # reclaimed block (allocate under pressure reclaims in a loop)
+        self.group_cached: Dict[str, int] = {}
         self.pins: Dict[int, int] = {}     # in-flight H2D promotion reads
+        # capacity-policy knobs (TemporalConfig via TemporalScheduler)
+        self.clock = 0.0                   # virtual time, engine-ticked
+        self.cache_ttl = math.inf          # idle seconds before expiry
+        self.hit_decay = 600.0             # hotness-score decay constant
+        self.group_quota_frac = 0.0        # cached fraction cap per group
         # prefix-store hook (kvcache.prefix_store): fires with the freed
         # block ids so the radix index can unhook its host-tier entries.
         # None when no store is attached.
@@ -228,7 +268,8 @@ class HostPool:
     def used(self) -> int:
         return self.num_blocks - len(self.free_list) - len(self.cached)
 
-    def allocate(self, n: int, owner: str) -> List[int]:
+    def allocate(self, n: int, owner: str,
+                 group: Optional[str] = None) -> List[int]:
         if n > self.free:
             raise OutOfBlocks(f"host pool: need {n}, free {self.free}")
         blocks = []
@@ -238,30 +279,115 @@ class HostPool:
             else:
                 b = self._reclaim_cached()
             self.owner[b] = owner
+            if group is not None:
+                self.group_of[b] = group
             blocks.append(b)
         return blocks
 
+    # ---- capacity policy (frequency + TTL + group quota) ---------------------
+    def tick(self, now: float) -> None:
+        """Advance the pool's virtual clock (ages the hotness scores)."""
+        self.clock = max(self.clock, now)
+
+    def _cache_score(self, b: int) -> float:
+        """Hotness of a cached block: hit count decayed by idle time.
+        Expired blocks (idle past ``cache_ttl``) score below everything
+        live; blocks with no meta (legacy direct ``cached`` inserts)
+        score 0.0 so they reclaim before any scored block."""
+        m = self.cached_meta.get(b)
+        if m is None:
+            return 0.0
+        age = max(self.clock - m.last_touch, 0.0)
+        if age >= self.cache_ttl:
+            return -1.0
+        if self.hit_decay <= 0:
+            return float(m.hits)
+        return m.hits * math.exp(-age / self.hit_decay)
+
+    def _note_cached(self, b: int) -> None:
+        """Bookkeeping for a block ENTERING the cached tier (call before
+        the ``cached`` insert when the block was not already cached)."""
+        g = self.group_of.get(b)
+        if g is not None:
+            self.group_cached[g] = self.group_cached.get(g, 0) + 1
+
+    def _drop_cached(self, b: int) -> None:
+        del self.cached[b]
+        self.cached_meta.pop(b, None)
+        g = self.group_of.pop(b, None)
+        if g is not None:
+            left = self.group_cached.get(g, 0) - 1
+            if left > 0:
+                self.group_cached[g] = left
+            else:
+                self.group_cached.pop(g, None)
+
     def _reclaim_cached(self) -> int:
-        """Evict the oldest-retired unpinned cached block (LRU); the
-        release callback unhooks its radix-index entry first."""
-        for b in self.cached:
-            if not self.pins.get(b):
-                del self.cached[b]
-                if self.release_cb is not None:
-                    self.release_cb([b])
-                return b
-        raise OutOfBlocks("host pool: only pinned cached blocks left")
+        """Evict the coldest unpinned cached block. Victim order: an
+        over-quota group's blocks first (coldest within it), then
+        globally by ascending hotness score with ties broken
+        oldest-retired-first; the release callback unhooks the radix
+        index before the block is recycled."""
+        cands = [b for b in self.cached if not self.pins.get(b)]
+        if not cands:
+            raise OutOfBlocks("host pool: only pinned cached blocks left")
+        if self.group_quota_frac > 0:
+            quota = self.group_quota_frac * self.num_blocks
+            over = [b for b in cands
+                    if self.group_cached.get(self.group_of.get(b), 0)
+                    > quota]
+            if over:
+                cands = over
+        # min() keeps the first (oldest-inserted) block on score ties, so
+        # the no-hits/no-clock degenerate case is exactly the old LRU
+        victim = min(cands, key=self._cache_score)
+        self._drop_cached(victim)
+        if self.release_cb is not None:
+            self.release_cb([victim])
+        return victim
+
+    def expire(self, now: Optional[float] = None) -> List[int]:
+        """Free every unpinned cached block idle past ``cache_ttl`` (the
+        Temporal Scheduler's per-step sweep): cold copies hand their
+        capacity back to the offload path before allocation pressure has
+        to reclaim them. Returns the freed block ids."""
+        if now is not None:
+            self.tick(now)
+        if self.cache_ttl == math.inf or not self.cached:
+            return []
+        freed = []
+        for b in list(self.cached):
+            if self.pins.get(b):
+                continue
+            m = self.cached_meta.get(b)
+            if m is None or self.clock - m.last_touch < self.cache_ttl:
+                continue
+            self._drop_cached(b)
+            self.free_list.append(b)
+            freed.append(b)
+        if freed and self.release_cb is not None:
+            self.release_cb(freed)
+        return freed
 
     def release(self, blocks: Sequence[int]) -> None:
         freed = []
         for b in blocks:
             self.owner.pop(b, None)
-            self.cached.pop(b, None)
             if self.pins.get(b):
                 # an in-flight promotion still reads this block: park it in
                 # the cached tier; reclaim skips it until the pin drops
+                if b not in self.cached:
+                    self._note_cached(b)
+                else:
+                    del self.cached[b]
                 self.cached[b] = None
+                self.cached_meta.setdefault(
+                    b, CachedBlockMeta(last_touch=self.clock))
             else:
+                if b in self.cached:
+                    self._drop_cached(b)
+                else:
+                    self.group_of.pop(b, None)
                 self.free_list.append(b)
                 freed.append(b)
         if self.release_cb is not None and freed:
@@ -270,19 +396,33 @@ class HostPool:
     # ---- content cache tier (H2D promotion sources) --------------------------
     def retire(self, blocks: Sequence[int]) -> None:
         """Upload finished but the content stays indexed: move the blocks
-        to the cached LRU instead of freeing them (no release_cb — the
-        radix index keeps its host entries until reclaim)."""
+        to the cached tier instead of freeing them (no release_cb — the
+        radix index keeps its host entries until reclaim/expiry). A
+        re-retire refreshes recency but keeps the accumulated hit count."""
         for b in blocks:
             self.owner.pop(b, None)
-            self.cached.pop(b, None)     # re-retire refreshes recency
+            prev = self.cached_meta.get(b)
+            if b not in self.cached:
+                self._note_cached(b)
+            else:
+                del self.cached[b]       # re-retire refreshes recency
             self.cached[b] = None
+            self.cached_meta[b] = CachedBlockMeta(
+                last_touch=self.clock,
+                hits=prev.hits if prev is not None else 1)
 
     def touch(self, blocks: Sequence[int]) -> None:
-        """Refresh LRU recency of cached blocks (promotion hit)."""
+        """A promotion hit on cached blocks: refresh recency and bump the
+        hit count — the frequency half of the reclaim score."""
         for b in blocks:
             if b in self.cached:
                 del self.cached[b]
                 self.cached[b] = None
+                m = self.cached_meta.get(b)
+                if m is None:
+                    m = self.cached_meta[b] = CachedBlockMeta()
+                m.hits += 1
+                m.last_touch = self.clock
 
     def promote(self, blocks: Sequence[int]) -> None:
         """Handoff to an H2D promotion transfer: pin the source blocks

@@ -28,14 +28,26 @@ class PlatformModel:
     decode_ms_per_seq: float    # marginal per-sequence cost per iteration
     hbm_bytes: int              # KV pool budget
     host_bytes: int             # CPU offload pool budget (paper: 100 GB)
+    # transfer-stream chunking: platforms whose copy engine stages block
+    # transfers through a fixed-size pinned staging buffer pay the launch
+    # latency once per chunk of ``stream_chunk_blocks`` blocks, not once
+    # per transfer (Mooncake-style swap granularity). 0 = unchunked: one
+    # launch per transfer, bit-identical to the pre-economics model.
+    stream_chunk_blocks: int = 0
+
+    def _launches(self, n_blocks: int) -> int:
+        """Per-transfer launch count: 1, or one per staging chunk."""
+        if self.stream_chunk_blocks <= 0 or n_blocks <= 0:
+            return 1
+        return -(-n_blocks // self.stream_chunk_blocks)
 
     # ---- Eq. 2: T_transfer = T_offload(N) + T_upload(N) ---------------------
     def offload_time(self, n_blocks: int) -> float:
-        return (self.transfer_fixed_ms
+        return (self._launches(n_blocks) * self.transfer_fixed_ms
                 + n_blocks * self.offload_ms_per_block) / 1e3
 
     def upload_time(self, n_blocks: int) -> float:
-        return (self.transfer_fixed_ms
+        return (self._launches(n_blocks) * self.transfer_fixed_ms
                 + n_blocks * self.upload_ms_per_block) / 1e3
 
     def transfer_time(self, n_blocks: int) -> float:
@@ -66,6 +78,45 @@ class PlatformModel:
 
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_tokens)
+
+    # ---- transfer economics: promote-vs-recompute crossover -----------------
+    def promote_gain(self, k: int, stream_backlog: float = 0.0) -> float:
+        """Seconds saved by uploading ``k`` host-cached blocks instead of
+        recomputing their tokens in the suffix prefill.
+
+        The upload side pays the earliest-stream-slot wait (``stream_
+        backlog``: the shared copy stream is serial, so an admission that
+        promotes while an offload/upload is in flight queues behind it)
+        plus ``upload_time(k)``; the recompute side pays
+        ``recompute_time(k * block_tokens)`` merged into the prefill the
+        requester runs anyway. Positive = promoting beats recomputing.
+        ``promote_gain(0)`` is 0 by definition (nothing moves, nothing
+        recomputed)."""
+        if k <= 0:
+            return 0.0
+        return (self.recompute_time(k * self.block_tokens)
+                - (max(stream_backlog, 0.0) + self.upload_time(k)))
+
+    def promotion_cutoff(self, k_max: int, stream_backlog: float = 0.0) -> int:
+        """Blocks of a ``k_max``-block promotable run worth uploading: the
+        argmax of cumulative ``promote_gain`` over ``0..k_max``.
+
+        The promoted run must stay a contiguous table prefix, so the only
+        free choice is where to cut it. Ties break toward the larger run
+        (promoting at equal cost still populates the device tier), which
+        also makes the zero-backlog unchunked decision the full run — the
+        pre-economics (always-promote) behavior. A cut at 0 is a
+        *recompute election*: the whole run is cheaper to recompute, e.g.
+        when the stream is backlogged past the crossover. Interior cuts
+        appear when the marginal block stops paying — on chunked-stream
+        platforms a short tail past the last staging-chunk boundary costs
+        a full extra launch for less than a chunk of saved recompute."""
+        best_k, best_g = 0, 0.0
+        for k in range(1, k_max + 1):
+            g = self.promote_gain(k, stream_backlog)
+            if g >= best_g:
+                best_k, best_g = k, g
+        return best_k
 
 
 # Qwen2.5-14B on A100-80GB PCIe — matches paper §7.6 within 1%.

@@ -59,6 +59,18 @@ class EngineConfig:
     # transfer stream) instead of recomputing them. Composes with any
     # mode that indexes offloaded prompt blocks (mooncake / tokencake).
     host_promotion: bool = False
+    # transfer economics for the promotion admission:
+    #   "cost"   — cut the budget-feasible host run at the marginal block
+    #              where upload stops beating recompute
+    #              (PlatformModel.promotion_cutoff, charged with the
+    #              current stream backlog), falling back to a full
+    #              recompute when the stream is backlogged past the
+    #              crossover. Zero-backlog on an unchunked platform this
+    #              is bit-identical to "always".
+    #   "always" — promote the whole budget-feasible run (PR 4 behavior;
+    #              kept for the fig12/fig18 policy-comparison rows and
+    #              for tests that exercise raw transfer mechanics).
+    promotion_policy: str = "cost"
     spatial_enabled: bool = True
     temporal_enabled: bool = True
     reactive_offload: bool = False       # Mooncake-style pressure offload
@@ -158,6 +170,16 @@ class Engine:
             "promotions": 0, "promoted_blocks": 0,
             "promotion_saved_tokens": 0, "promotion_waits": 0,
             "prefill_tokens": 0, "h2d_bytes": 0, "d2h_bytes": 0,
+            # transfer economics: cost-model decisions at admission.
+            # promotion_cutoffs   = runs cut short of the feasible length
+            # recompute_elections = runs skipped entirely (recompute won)
+            # promo_blocks_trimmed = blocks the cost model declined, both
+            # cases; stream_wait_s = total serialization wait transfers
+            # spent queued behind the shared copy stream (the backlog the
+            # crossover decision prices in)
+            "promotion_cutoffs": 0, "recompute_elections": 0,
+            "promo_blocks_trimmed": 0, "stream_wait_s": 0.0,
+            "host_cache_expired": 0,
         }
         self.util_samples: List[Tuple[float, float, float]] = []
         self.app_latencies: List[float] = []
@@ -186,7 +208,8 @@ class Engine:
                 req = Request(rid=f"{app.app_id}/{node.name}",
                               app_id=app.app_id, node=node, graph=app.graph,
                               arrival=self.clock, prompt_tokens=toks,
-                              critical=on_cp[nid], enqueue_time=self.clock)
+                              critical=on_cp[nid], enqueue_time=self.clock,
+                              group=app.graph.name)
                 app.node_request[nid] = req
                 self.waiting.append(req)
 
@@ -329,6 +352,13 @@ class Engine:
         return out
 
     # ---------------------------------------------------------------- transfers
+    def stream_backlog(self) -> float:
+        """Seconds until the shared copy stream's earliest free slot — the
+        wait a transfer scheduled *now* would pay before its first byte
+        moves. This is the ``stream_backlog`` input of the cost model's
+        promote-vs-recompute crossover."""
+        return max(self.stream_free_at - self.clock, 0.0)
+
     def _schedule_transfer(self, n_blocks: int, direction: str,
                            event: str, payload) -> float:
         """Serialize a block transfer on the single copy stream (offloads,
@@ -337,6 +367,7 @@ class Engine:
         dur = (self.platform.offload_time(n_blocks) if direction == "d2h"
                else self.platform.upload_time(n_blocks))
         start = max(self.clock, self.stream_free_at)
+        self.metrics["stream_wait_s"] += start - self.clock
         self.stream_free_at = start + dur
         self.metrics["swap_blocks"] += n_blocks
         key = "d2h_bytes" if direction == "d2h" else "h2d_bytes"
@@ -351,7 +382,8 @@ class Engine:
         # resident — it is refcounted and may be serving other requests
         shared = req.shared_prefix_blocks
         n = req.offloadable_blocks
-        req.host_blocks = self.host.allocate(n, req.rid)
+        req.host_blocks = self.host.allocate(n, req.rid,
+                                             group=req.group or None)
         bt = self.platform.block_tokens
         # only whole prompt blocks are content-addressable (decode-grown
         # blocks past the prompt are private). The radix tree attaches
@@ -555,7 +587,13 @@ class Engine:
         if self.cfg.spatial_enabled:
             self.spatial.update_reservations(self.clock, stats)
 
-        # Phase 3: temporal — uploads first, then offload evaluation
+        # Phase 3: temporal — host-cache hygiene first (frequency/TTL
+        # capacity policy ages scores and expires cold cached copies so
+        # offload plans never contend with dead inventory), then uploads,
+        # then offload evaluation. The sweep runs in every mode that can
+        # hold cached host copies (mooncake's reactive path included).
+        self.metrics["host_cache_expired"] += \
+            self.temporal.sweep_host_cache(self.clock)
         if self.cfg.temporal_enabled:
             self._phase_uploads(snap)
             self._phase_offloads(snap)
@@ -680,11 +718,21 @@ class Engine:
                 deferred.append(req)
                 continue
             k_promo = min(len(m.promo), promo_budget) if m.promo else 0
-            if k_promo < len(m.promo):   # budget-trimmed: shrink pin scope
-                m.promo = m.promo[:k_promo]
-                last = (m.n_full + k_promo) * bt - 1
-                m.promo_path = [nd for nd in m.promo_path
-                                if nd.start <= last]
+            promo_trimmed = 0
+            if k_promo and self.cfg.promotion_policy == "cost":
+                # transfer economics: cut the budget-feasible run at the
+                # marginal block where upload stops beating recompute,
+                # priced with the stream's current backlog — a backlogged
+                # stream past the crossover elects a full recompute.
+                # (Counted below only when the admission commits — a
+                # deferred request must not re-count its decision every
+                # retry, same convention as cpu_hits.)
+                k_cut = self.platform.promotion_cutoff(
+                    k_promo, self.stream_backlog())
+                promo_trimmed = k_promo - k_cut
+                k_promo = k_cut
+            if k_promo < len(m.promo):   # budget-/cost-trimmed: shrink
+                m.trim_promo(k_promo, bt)       # the run and its pin scope
             covered = (m.n_full + k_promo) * bt if k_promo else m.tokens
             new_tokens = max(req.context_len - covered, 1)
             if new_tokens > prefill_budget:
@@ -733,6 +781,10 @@ class Engine:
                         p.device, []).extend(blocks)
             if m:
                 self._commit_prefix(req, m)
+            if promo_trimmed:            # cost decision, now committed
+                self.metrics["promo_blocks_trimmed"] += promo_trimmed
+                self.metrics["promotion_cutoffs" if k_promo
+                             else "recompute_elections"] += 1
             if k_promo:
                 self._start_promotion(req, m)
                 promo_budget -= k_promo

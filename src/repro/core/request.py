@@ -48,6 +48,11 @@ class Request:
     arrival: float
     prompt_tokens: List[int]
     critical: bool = False               # on app critical path (static)
+    # request group for host-tier capacity quotas: the application family
+    # (graph name), shared by every instance of the same app — one chatty
+    # app family cannot squeeze other apps' promotable host inventory out
+    # of the CPU cache tier (HostPool.group_quota_frac). Empty = untracked.
+    group: str = ""
 
     state: ReqState = ReqState.WAITING
     segment: int = 0

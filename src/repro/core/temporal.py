@@ -49,6 +49,16 @@ class TemporalConfig:
     # their pinned prefix blocks stay resident, so each transferred byte
     # frees less memory. Mostly-private requests (share 0) are unchanged.
     w_private: float = 0.15
+    # host-tier capacity policy (ROADMAP): retired prefix copies in the
+    # CPU cache tier are governed by a frequency+TTL score instead of
+    # pure LRU. ``host_ttl`` expires copies idle that long (inf = never;
+    # the per-step sweep frees them before offload allocations have to
+    # reclaim), ``host_hit_decay`` is the hotness-score decay constant,
+    # and ``host_group_quota`` caps one request group's cached fraction
+    # of the pool (0 = no quota). See HostPool's docstring.
+    host_ttl: float = math.inf
+    host_hit_decay: float = 600.0
+    host_group_quota: float = 0.0
 
 
 @dataclass
@@ -75,6 +85,27 @@ class TemporalScheduler:
         self.rejected_offloads = 0
         self.swapped_blocks = 0
         self.emergency_offloads = 0
+        self.host_expired = 0
+        # wire the host-tier capacity policy into the pool: the scheduler
+        # owns the knobs (it is what arbitrates host capacity between the
+        # offload plans and the cached promotion inventory)
+        if host_pool is not None:
+            host_pool.cache_ttl = self.cfg.host_ttl
+            host_pool.hit_decay = self.cfg.host_hit_decay
+            host_pool.group_quota_frac = self.cfg.host_group_quota
+
+    def sweep_host_cache(self, now: float) -> int:
+        """Per-step host-cache hygiene: age the hotness scores and free
+        cached copies idle past ``host_ttl``. Keeping this on the
+        scheduler (not lazily inside allocation) is what lets predictive-
+        upload debt outrank cold cached copies — the capacity an offload
+        plan needs is reclaimed from expired inventory *before* the
+        allocation happens, never from a copy that is still hot."""
+        if self.host is None:
+            return 0
+        n = len(self.host.expire(now))
+        self.host_expired += n
+        return n
 
     @staticmethod
     def private_frac(req: Request) -> float:

@@ -91,6 +91,25 @@ class PrefixMatch:
     def __bool__(self) -> bool:
         return self.tokens > 0
 
+    def trim_promo(self, k: int, block_tokens: int) -> None:
+        """Cut the promotion run to its first ``k`` blocks.
+
+        The run is *cuttable* by construction: every prefix of it is a
+        valid promotion (contiguous host-backed full blocks starting at
+        the device-coverage boundary), so the engine may trim at any
+        marginal block — transfer-budget pressure and the cost model's
+        upload-vs-recompute cutoff both use this. The pin scope
+        (``promo_path``) shrinks with it so an admission hold never pins
+        nodes past the trimmed run; ``k=0`` clears the run entirely (the
+        recompute election)."""
+        self.promo = self.promo[:k]
+        if not self.promo:
+            self.promo_path = []
+            return
+        last = (self.n_full + k) * block_tokens - 1
+        self.promo_path = [nd for nd in self.promo_path
+                           if nd.start <= last]
+
 
 @dataclass
 class _Promotion:
@@ -208,9 +227,13 @@ class PrefixStore:
     def _scan_promotable(self, m: PrefixMatch, path: List[RadixNode],
                          matched: int) -> None:
         """Fill ``m.promo``: the contiguous run of host-backed full blocks
-        starting right where the device-servable run ends. An index that
-        already carries a device entry is never promotable — if that entry
-        is an in-flight promotion (another request's transfer), flag
+        starting right where the device-servable run ends. The run is
+        returned *cuttable* — every prefix of it is independently
+        promotable (see :meth:`PrefixMatch.trim_promo`), so admission can
+        stop at the marginal block where the cost model says upload stops
+        beating recompute instead of taking it all-or-nothing. An index
+        that already carries a device entry is never promotable — if that
+        entry is an in-flight promotion (another request's transfer), flag
         ``pending_promo`` so the caller waits for ``upload_done`` instead
         of recomputing or starting a duplicate transfer."""
         hosts: Dict[int, int] = {}
@@ -721,3 +744,10 @@ class PrefixStore:
             assert not hfree & hcached, "host block both free and cached"
             for hb in self.host.pins:
                 assert hb not in hfree, f"pinned host block {hb} on free list"
+            counts: Dict[str, int] = {}
+            for hb in self.host.cached:
+                g = self.host.group_of.get(hb)
+                if g is not None:
+                    counts[g] = counts.get(g, 0) + 1
+            assert counts == self.host.group_cached, \
+                "host group_cached out of sync with cached tier"

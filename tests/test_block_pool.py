@@ -184,3 +184,67 @@ def test_host_pool_touch_refreshes_lru_order():
     got = pool.allocate(3, "b")
     assert a[0] not in got              # survived: reclaim ate the others
     assert a[0] in pool.cached
+
+
+def test_host_cache_frequency_beats_recency():
+    """The capacity policy's frequency half: a block hit repeatedly
+    outscores a fresher-but-never-hit block, so reclaim evicts the cold
+    one — the case where pure LRU gets it backwards."""
+    pool = HostPool(2)
+    (hot,) = pool.allocate(1, "a")
+    pool.retire([hot])                  # retired at t=0
+    pool.tick(1.0)
+    pool.touch([hot])
+    pool.touch([hot])                   # hits=3, last_touch=1
+    (cold,) = pool.allocate(1, "b")
+    pool.tick(2.0)
+    pool.retire([cold])                 # hits=1, last_touch=2 (fresher!)
+    assert pool._cache_score(hot) > pool._cache_score(cold)
+    got = pool.allocate(1, "c")
+    assert got == [cold]                # LRU would have evicted `hot`
+    assert hot in pool.cached
+
+
+def test_host_cache_ttl_expiry_sweep():
+    """Blocks idle past cache_ttl are swept (release_cb unhooks them);
+    pinned in-flight sources and still-fresh blocks survive."""
+    pool = HostPool(4)
+    pool.cache_ttl = 10.0
+    unhooked = []
+    pool.release_cb = lambda blocks: unhooked.extend(blocks)
+    a = pool.allocate(3, "a")
+    pool.retire(a)                      # retired at t=0
+    pool.promote([a[0]])                # in-flight H2D pin
+    assert pool.expire(5.0) == []       # nothing idle long enough
+    pool.touch([a[1]])                  # refreshed at t=5
+    freed = pool.expire(11.0)
+    assert freed == [a[2]]              # a[0] pinned, a[1] touched at t=5
+    assert unhooked == [a[2]]
+    assert a[2] in pool.free_list
+    assert pool.expire(16.0) == [a[1]]  # now idle 11 s > ttl
+    pool.promote_done([a[0]])
+    assert pool.expire(1e9) == [a[0]]
+    assert pool.free == 4 and not pool.cached and not pool.cached_meta
+
+
+def test_host_cache_group_quota_reclaims_over_quota_group_first():
+    """A group holding more than its cached quota is reclaimed from
+    first (coldest within it), even when another group's block is colder
+    globally — one chatty app can't evict everyone else's inventory."""
+    pool = HostPool(8)
+    pool.group_quota_frac = 0.25        # 2 blocks per group
+    greedy = pool.allocate(3, "a", group="greedy")
+    other = pool.allocate(1, "b", group="other")
+    pool.retire(other)                  # oldest insert = globally coldest
+    pool.retire(greedy)
+    pool.tick(1.0)
+    pool.touch(greedy)                  # greedy is hotter AND over quota
+    pool.allocate(4, "fill")            # drain the free list
+    got = pool.allocate(1, "c")
+    assert got[0] in greedy             # over-quota group pays first
+    assert other[0] in pool.cached
+    # greedy is now at quota (2 cached): reclaim reverts to the global
+    # coldest score, which is the untouched `other` block
+    got = pool.allocate(1, "d")
+    assert got == [other[0]]
+    assert sum(1 for b in greedy if b in pool.cached) == 2

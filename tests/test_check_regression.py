@@ -1,0 +1,158 @@
+"""Unit tests for the CI bench-regression gate.
+
+``benchmarks/check_regression.py`` decides whether bench-smoke fails a PR,
+but until now was itself untested. Covered here: the pass path (within
+tolerance), the fail path (gated speedup regressed / baseline row
+missing), the ``--absolute`` opt-in for machine-dependent tokens/sec
+columns, and the ``--update`` baseline-rewrite path — all through
+``main()`` with real files, exactly as CI invokes it.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                 "check_regression.py"))
+cr = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cr)
+
+
+def write_results(path, bench, rows):
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "rows": rows}, f)
+    return str(path)
+
+
+def run_main(monkeypatch, argv):
+    monkeypatch.setattr(sys, "argv", ["check_regression.py"] + argv)
+    return cr.main()
+
+
+@pytest.fixture
+def world(tmp_path):
+    """A committed baseline plus matching current results."""
+    base = {
+        "tolerance": 0.25,
+        "benches": {
+            "prefill": [{"n_req": 2, "prefix_blocks": 8, "suffix_tokens": 32,
+                         "speedup": 10.0, "suffix_tok_s": 5000.0,
+                         "full_tok_s": 500.0}],
+            "decode": [{"batch": 8, "speedup": 4.0, "jit_tok_s": 900.0,
+                        "eager_tok_s": 225.0}],
+        },
+    }
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(base))
+    # suffix_tok_s 3000 is a 40% absolute drop (different machine) while
+    # the scale-free speedup 9.0 stays inside the band — the case the
+    # default/--absolute split exists for
+    prefill = write_results(
+        tmp_path / "prefill.json", "prefill",
+        [{"n_req": 2, "prefix_blocks": 8, "suffix_tokens": 32,
+          "speedup": 9.0, "suffix_tok_s": 3000.0, "full_tok_s": 450.0}])
+    decode = write_results(
+        tmp_path / "decode.json", "decode",
+        [{"batch": 8, "speedup": 3.2, "jit_tok_s": 850.0,
+          "eager_tok_s": 260.0}])
+    return dict(tmp=tmp_path, baseline=str(baseline), prefill=prefill,
+                decode=decode)
+
+
+def test_pass_within_tolerance(world, monkeypatch, capsys):
+    """speedups 9.0/3.2 vs baselines 10.0/4.0 are inside the 25% band."""
+    rc = run_main(monkeypatch, [world["prefill"], world["decode"],
+                                "--baseline", world["baseline"]])
+    assert rc == 0
+    assert "gate passed" in capsys.readouterr().out
+
+
+def test_fail_on_regressed_speedup(world, monkeypatch, capsys):
+    bad = write_results(
+        world["tmp"] / "bad.json", "decode",
+        [{"batch": 8, "speedup": 2.9, "jit_tok_s": 999.0,
+          "eager_tok_s": 300.0}])          # 2.9 < 4.0 * 0.75
+    rc = run_main(monkeypatch, [world["prefill"], bad,
+                                "--baseline", world["baseline"]])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "BENCH REGRESSION" in out
+    assert "decode[batch=8].speedup" in out
+    assert "2.900" in out
+
+
+def test_fail_on_missing_row(world, monkeypatch, capsys):
+    """A shrunk grid (row in baseline, absent from results) must fail —
+    silently dropping a gated point is how regressions hide."""
+    empty = write_results(world["tmp"] / "empty.json", "decode", [])
+    rc = run_main(monkeypatch, [world["prefill"], empty,
+                                "--baseline", world["baseline"]])
+    assert rc == 1
+    assert "row missing" in capsys.readouterr().out
+
+
+def test_new_row_and_missing_bench_are_notes_not_failures(
+        world, monkeypatch, capsys):
+    extra = write_results(
+        world["tmp"] / "extra.json", "decode",
+        [{"batch": 8, "speedup": 4.0},
+         {"batch": 16, "speedup": 1.0}])   # new grid point, no baseline
+    rc = run_main(monkeypatch, [world["prefill"], extra,
+                                "--baseline", world["baseline"]])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "no baseline row" in out
+    # a baseline bench absent from the results is skipped with a note
+    rc = run_main(monkeypatch, [world["prefill"],
+                                "--baseline", world["baseline"]])
+    assert rc == 0
+    assert "not in results, skipped" in capsys.readouterr().out
+
+
+def test_absolute_gates_tok_s_columns(world, monkeypatch, capsys):
+    """Default run ignores machine-dependent tok/s (3000 < 5000*0.75 but
+    ungated); --absolute turns the same numbers into a failure."""
+    rc = run_main(monkeypatch, [world["prefill"], world["decode"],
+                                "--baseline", world["baseline"]])
+    assert rc == 0
+    rc = run_main(monkeypatch, [world["prefill"], world["decode"],
+                                "--baseline", world["baseline"],
+                                "--absolute"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "suffix_tok_s" in out
+
+
+def test_tolerance_flag_widens_the_band(world, monkeypatch):
+    bad = write_results(
+        world["tmp"] / "bad.json", "decode",
+        [{"batch": 8, "speedup": 2.9}])
+    args = [world["prefill"], bad, "--baseline", world["baseline"]]
+    assert run_main(monkeypatch, args) == 1
+    assert run_main(monkeypatch, args + ["--tolerance", "0.5"]) == 0
+
+
+def test_update_rewrites_baseline_then_gates_against_it(
+        world, monkeypatch, capsys):
+    new_baseline = str(world["tmp"] / "new_baseline.json")
+    rc = run_main(monkeypatch, [world["prefill"], world["decode"],
+                                "--baseline", new_baseline, "--update"])
+    assert rc == 0
+    assert "baseline updated" in capsys.readouterr().out
+    data = json.load(open(new_baseline))
+    assert set(data["benches"]) == {"prefill", "decode"}
+    assert data["benches"]["decode"][0]["speedup"] == 3.2
+    # the freshly written baseline gates: identical results pass...
+    rc = run_main(monkeypatch, [world["prefill"], world["decode"],
+                                "--baseline", new_baseline])
+    assert rc == 0
+    # ...and a regression against the NEW numbers fails
+    bad = write_results(world["tmp"] / "bad.json", "decode",
+                        [{"batch": 8, "speedup": 2.0}])
+    rc = run_main(monkeypatch, [world["prefill"], bad,
+                                "--baseline", new_baseline])
+    assert rc == 1

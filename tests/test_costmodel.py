@@ -1,0 +1,182 @@
+"""Property tests for the transfer-economics cost model.
+
+The promote-vs-recompute crossover (``promote_gain``) and the per-block
+promotion cutoff (``promotion_cutoff``) drive the engine's admission
+decision for host-tier promotions, so their shape is load-bearing:
+
+ * ``promote_gain`` is strictly decreasing in the stream backlog and
+   monotone non-decreasing in run length whenever the per-block recompute
+   cost covers the per-block upload cost (every shipped platform);
+ * the cutoff index is the argmax of the cumulative gain over ``0..k``,
+   with ties broken toward the larger run;
+ * at zero backlog on an unchunked platform the cutoff is the full run —
+   bit-identical to the PR 4 always-promote admission, so enabling the
+   cost model cannot change any existing fig18/fig12 number in that
+   regime;
+ * chunked-stream platforms produce genuine *interior* cutoffs: a short
+   tail past the last staging-chunk boundary costs a full extra launch
+   for less than a chunk of saved recompute.
+
+The ``@given`` variants fuzz the same properties over random platform
+shapes under real ``hypothesis`` (fuzz-marked; the CI fuzz job runs them,
+tier-1 runs the seeded loops).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+from repro.core.costmodel import A100_PCIE, PLATFORMS, PlatformModel
+
+
+def brute_force_cutoff(plat: PlatformModel, k_max: int,
+                       backlog: float) -> int:
+    """Independent argmax of cumulative gain (ties -> larger k)."""
+    gains = [plat.promote_gain(k, backlog) for k in range(k_max + 1)]
+    best = max(gains)
+    return max(k for k, g in enumerate(gains) if g >= best - 1e-15)
+
+
+def mk_platform(upload_ms=0.1, fixed_ms=0.2, prefill_ms=0.443,
+                chunk=0, bt=16):
+    return dataclasses.replace(
+        A100_PCIE, name="synthetic", block_tokens=bt,
+        upload_ms_per_block=upload_ms, transfer_fixed_ms=fixed_ms,
+        prefill_ms_per_token=prefill_ms, stream_chunk_blocks=chunk)
+
+
+# ---------------------------------------------------------------------------
+# transfer-time identities
+# ---------------------------------------------------------------------------
+
+def test_unchunked_transfer_times_match_pr4_closed_form():
+    """stream_chunk_blocks=0 (every shipped platform) keeps Eq. 2 exactly:
+    one launch per transfer — the pre-economics formula, bit for bit."""
+    for plat in PLATFORMS.values():
+        assert plat.stream_chunk_blocks == 0
+        for n in (0, 1, 7, 256):
+            want_up = (plat.transfer_fixed_ms
+                       + n * plat.upload_ms_per_block) / 1e3
+            want_off = (plat.transfer_fixed_ms
+                        + n * plat.offload_ms_per_block) / 1e3
+            assert plat.upload_time(n) == want_up
+            assert plat.offload_time(n) == want_off
+
+
+def test_chunked_transfer_pays_one_launch_per_chunk():
+    plat = mk_platform(chunk=4, fixed_ms=20.0, upload_ms=0.1)
+    for n, launches in [(0, 1), (1, 1), (4, 1), (5, 2), (8, 2), (9, 3)]:
+        want = (launches * 20.0 + n * 0.1) / 1e3
+        assert plat.upload_time(n) == pytest.approx(want)
+    # chunked upload is never cheaper than unchunked
+    flat = mk_platform(chunk=0, fixed_ms=20.0, upload_ms=0.1)
+    for n in range(1, 20):
+        assert plat.upload_time(n) >= flat.upload_time(n) - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# promote_gain monotonicity
+# ---------------------------------------------------------------------------
+
+def test_gain_strictly_decreasing_in_backlog():
+    for plat in PLATFORMS.values():
+        for k in (1, 3, 17):
+            gains = [plat.promote_gain(k, w) for w in (0.0, 0.01, 0.5, 5.0)]
+            assert all(a > b for a, b in zip(gains, gains[1:]))
+
+
+def test_gain_monotone_in_run_length_when_recompute_covers_upload():
+    """Per-block recompute >= per-block upload (true of every shipped
+    platform) makes cumulative gain non-decreasing in k on an unchunked
+    stream — the marginal block always pays."""
+    for plat in PLATFORMS.values():
+        assert (plat.block_tokens * plat.prefill_ms_per_token
+                >= plat.upload_ms_per_block)
+        for w in (0.0, 0.3):
+            gains = [plat.promote_gain(k, w) for k in range(1, 40)]
+            assert all(b >= a - 1e-12 for a, b in zip(gains, gains[1:]))
+
+
+def test_gain_zero_at_zero_and_negative_when_upload_dominates():
+    slow = mk_platform(upload_ms=400.0)   # SLOW_PCIE regime
+    assert slow.promote_gain(0) == 0.0
+    assert slow.promote_gain(0, 99.0) == 0.0
+    for k in (1, 2, 8):
+        assert slow.promote_gain(k) < 0.0
+
+
+# ---------------------------------------------------------------------------
+# promotion_cutoff == argmax of cumulative gain
+# ---------------------------------------------------------------------------
+
+def test_cutoff_is_argmax_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        plat = mk_platform(
+            upload_ms=float(rng.uniform(0.01, 30.0)),
+            fixed_ms=float(rng.uniform(0.0, 50.0)),
+            prefill_ms=float(rng.uniform(0.01, 1.0)),
+            chunk=int(rng.integers(0, 6)),
+            bt=int(rng.integers(1, 33)))
+        k_max = int(rng.integers(0, 24))
+        backlog = float(rng.uniform(0.0, 0.2)) * int(rng.integers(0, 2))
+        got = plat.promotion_cutoff(k_max, backlog)
+        assert 0 <= got <= k_max
+        assert got == brute_force_cutoff(plat, k_max, backlog)
+
+
+def test_zero_backlog_full_run_identical_to_pr4():
+    """Shipped platforms, idle stream: the cost model promotes the whole
+    budget-feasible run — exactly the PR 4 always-promote decision, so
+    existing fig18/fig12 promote rows are unchanged in this regime."""
+    for plat in PLATFORMS.values():
+        for k_max in range(0, 65):
+            assert plat.promotion_cutoff(k_max, 0.0) == k_max
+
+
+def test_backlog_past_crossover_elects_recompute():
+    plat = A100_PCIE
+    k = 3
+    crossover = (plat.recompute_time(k * plat.block_tokens)
+                 - plat.upload_time(k))
+    assert plat.promotion_cutoff(k, crossover + 1e-6) == 0
+    assert plat.promotion_cutoff(k, max(crossover - 1e-6, 0.0)) > 0
+
+
+def test_chunked_stream_interior_cutoff_trims_the_tail():
+    """C=4, launch 20 ms, per-block net gain ~6.97 ms: a 6-block run's
+    last chunk buys 2 blocks of recompute (13.9 ms) for a 20.2 ms launch
+    — the cost model cuts at the chunk boundary, an interior cutoff
+    neither 0 nor k_max."""
+    plat = mk_platform(chunk=4, fixed_ms=20.0, upload_ms=0.1,
+                       prefill_ms=0.443, bt=16)
+    cut = plat.promotion_cutoff(6, 0.0)
+    assert cut == 4
+    assert plat.promote_gain(4) > plat.promote_gain(6)
+    assert plat.promote_gain(4) > 0
+    # a full second chunk pays for itself again
+    assert plat.promotion_cutoff(8, 0.0) == 8
+
+
+@pytest.mark.fuzz
+@given(st.floats(0.01, 30.0), st.floats(0.0, 50.0), st.floats(0.01, 1.0),
+       st.integers(0, 6), st.integers(1, 33), st.integers(0, 24),
+       st.floats(0.0, 0.3))
+@settings(max_examples=300, deadline=None)
+def test_cutoff_is_argmax_hypothesis(upload_ms, fixed_ms, prefill_ms,
+                                     chunk, bt, k_max, backlog):
+    plat = mk_platform(upload_ms, fixed_ms, prefill_ms, chunk, bt)
+    got = plat.promotion_cutoff(k_max, backlog)
+    assert 0 <= got <= k_max
+    assert got == brute_force_cutoff(plat, k_max, backlog)
+    # gain at the cutoff is the maximum and never negative
+    best = plat.promote_gain(got, backlog)
+    assert best >= -1e-15
+    for k in range(k_max + 1):
+        assert plat.promote_gain(k, backlog) <= best + 1e-15

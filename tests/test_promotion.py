@@ -35,6 +35,11 @@ SLOW_PCIE = dataclasses.replace(A100_PCIE, name="slow_pcie",
 
 def mk_engine(platform=A100_PCIE, gpu_blocks=64, host_blocks=64, **kw):
     kw.setdefault("max_running", 8)
+    # the lifecycle tests exercise raw transfer mechanics (SLOW_PCIE makes
+    # uploads deliberately uneconomical so they stay in flight across
+    # steps) — pin the always-promote policy; the transfer-economics tests
+    # below opt back into "cost" explicitly
+    kw.setdefault("promotion_policy", "always")
     cfg = EngineConfig.preset("mooncake", gpu_blocks=gpu_blocks,
                               host_blocks=host_blocks,
                               sched_quantum=4, host_promotion=True, **kw)
@@ -62,16 +67,18 @@ def step(eng):
         eng.clock += 1e-3
 
 
-def offload_now(eng, req):
-    """Force the stall->offload path and drain the D2H transfer."""
+def offload_now(eng, req, drain=True):
+    """Force the stall->offload path; ``drain=False`` leaves the D2H in
+    flight so the shared stream stays backlogged for the next admission."""
     req.state = ReqState.STALLED
     eng.stalled[req.rid] = req
     if req in eng.running:
         eng.running.remove(req)
     req.fc_predicted_end = eng.clock + 1e9   # park: no predictive upload
     eng._start_offload(req)
-    eng._process_events_until(eng.stream_free_at + 1e-9)
-    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    if drain:
+        eng._process_events_until(eng.stream_free_at + 1e-9)
+        eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
 
 
 def mk_shared_prompts(seed=0, prefix_blocks=3):
@@ -290,6 +297,216 @@ def test_promotion_rollback_on_admission_defer_releases_hold():
     assert not eng.prefix_store._promo_holds
     assert not eng.host.pins
     eng.prefix_store.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# transfer economics: cost-model cutoffs and recompute elections
+# ---------------------------------------------------------------------------
+
+# staging-buffer chunked stream: every 4-block chunk pays a 20 ms launch,
+# so a 2-block tail past a chunk boundary buys ~13.9 ms of recompute for a
+# 20.2 ms launch — the cost model trims it (interior per-block cutoff)
+CHUNKED_PCIE = dataclasses.replace(A100_PCIE, name="chunked_pcie",
+                                   stream_chunk_blocks=4,
+                                   transfer_fixed_ms=20.0)
+
+# fast-prefill platform: promoting still beats recomputing on an idle
+# stream (gain(3) = 2.4 ms - 0.5 ms), but a modest backlog crosses over
+FAST_PREFILL = dataclasses.replace(A100_PCIE, name="fast_prefill",
+                                   prefill_ms_per_token=0.05,
+                                   upload_ms_per_block=0.1)
+
+
+def test_cost_model_trims_promotion_at_chunk_boundary():
+    """6 promotable host blocks on a chunked stream: the cost model cuts
+    the run at the 4-block chunk boundary — the 2-block tail is cheaper to
+    recompute than the extra chunk launch. Partial-run cutoff, observable
+    via promotion_cutoffs/promo_blocks_trimmed, and the trimmed admission
+    leaks nothing."""
+    eng = mk_engine(platform=CHUNKED_PCIE, gpu_blocks=128,
+                    promotion_policy="cost")
+    prefix, sfx = mk_shared_prompts(seed=11, prefix_blocks=6)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+    assert len(eng.prefix_store.host_nodes) == 6
+
+    assert CHUNKED_PCIE.promotion_cutoff(6, 0.0) == 4   # the economics
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    assert eng.metrics["promotions"] == 1
+    assert eng.metrics["promoted_blocks"] == 4           # trimmed, not 6
+    assert eng.metrics["promotion_cutoffs"] == 1
+    assert eng.metrics["promo_blocks_trimmed"] == 2
+    assert eng.metrics["recompute_elections"] == 0
+    assert rb.prefix_cached_tokens == 4 * BT             # rest recomputes
+    # only the 4 promoted sources are transfer-pinned; nothing else held
+    assert sum(eng.host.pins.values()) == 4
+    assert not eng.prefix_store._promo_holds
+    # transfer completes: entries ready, pins dropped, store coherent
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    eng._process_events_until(eng.clock)
+    assert not eng.host.pins
+    entries = [eng.prefix_store.by_block[(0, bid)]
+               for bid in rb.gpu_blocks[:4]]
+    assert all(e.ready for e in entries)
+    eng.prefix_store.check_invariants()
+
+
+def test_always_policy_still_takes_the_full_run():
+    """Policy comparison on the same platform: always-promote uploads all
+    6 blocks (PR 4 behavior) where the cost model trims to 4."""
+    eng = mk_engine(platform=CHUNKED_PCIE, gpu_blocks=128,
+                    promotion_policy="always")
+    prefix, sfx = mk_shared_prompts(seed=11, prefix_blocks=6)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)
+    assert eng.metrics["promoted_blocks"] == 6
+    assert eng.metrics["promotion_cutoffs"] == 0
+    assert eng.metrics["promo_blocks_trimmed"] == 0
+
+
+def test_backlogged_stream_elects_recompute_no_leaked_pins():
+    """Deterministic seeded scenario (sim half): the same host hit that
+    promotes on an idle stream elects recompute when an in-flight offload
+    backlogs the stream past the crossover; the hit is still counted, no
+    hold/pin survives the election, and the request recomputes in full."""
+    eng = mk_engine(platform=FAST_PREFILL, gpu_blocks=128,
+                    promotion_policy="cost")
+    prefix, sfx = mk_shared_prompts(seed=12)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)                                 # host-indexes 3
+
+    # sanity: with the stream idle this hit would promote
+    assert FAST_PREFILL.promotion_cutoff(3, 0.0) == 3
+
+    # a 20-block offload occupies the stream (~2.7 ms > 1.9 ms crossover)
+    rng = np.random.default_rng(1234)
+    submit_one(eng, [int(t) for t in rng.integers(0, 50000, 20 * BT)],
+               name="x")
+    step(eng)
+    rx = next(r for r in eng.running if r.rid.endswith("x"))
+    offload_now(eng, rx, drain=False)                    # stays in flight
+    backlog = eng.stream_backlog()
+    assert backlog > (FAST_PREFILL.recompute_time(3 * BT)
+                      - FAST_PREFILL.upload_time(3))
+
+    submit_one(eng, prefix + sfx[1], name="b")
+    eng._process_events_until(eng.clock)      # B arrives; D2H stays queued
+    eng.schedule_step()
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    assert eng.metrics["recompute_elections"] == 1
+    assert eng.metrics["promo_blocks_trimmed"] == 3
+    assert eng.metrics["promotions"] == 0
+    assert eng.metrics["cpu_prefix_hits"] == 3           # counted, not paid
+    assert rb.prefix_cached_tokens == 0                  # full recompute
+    assert rb.promo_ready_at == 0.0                      # never gated
+    assert not eng.host.pins
+    assert not eng.prefix_store._promo_holds
+    eng.prefix_store.check_invariants()
+
+
+class TestRecomputeElectionE2E:
+    """Acceptance (satellite): two same-prefix requests under a
+    backlogged stream — B elects recompute; with the real JaxBackend its
+    full dense prefill produces logits identical to an unshared reference
+    engine, and no host pin or promotion hold leaks."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax.numpy as jnp
+        from repro.configs.base import ModelConfig
+        from repro.core.backend import JaxBackend
+        from repro.models import model as M
+
+        cfg = ModelConfig(name="tiny-f32", arch_type="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=50000, dtype="float32")
+        ecfg = EngineConfig.preset("mooncake", gpu_blocks=128,
+                                   host_blocks=64, max_running=8,
+                                   sched_quantum=4, host_promotion=True,
+                                   promotion_policy="cost")
+        backend = JaxBackend(cfg, ecfg, FAST_PREFILL)
+        eng = Engine(ecfg, FAST_PREFILL, backend=backend)
+
+        prefix, sfx = mk_shared_prompts(seed=13)
+        prompt_a, prompt_b = prefix + sfx[0], prefix + sfx[1]
+
+        # reference: B's prompt decoded alone on a fresh engine
+        ref_ecfg = EngineConfig.preset("baseline", gpu_blocks=128,
+                                       host_blocks=64, max_running=8,
+                                       sched_quantum=4)
+        ref_backend = JaxBackend(cfg, ref_ecfg, FAST_PREFILL,
+                                 key=backend.key)
+        ref_backend.params = backend.params
+        ref_eng = Engine(ref_ecfg, FAST_PREFILL, backend=ref_backend)
+        submit_one(ref_eng, prompt_b, decode_len=16)
+        for _ in range(30):
+            step(ref_eng)
+            if not (ref_eng.running or ref_eng.waiting or ref_eng.events):
+                break
+        (ref_rid, ref_toks), = ref_backend.generated.items()
+
+        submit_one(eng, prompt_a, decode_len=48, name="a")
+        step(eng)
+        (ra,) = eng.running
+        offload_now(eng, ra)
+        rng = np.random.default_rng(77)
+        submit_one(eng, [int(t) for t in rng.integers(0, 50000, 20 * BT)],
+                   name="x")
+        step(eng)
+        rx = next(r for r in eng.running if r.rid.endswith("x"))
+        offload_now(eng, rx, drain=False)     # backlog the stream
+        submit_one(eng, prompt_b, decode_len=16, name="b")
+        eng._process_events_until(eng.clock)  # B arrives; D2H stays queued
+        eng.schedule_step()                   # B admits, elects recompute
+        rb = next(r for r in eng.running if r.rid.endswith("b"))
+        eng.clock += eng.execute_iteration()  # B's full dense prefill
+        return dict(eng=eng, backend=backend, cfg=cfg, rb=rb,
+                    prompt_b=prompt_b, ref_toks=ref_toks, M=M, jnp=jnp)
+
+    def test_election_fired_and_nothing_promoted(self, setup):
+        eng = setup["eng"]
+        assert eng.metrics["recompute_elections"] >= 1
+        assert eng.metrics["promotions"] == 0
+        assert eng.metrics["h2d_bytes"] == 0
+        assert setup["rb"].prefix_cached_tokens == 0
+
+    def test_no_leaked_host_pins(self, setup):
+        eng = setup["eng"]
+        assert not eng.host.pins
+        assert not eng.prefix_store._promo_holds
+        assert not eng.prefix_store._promos
+        eng.prefix_store.check_invariants()
+
+    def test_logits_equal_unshared_dense_prefill(self, setup):
+        M, jnp = setup["M"], setup["jnp"]
+        backend, cfg = setup["backend"], setup["cfg"]
+        toks = [t % cfg.vocab_size for t in setup["prompt_b"]]
+        batch = {"tokens": jnp.asarray([toks], jnp.int32)}
+        want, _ = M.prefill(cfg, backend.params, batch)
+        got = backend.last_prefill_logits[setup["rb"].rid]
+        np.testing.assert_allclose(
+            got, np.asarray(want[0, 0], np.float32), atol=2e-4, rtol=2e-4)
+
+    def test_decode_matches_reference(self, setup):
+        eng, rb = setup["eng"], setup["rb"]
+        for _ in range(60):
+            step(eng)
+            if rb.done:
+                break
+        got = setup["backend"].generated[rb.rid][:16]
+        assert got == setup["ref_toks"][:16]
+        assert not eng.host.pins
+        eng.prefix_store.check_invariants()
 
 
 class TestPromotionE2E:

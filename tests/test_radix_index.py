@@ -83,6 +83,7 @@ def test_tree_walk_equals_bruteforce_lcp_200_seeds():
         run_tree_sequence(seed)
 
 
+@pytest.mark.fuzz
 @given(st.integers(min_value=0, max_value=10 ** 6))
 @settings(max_examples=150, deadline=None)
 def test_tree_walk_equals_bruteforce_lcp_hypothesis(seed):
@@ -94,19 +95,35 @@ def test_tree_walk_equals_bruteforce_lcp_hypothesis(seed):
 # ---------------------------------------------------------------------------
 
 class StoreDriver:
-    """Random publish/match/release/ready/pressure sequences.
+    """Random publish/match/release/ready/pressure/promotion sequences.
 
     ``atomic_ready`` publishes flip ready immediately (the exactness
     regime); ``pressure`` interleaves external allocations that force LRU
     reclaim (soundness-only regime — the oracle cannot predict evictions).
+
+    Promotion ops mirror the engine's admission: ``op_promote`` matches
+    with ``promote=True``, trims the cuttable run at a random per-block
+    cutoff (the cost-model path), pins sources before allocating
+    destinations (rollback on shortfall), and attaches unready promo
+    entries. In the exact regime the transfer completes atomically and
+    the promoted prefix joins the oracle; otherwise promotions stay in
+    flight across ops and ``op_promo_complete`` / ``op_promo_cancel``
+    exercise the exactly-once completion/cancellation protocol.
+
+    The host-side oracle (``host_recs``, one record per indexed block) is
+    kept in sync through the pool's ``release_cb`` — the ground-truth
+    unhook notification — so host-tier reclaim/expiry (frequency + TTL
+    capacity policy) can fire mid-sequence without desyncing it.
     """
 
     def __init__(self, seed: int, blocks: int = 256, devices: int = 1,
-                 atomic_ready: bool = True, pressure: bool = False):
+                 atomic_ready: bool = True, pressure: bool = False,
+                 host_ttl: float = float("inf")):
         self.rng = np.random.default_rng(seed)
         self.seed = seed
         self.pools = [DevicePool(blocks, d) for d in range(devices)]
         self.host = HostPool(64)
+        self.host.cache_ttl = host_ttl
         self.store = PrefixStore(self.pools, self.host, BT)
         self.atomic = atomic_ready
         self.pressure = pressure
@@ -114,8 +131,19 @@ class StoreDriver:
         self.pending = {}                # rid -> tokens (unready publish)
         self.live = {}                   # rid -> {"tokens", "table"}
         self.ext = []                    # pressure allocations (device ids)
-        self.host_recs = []              # oracle: (tokens, start, host ids)
+        self.host_recs = []              # oracle: (tokens, idx, host id)
+        self.promos = {}                 # pid -> in-flight promotion state
+        self.t = 0.0                     # virtual clock (host TTL sweep)
         self.n = 0
+        # oracle sync: the store's release_cb unhooks the radix index when
+        # host blocks are freed/reclaimed/expired — drop their records too
+        store_cb = self.host.release_cb
+
+        def _cb(freed):
+            store_cb(freed)
+            gone = set(freed)
+            self.host_recs = [r for r in self.host_recs if r[2] not in gone]
+        self.host.release_cb = _cb
 
     # -- helpers ---------------------------------------------------------------
     def gen_tokens(self):
@@ -215,9 +243,8 @@ class StoreDriver:
 
     # -- host tier -------------------------------------------------------------
     def _host_backed(self, q, idx) -> bool:
-        return any(lcp(q, toks) >= (idx + 1) * BT
-                   and start <= idx < start + len(ids)
-                   for toks, start, ids in self.host_recs)
+        return any(lcp(q, toks) >= (idx + 1) * BT and i == idx
+                   for toks, i, _ in self.host_recs)
 
     def expected_host_match(self, q) -> int:
         """Brute-force host oracle: the leading run where each index is
@@ -240,19 +267,125 @@ class StoreDriver:
         # the older record's host ids dangling in the oracle
         if any(self._host_backed(toks, i) for i in range(start, start + count)):
             return
-        ids = self.host.allocate(count, f"h{self.n}")
+        ids = self.host.allocate(count, f"h{self.n}",
+                                 group=f"g{self.n % 3}")
         self.n += 1
         self.store.host_publish(toks, ids, start=start)
-        self.host_recs.append((toks, start, ids))
+        for j, hb in enumerate(ids):
+            self.host_recs.append((toks, start + j, hb))
         self.op_host_match()
 
     def op_host_release(self):
         if not self.host_recs:
             return
-        toks, start, ids = self.host_recs.pop(
-            int(self.rng.integers(len(self.host_recs))))
-        self.host.release(ids)               # release_cb unhooks the tree
+        toks, idx, hb = self.host_recs[
+            int(self.rng.integers(len(self.host_recs)))]
+        # freed blocks unhook (release_cb drops the record); a block an
+        # in-flight promotion still reads parks in the cached tier and
+        # STAYS indexed/matchable, so its record stays too
+        self.host.release([hb])
+        if hb not in self.host.cached:
+            assert all(r[2] != hb for r in self.host_recs)
         self.op_host_match()
+
+    def op_host_expire(self):
+        """Advance the virtual clock and run the TTL sweep (the Temporal
+        Scheduler's per-step hygiene); release_cb keeps the oracle in
+        sync with whatever expired."""
+        self.t += float(self.rng.uniform(0.0, 3.0))
+        self.host.expire(self.t)
+
+    # -- promotions (engine-admission mirror) ----------------------------------
+    def op_promote(self):
+        """Match with promote=True, cut the run at a random per-block
+        cutoff (cost-model trim — 0 is a recompute election), pin sources
+        before allocating destinations, attach unready promo entries. In
+        the exact regime the transfer completes atomically; otherwise it
+        stays in flight for op_promo_complete / op_promo_cancel."""
+        # promo runs live past device coverage, so the query must follow a
+        # host-published token path — those can run deeper than any ready
+        # prompt (device exactness doesn't apply; soundness still does)
+        if self.host_recs and self.rng.random() < 0.8:
+            toks = list(self.host_recs[
+                int(self.rng.integers(len(self.host_recs)))][0])
+        else:
+            toks = self.gen_tokens()
+        m = self.store.match(toks, promote=True)
+        best = max((lcp(toks, p) for p in self.ready_prompts), default=0)
+        assert m.tokens <= best, \
+            f"seed {self.seed}: matched {m.tokens} > oracle lcp {best}"
+        if m.pending_promo or not m.promo:
+            return
+        # the promo run itself is host-oracle-backed block for block
+        for idx, _hb in m.promo:
+            assert self._host_backed(toks, idx), \
+                f"seed {self.seed}: promo block {idx} not host-backed"
+        k_max = len(m.promo)
+        k = int(self.rng.integers(0, k_max + 1))     # random cutoff
+        m.trim_promo(k, BT)
+        assert len(m.promo) == k
+        if k == 0:
+            return                                   # recompute election
+        rid = f"p{self.n}"
+        self.n += 1
+        got = self.store.acquire(rid, m)
+        self.store.promote_hold(rid, m)
+        if any(p.free < k for p in self.pools):
+            self.store.release(rid)                  # rollback the hold
+            return
+        dests = {p.device: p.allocate(k, rid) for p in self.pools}
+        table = {d: got.get(d, []) + dests[d] for d in dests}
+        pid = self.store.promote(rid, m, dests)
+        state = {"rid": rid, "tokens": toks, "table": table,
+                 "covered": (m.n_full + k) * BT}
+        if self.atomic:
+            assert self.store.promotion_done(pid)
+            self._adopt_promoted(state)
+        else:
+            self.promos[pid] = state
+
+    def _adopt_promoted(self, state):
+        """Completed promotion: the promoted prefix is now device-ready
+        content — it joins the oracle, and the requester becomes a
+        normal live pin-holder (released via op_release/drain). Only the
+        covered prefix is adopted: the host prompt's deeper tokens have
+        no device KV, so they must not seed exact-oracle queries."""
+        prefix = list(state["tokens"][:state["covered"]])
+        self.ready_prompts.append(prefix)
+        self.live[state["rid"]] = {"tokens": prefix,
+                                   "table": state["table"]}
+
+    def op_promo_complete(self):
+        if not self.promos:
+            return
+        pids = sorted(self.promos)
+        pid = pids[int(self.rng.integers(len(pids)))]
+        state = self.promos.pop(pid)
+        if self.store.promotion_done(pid):
+            self._adopt_promoted(state)
+
+    def op_promo_cancel(self):
+        """Requester evicted mid-transfer: release drops its pins and the
+        unready destination entries exactly once; the still-pending
+        promotion_done must only unpin the host sources."""
+        pids = sorted(p for p, s in self.promos.items()
+                      if not s.get("cancelled"))   # a requester dies once
+        if not pids:
+            return
+        pid = pids[int(self.rng.integers(len(pids)))]
+        state = self.promos[pid]
+        req = SimpleNamespace(gpu_blocks_by_device={
+            d: list(v) for d, v in state["table"].items()})
+        self.store.release(state["rid"], req)
+        # every destination block was store-pinned: release stripped them
+        # all (and freed them via the entry drop) — nothing left to free
+        for d, leftover in req.gpu_blocks_by_device.items():
+            self.pools[d].release(leftover)
+        state["cancelled"] = True
+        if self.rng.random() < 0.5:      # completion event may fire now...
+            state = self.promos.pop(pid)
+            assert not self.store.promotion_done(pid)
+        # ...or stay pending until a later op_promo_complete / drain
 
     def op_host_match(self):
         q = self.gen_tokens()
@@ -269,11 +402,20 @@ class StoreDriver:
         ops = [self.op_publish, self.op_publish, self.op_match,
                self.op_release, self.op_mark_ready, self.op_pressure,
                self.op_host_publish, self.op_host_match,
-               self.op_host_release]
+               self.op_host_release, self.op_host_expire,
+               self.op_promote, self.op_promote,
+               self.op_promo_complete, self.op_promo_cancel]
         for _ in range(n_ops):
             ops[int(self.rng.integers(len(ops)))]()
             self.store.check_invariants()
-        # drain: every release path must leave the world conserved
+        # drain: every release path must leave the world conserved.
+        # Outstanding transfers first — their completion events fire
+        # exactly once whether the requester survived or was cancelled.
+        for pid in sorted(self.promos):
+            state = self.promos.pop(pid)
+            if self.store.promotion_done(pid):
+                self._adopt_promoted(state)
+            self.store.check_invariants()
         for rid in sorted(self.live):
             state = self.live[rid]
             req = SimpleNamespace(gpu_blocks_by_device={
@@ -285,11 +427,19 @@ class StoreDriver:
             self.store.check_invariants()
         for d, blocks in self.ext:
             self.pools[d].release(blocks)
-        for _, _, ids in self.host_recs:
-            self.host.release(ids)
+        for toks, idx, hb in list(self.host_recs):
+            if hb not in self.host.cached:
+                self.host.release([hb])
+        # flush the cached content tier (blocks parked by releases that
+        # raced in-flight promotions, or retained by the oracle above)
+        if self.host.cached:
+            self.host.release(list(self.host.cached))
         self.host_recs = []
         self.store.check_invariants()
         assert not self.store.pins and not self.store.unready
+        assert not self.store._promos and not self.store._promo_holds
+        assert not self.host.pins, \
+            f"seed {self.seed}: leaked host promotion pins"
         assert not self.store.host_nodes, \
             f"seed {self.seed}: host index not unhooked on release"
         assert self.host.free == self.host.num_blocks
@@ -325,14 +475,29 @@ def test_store_fuzz_multi_device_60_seeds():
                     atomic_ready=False, pressure=True).run(n_ops=30)
 
 
+def test_store_fuzz_host_ttl_expiry_80_seeds():
+    """Host capacity policy under fuzz: a finite TTL lets the per-step
+    sweep expire cached/indexed host copies mid-sequence — the oracle
+    follows via release_cb, and promotions racing expiry stay coherent
+    (pinned in-flight sources are never swept)."""
+    for seed in range(50):
+        StoreDriver(4_000_000 + seed, atomic_ready=True, pressure=False,
+                    host_ttl=4.0).run(n_ops=30)
+    for seed in range(30):
+        StoreDriver(5_000_000 + seed, blocks=24, atomic_ready=False,
+                    pressure=True, host_ttl=2.0).run(n_ops=35)
+
+
+@pytest.mark.fuzz
 @given(st.integers(min_value=0, max_value=10 ** 6),
-       st.booleans(), st.booleans())
+       st.booleans(), st.booleans(),
+       st.sampled_from([float("inf"), 4.0]))
 @settings(max_examples=120, deadline=None)
-def test_store_fuzz_hypothesis(seed, pressure, two_dev):
+def test_store_fuzz_hypothesis(seed, pressure, two_dev, host_ttl):
     StoreDriver(seed, blocks=24 if pressure else 256,
                 devices=2 if two_dev else 1,
-                atomic_ready=not pressure, pressure=pressure
-                ).run(n_ops=30)
+                atomic_ready=not pressure, pressure=pressure,
+                host_ttl=host_ttl).run(n_ops=30)
 
 
 # ---------------------------------------------------------------------------
@@ -391,6 +556,75 @@ def test_split_under_live_pin_keeps_release_coherent():
     store.check_invariants()
     assert not store.pins
     assert sum(len(n.refs) for n in store.tree.nodes()) == 0
+
+
+def test_partial_run_cutoff_promotion_lifecycle():
+    """Deterministic partial-cutoff shape: a 4-block host run trimmed to
+    2 pins only the covered path and transfer-pins only the 2 sources;
+    completion makes exactly the trimmed prefix matchable, and the
+    untrimmed tail stays host-matchable for a later (full) promotion."""
+    d = StoreDriver(0)
+    store, p, host = d.store, d.pools[0], d.host
+    toks = list(range(16))                              # 4 full blocks
+    hbs = host.allocate(4, "h")
+    store.host_publish(toks, hbs, start=0)
+
+    m = store.match(toks, promote=True)
+    assert [hb for _, hb in m.promo] == hbs
+    m.trim_promo(2, BT)                                 # per-block cutoff
+    assert [hb for _, hb in m.promo] == hbs[:2]
+    assert all(nd.start <= 2 * BT - 1 for nd in m.promo_path)
+
+    store.acquire("r", m)                               # nothing device-side
+    store.promote_hold("r", m)
+    assert sum(host.pins.values()) == 2                 # only trimmed srcs
+    dests = {0: p.allocate(2, "r")}
+    pid = store.promote("r", m, dests)
+    store.check_invariants()
+    assert store.match(toks).tokens == 0                # in flight: unready
+    assert store.promotion_done(pid)
+    assert store.match(toks).n_full == 2                # trimmed prefix only
+    assert not host.pins
+    assert store.host_match(toks) == 4                  # tail still indexed
+
+    # the tail promotes later, from the device-coverage boundary
+    m2 = store.match(toks, promote=True)
+    assert m2.n_full == 2
+    assert [hb for _, hb in m2.promo] == hbs[2:]
+    store.release("r", SimpleNamespace(gpu_blocks_by_device={0: dests[0]}))
+    host.release(hbs)
+    store.check_invariants()
+    assert p.free == p.num_blocks
+
+
+def test_cancel_after_cutoff_releases_exactly_once():
+    """Cancel of a trimmed promotion: the requester's release frees the
+    2 trimmed destinations once; the pending completion only unpins the
+    2 host sources, and the pool conserves."""
+    d = StoreDriver(0)
+    store, p, host = d.store, d.pools[0], d.host
+    toks = list(range(16))
+    hbs = host.allocate(4, "h")
+    store.host_publish(toks, hbs, start=0)
+    m = store.match(toks, promote=True)
+    m.trim_promo(2, BT)
+    store.acquire("r", m)
+    store.promote_hold("r", m)
+    dests = {0: p.allocate(2, "r")}
+    pid = store.promote("r", m, dests)
+    free_before = p.free
+
+    req = SimpleNamespace(gpu_blocks_by_device={0: list(dests[0])})
+    store.release("r", req)                             # cancel mid-flight
+    assert req.gpu_blocks_by_device[0] == []            # all were pinned
+    assert p.free == free_before + 2                    # freed exactly once
+    assert sum(host.pins.values()) == 2                 # until the event
+    assert not store.promotion_done(pid)                # cancelled
+    assert not host.pins
+    assert len(set(p.free_list)) == len(p.free_list), "double-release!"
+    store.check_invariants()
+    host.release(hbs)
+    assert p.free == p.num_blocks
 
 
 def test_unready_publisher_eviction_under_concurrent_pin():

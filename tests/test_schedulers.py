@@ -281,6 +281,40 @@ class TestPromotionArbitration:
         assert 0 <= b <= sched.upload_budget(snap)
 
 
+class TestHostCapacityPolicyWiring:
+    """The Temporal Scheduler owns the host cache-tier capacity knobs
+    (frequency decay, TTL, group quota) and runs the per-step expiry
+    sweep — cold cached copies hand capacity back to the offload plans
+    before an allocation has to reclaim them."""
+
+    def test_config_knobs_reach_the_pool(self):
+        sched, pools, host = mk_temporal(
+            host_ttl=30.0, host_hit_decay=7.0, host_group_quota=0.5)
+        assert host.cache_ttl == 30.0
+        assert host.hit_decay == 7.0
+        assert host.group_quota_frac == 0.5
+
+    def test_defaults_never_expire(self):
+        sched, pools, host = mk_temporal()
+        assert host.cache_ttl == math.inf
+        blocks = host.allocate(4, "a")
+        host.retire(blocks)
+        assert sched.sweep_host_cache(1e12) == 0
+        assert len(host.cached) == 4
+
+    def test_sweep_expires_and_counts(self):
+        sched, pools, host = mk_temporal(host_ttl=10.0)
+        blocks = host.allocate(4, "a")
+        host.retire(blocks)                  # t=0
+        assert sched.sweep_host_cache(5.0) == 0
+        host.touch(blocks[:1])               # refreshed at t=5
+        assert sched.sweep_host_cache(12.0) == 3
+        assert sched.host_expired == 3
+        assert list(host.cached) == blocks[:1]
+        # freed capacity is immediately allocatable for an offload plan
+        assert host.free == host.num_blocks
+
+
 class TestPrefixAwareOffloadPolicy:
     """ROADMAP selection rule: prefer stalling victims whose blocks are
     mostly private — the cheapest freed byte (pinned shared prefix blocks
