@@ -79,6 +79,14 @@ class PlatformModel:
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_tokens)
 
+    def upload_lead_time(self, n_blocks: int,
+                         stream_backlog: float = 0.0) -> float:
+        """Seconds between submitting an H2D upload of ``n_blocks`` now
+        and its last byte landing: the serial stream's current backlog
+        plus the copy itself. This is the minimum lead a *prefetch* needs
+        over its target's activation to have the KV resident in time."""
+        return max(stream_backlog, 0.0) + self.upload_time(n_blocks)
+
     # ---- transfer economics: promote-vs-recompute crossover -----------------
     def promote_gain(self, k: int, stream_backlog: float = 0.0) -> float:
         """Seconds saved by uploading ``k`` host-cached blocks instead of

@@ -37,6 +37,7 @@ from repro.core.pressure import DevicePressure, PressureSnapshot
 from repro.core.request import DEVICE_RESIDENT, Request, ReqState
 from repro.core.spatial import AgentTypeStats, SpatialConfig, SpatialScheduler
 from repro.core.temporal import TemporalConfig, TemporalScheduler
+from repro.core.transfers import Transfer, TransferManager
 from repro.kvcache.prefix_store import PrefixMatch, PrefixStore
 
 
@@ -114,6 +115,10 @@ class AppState:
     app_id: str
     graph: AppGraph
     arrival: float
+    # user-supplied per-node prompt tokens, kept for the app's whole
+    # lifetime: deep nodes spawn long after arrival (and the prefetch
+    # phase needs a node's prompt *before* it spawns)
+    prompts: Dict[int, List[int]] = field(default_factory=dict)
     finished_nodes: set = field(default_factory=set)
     node_request: Dict[int, Request] = field(default_factory=dict)
     finish_time: Optional[float] = None
@@ -156,8 +161,8 @@ class Engine:
         self.stalled: Dict[str, Request] = {}      # resident, on FC
         self.offloaded: Dict[str, Request] = {}    # incl. pending transfers
         self.events: List[Tuple[float, int, str, object]] = []
-        self.stream_free_at = 0.0                  # transfer stream
         self._fresh_stalled: List[Request] = []
+        self._prefetched: set = set()              # (app_id, nid) issued
 
         # ---- metrics ----
         self.metrics = {
@@ -180,7 +185,18 @@ class Engine:
             "promotion_cutoffs": 0, "recompute_elections": 0,
             "promo_blocks_trimmed": 0, "stream_wait_s": 0.0,
             "host_cache_expired": 0,
+            # workflow-aware prefetch: speculative promotions issued ahead
+            # of their consumer's activation; hits/earliness counted when
+            # a consumer pins the delivered blocks, waste when reclaim
+            # takes them first (store-side, merged into report())
+            "prefetch_issued": 0, "prefetch_hits": 0,
+            "prefetch_early_s": 0.0,
         }
+        # unified transfer plane: every offload/upload/promotion/prefetch
+        # books a lifecycle record on the single copy stream, priority-
+        # arbitrated; counts/bytes/waits accounted into self.metrics
+        self.transfers = TransferManager(platform, lambda: self.clock,
+                                         self._push, self.metrics)
         self.util_samples: List[Tuple[float, float, float]] = []
         self.app_latencies: List[float] = []
         self.req_latencies: List[float] = []
@@ -193,18 +209,26 @@ class Engine:
     def submit_app(self, graph: AppGraph, arrival: float,
                    prompt_tokens: Optional[Dict[int, List[int]]] = None):
         app_id = f"{graph.name}#{len(self.apps)}"
-        app = AppState(app_id, graph, arrival)
+        app = AppState(app_id, graph, arrival, prompts=prompt_tokens or {})
         self.apps[app_id] = app
-        self._push(arrival, "app_arrival", (app_id, prompt_tokens or {}))
+        self._push(arrival, "app_arrival", app_id)
         return app_id
 
-    def _spawn_ready_nodes(self, app: AppState, prompts: Dict[int, List[int]]):
+    def _node_prompt(self, app: AppState, nid: int) -> List[int]:
+        """The prompt a node will run with — user-supplied if given,
+        synthetic otherwise. Deterministic, so the prefetch phase can
+        compute it *before* the node spawns and the spawned request sees
+        the identical token sequence."""
+        return (app.prompts.get(nid)
+                or self._synth_prompt(app, app.graph.nodes[nid]))
+
+    def _spawn_ready_nodes(self, app: AppState):
         on_cp = app.graph.on_critical_path()
         for nid, node in app.graph.nodes.items():
             if nid in app.node_request:
                 continue
             if all(d in app.finished_nodes for d in node.deps):
-                toks = prompts.get(nid) or self._synth_prompt(app, node)
+                toks = self._node_prompt(app, nid)
                 req = Request(rid=f"{app.app_id}/{node.name}",
                               app_id=app.app_id, node=node, graph=app.graph,
                               arrival=self.clock, prompt_tokens=toks,
@@ -304,7 +328,8 @@ class Engine:
             offloadable_stalled_blocks=stalled_blocks,
             pending_upload_debt=max(debt, 0),
             host_free_blocks=self.host.free,
-            running_count=len(self.running))
+            running_count=len(self.running),
+            stream_backlog_s=self.transfers.backlog())
 
     # ------------------------------------------------------------------- stats
     def _refresh_type_stats(self):
@@ -352,29 +377,31 @@ class Engine:
         return out
 
     # ---------------------------------------------------------------- transfers
+    @property
+    def stream_free_at(self) -> float:
+        """End of the last slot booked on the shared copy stream (read-only
+        view of the TransferManager's timeline; kept for tests and
+        introspection that watched the PR 5 scalar)."""
+        return self.transfers.free_at
+
     def stream_backlog(self) -> float:
         """Seconds until the shared copy stream's earliest free slot — the
         wait a transfer scheduled *now* would pay before its first byte
         moves. This is the ``stream_backlog`` input of the cost model's
         promote-vs-recompute crossover."""
-        return max(self.stream_free_at - self.clock, 0.0)
+        return self.transfers.backlog()
 
-    def _schedule_transfer(self, n_blocks: int, direction: str,
-                           event: str, payload) -> float:
-        """Serialize a block transfer on the single copy stream (offloads,
-        uploads and prefix promotions all share it) and schedule the
-        completion event; returns the completion time."""
-        dur = (self.platform.offload_time(n_blocks) if direction == "d2h"
-               else self.platform.upload_time(n_blocks))
-        start = max(self.clock, self.stream_free_at)
-        self.metrics["stream_wait_s"] += start - self.clock
-        self.stream_free_at = start + dur
-        self.metrics["swap_blocks"] += n_blocks
-        key = "d2h_bytes" if direction == "d2h" else "h2d_bytes"
-        self.metrics[key] += n_blocks * self.platform.block_bytes
+    def _submit_transfer(self, kind: str, n_blocks: int, payload,
+                         owner: Optional[str] = None,
+                         on_reschedule=None) -> Transfer:
+        """Book a block transfer on the unified transfer plane (offloads,
+        uploads, promotions and prefetches share the one serial copy
+        stream, priority-arbitrated) and return its lifecycle record;
+        the ``transfer_done`` event fires at the slot's end."""
+        tr = self.transfers.submit(kind, n_blocks, payload, owner=owner,
+                                   on_reschedule=on_reschedule)
         self.temporal.swapped_blocks += n_blocks
-        self._push(self.stream_free_at, event, payload)
-        return self.stream_free_at
+        return tr
 
     def _start_offload(self, req: Request) -> None:
         # only the private blocks move; the store-pinned shared prefix (the
@@ -408,7 +435,7 @@ class Engine:
         self.temporal.offload_count += 1
         if self.backend is not None:
             self.backend.copy_out(req)
-        self._schedule_transfer(n, "d2h", "offload_done", req.rid)
+        self._submit_transfer("offload", n, req.rid, owner=req.rid)
 
     def _finish_offload(self, req: Request) -> None:
         shared = req.shared_prefix_blocks
@@ -429,7 +456,7 @@ class Engine:
         self.temporal.upload_count += 1
         if self.backend is not None:
             self.backend.copy_in(req)
-        self._schedule_transfer(n, "h2d", "upload_done", req.rid)
+        self._submit_transfer("upload", n, req.rid, owner=req.rid)
 
     def _finish_upload(self, req: Request) -> None:
         # reserved device-0 blocks become the live KV blocks, appended after
@@ -490,15 +517,100 @@ class Engine:
         # the requester's suffix prefill attends over the promoted KV, so
         # its compute is gated until the copy stream delivers it — the
         # promotion's latency cost lands on the requester, not just on
-        # later transfers sharing the stream
-        req.promo_ready_at = self._schedule_transfer(
-            k, "h2d", "promotion_done", pid)
+        # later transfers sharing the stream. A later higher-priority
+        # stream insert can push the slot back; the reschedule hook keeps
+        # the compute gate in sync with the live booking.
+        tr = self._submit_transfer(
+            "promotion", k, pid, owner=req.rid,
+            on_reschedule=lambda end, r=req: setattr(r, "promo_ready_at",
+                                                     end))
+        req.promo_ready_at = tr.end
+        req.promo_tid = tr.tid
 
     def _finish_promotion(self, pid: int) -> None:
         """``upload_done`` for a promotion: entries become readable by
         sharers; a cancelled promotion (requester evicted mid-transfer)
         only drops the host pins — exactly once, never a double release."""
         self.prefix_store.promotion_done(pid)
+
+    # ---- workflow-aware prefetch (speculative ownerless promotion) ----------
+    def _phase_prefetch(self, snap: PressureSnapshot) -> None:
+        """Pre-warm host->device promotions for agents the AppGraph says
+        will activate soon (KVFlow-style steps-to-execution): walk live
+        apps' unspawned nodes in topo order and, within the promotion
+        budget, upload their host-cached prefix runs *now* — overlapped
+        behind the current step's compute — so the eventual admission
+        pins ready resident blocks instead of gating its prefill on
+        ``upload_time(k)``. Mispredictions retire through the normal
+        cached-LRU path (no pins leak; reclaim counts the waste)."""
+        budget = (self.temporal.promotion_budget(snap)
+                  - self.transfers.live_blocks("prefetch"))
+        if budget <= 0:
+            return
+        bt = self.platform.block_tokens
+        backlog = snap.stream_backlog_s
+        # cheapest-possible horizon (1 block, current backlog) gates the
+        # expensive store walk; the exact per-run check happens after
+        min_horizon = self.temporal.prefetch_horizon(1, backlog)
+        for app in self.apps.values():
+            if app.arrival > self.clock or app.finish_time is not None:
+                continue
+            for nid in app.graph.topo_order():
+                if budget <= 0:
+                    return
+                if (nid in app.node_request or nid in app.finished_nodes
+                        or (app.app_id, nid) in self._prefetched):
+                    continue
+                eta = self.temporal.activation_eta(
+                    app.graph, nid, app.finished_nodes, app.node_request)
+                if eta > min_horizon:
+                    continue
+                m = self.prefix_store.match(self._node_prompt(app, nid),
+                                            promote=True)
+                if not m.promo or m.pending_promo:
+                    continue
+                k = min(len(m.promo), budget)
+                if eta > self.temporal.prefetch_horizon(k, backlog):
+                    continue
+                if any(p.free < k + self._headroom() for p in self.pools):
+                    continue
+                if k < len(m.promo):
+                    m.trim_promo(k, bt)
+                if self._start_prefetch(app, nid, m):
+                    budget -= k
+
+    def _start_prefetch(self, app: AppState, nid: int,
+                        m: PrefixMatch) -> bool:
+        """Issue one speculative promotion under a synthetic tag (no
+        consumer request exists yet): same pin-before-allocate
+        discipline as a demand promotion — the tag pins the token path
+        and host sources, then owns the destination blocks until
+        delivery releases them into the cached tier. Returns False (all
+        holds rolled back) if the pool cannot take the destinations: the
+        hold itself pins previously-reclaimable cached blocks, so free
+        capacity must be re-checked after it."""
+        tag = f"<prefetch>/{app.app_id}/{nid}"
+        k = len(m.promo)
+        self.prefix_store.promote_hold(tag, m)
+        if any(p.free < k + self._headroom() for p in self.pools):
+            self.prefix_store.release(tag)
+            return False
+        dests = {p.device: p.allocate(k, tag) for p in self.pools}
+        pid = self.prefix_store.promote(tag, m, dests, source="prefetch")
+        if self.backend is not None:
+            self.backend.promote_blocks([hb for _, hb in m.promo], dests[0])
+        self.metrics["prefetch_issued"] += 1
+        self.temporal.prefetch_count += 1
+        self._submit_transfer("prefetch", k, pid, owner=tag)
+        self._prefetched.add((app.app_id, nid))
+        return True
+
+    def _finish_prefetch(self, pid: int) -> None:
+        """Delivery: entries flip ready, get their delivery stamp, and
+        drop to the refcount-0 cached tier where the anticipated
+        consumer's admission will match and pin them with zero stream
+        wait."""
+        self.prefix_store.prefetch_done(pid, self.clock)
 
     # ----------------------------------------------------------------- finish
     def _finish_request(self, req: Request) -> None:
@@ -516,7 +628,7 @@ class Engine:
         self.spatial.release(req, cache=False)
         app = self.apps[req.app_id]
         app.finished_nodes.add(req.node.node_id)
-        self._spawn_ready_nodes(app, {})
+        self._spawn_ready_nodes(app)
         if len(app.finished_nodes) == len(app.graph.nodes):
             app.finish_time = self.clock
             self.app_latencies.append(self.clock - app.arrival)
@@ -562,8 +674,17 @@ class Engine:
         victim.prefix_cached_tokens = 0
         # the in-flight promotion (if any) was just cancelled: drop the
         # compute gate too, or the readmission would idle out the rest of
-        # a transfer it no longer depends on
+        # a transfer it no longer depends on. The transfer plane mirrors
+        # the cancel: a slot already copying runs out (its event fires
+        # with state "cancelled" and promotion_done drops the host pins),
+        # while a still-queued slot is removed outright — its event goes
+        # stale, so ITS teardown (host-pin release) runs here instead,
+        # exactly once either way.
         victim.promo_ready_at = 0.0
+        victim.promo_tid = None
+        for tr in self.transfers.cancel_owner(victim.rid):
+            if tr.kind == "promotion":
+                self.prefix_store.promotion_done(tr.payload)
         self.spatial.release(victim, cache=False)
         if self.backend is not None:
             # the data plane must forget the evicted cache: the allocator
@@ -603,6 +724,13 @@ class Engine:
 
         # Phase 4: admission
         self._phase_admission(snap)
+
+        # Phase 5 (workflow-aware prefetch): speculative promotions run
+        # AFTER admission so demand work gets first claim on blocks and
+        # the stream this step; the prefetch targets agents of *future*
+        # steps and rides whatever budget is left over.
+        if self.cfg.host_promotion and self.temporal.cfg.prefetch:
+            self._phase_prefetch(snap)
         return snap
 
     def _phase_uploads(self, snap: PressureSnapshot, reactive=False):
@@ -858,6 +986,15 @@ class Engine:
         if m.n_full:
             self.metrics["prefix_hits"] += m.n_full
         self.metrics["prefix_saved_tokens"] += m.tokens
+        # first consumer of a prefetched block: the speculation paid off.
+        # Earliness = how long the delivered KV sat warm before being
+        # pinned; counted once per entry (the stamp clears on the hit).
+        for e in m.full_entries:
+            if e.prefetched_at is not None:
+                self.metrics["prefetch_hits"] += 1
+                self.metrics["prefetch_early_s"] += max(
+                    self.clock - e.prefetched_at, 0.0)
+                e.prefetched_at = None
         if m.partial_len:
             src = self.prefix_store.cow_fork(req.rid, m)
             self.metrics["cow_forks"] += 1
@@ -1011,22 +1148,33 @@ class Engine:
             when, _, kind, payload = heapq.heappop(self.events)
             self.clock = max(self.clock, when)
             if kind == "app_arrival":
-                app_id, prompts = payload
-                self._spawn_ready_nodes(self.apps[app_id], prompts)
+                self._spawn_ready_nodes(self.apps[payload])
             elif kind == "call_finish":
                 req = self._find(payload)
                 if req is not None:
                     self.call_finish(req)
-            elif kind == "offload_done":
-                req = self._find(payload)
-                if req is not None:
-                    self._finish_offload(req)
-            elif kind == "upload_done":
-                req = self._find(payload)
-                if req is not None:
-                    self._finish_upload(req)
-            elif kind == "promotion_done":
-                self._finish_promotion(payload)
+            elif kind == "transfer_done":
+                tr = self.transfers.on_event(payload)
+                if tr is not None:
+                    self._transfer_done(tr)
+
+    def _transfer_done(self, tr: Transfer) -> None:
+        """Completion dispatch for the unified transfer plane. Cancelled
+        in-flight slots still land here (the copy engine ran them out);
+        the per-kind finishers are cancel-aware — ``promotion_done``
+        drops only the host pins of a cancelled promotion."""
+        if tr.kind == "offload":
+            req = self._find(tr.payload)
+            if req is not None:
+                self._finish_offload(req)
+        elif tr.kind == "upload":
+            req = self._find(tr.payload)
+            if req is not None:
+                self._finish_upload(req)
+        elif tr.kind == "promotion":
+            self._finish_promotion(tr.payload)
+        elif tr.kind == "prefetch":
+            self._finish_prefetch(tr.payload)
 
     def _find(self, rid: str) -> Optional[Request]:
         for coll in (self.stalled, self.offloaded):
@@ -1082,6 +1230,12 @@ class Engine:
         return self.report()
 
     # ----------------------------------------------------------------- report
+    def transfer_report(self) -> dict:
+        """Per-kind transfer-plane ledger (counts / blocks / queue waits,
+        byte totals, live backlog) — the unified accounting the serving
+        frontend exposes next to the flat metrics."""
+        return self.transfers.describe()
+
     def report(self) -> dict:
         lat = sorted(self.app_latencies)
         pct = lambda q: lat[min(int(q * len(lat)), len(lat) - 1)] if lat else 0.0
@@ -1100,5 +1254,8 @@ class Engine:
             "clock": self.clock,
             "truncated_prompt_tokens": getattr(
                 self.backend, "truncated_prompt_tokens", 0),
+            # prefetch waste is store-side: a delivered-but-unhit entry is
+            # only known wasted when reclaim takes it
+            "prefetch_wasted": self.prefix_store.stats["prefetch_wasted"],
             **self.metrics,
         }

@@ -231,6 +231,34 @@ class AppGraph:
             end = best[end][1]
         return list(reversed(path))
 
+    def steps_to_execution(self, nid: int, finished: frozenset = frozenset(),
+                           node_cost=None) -> float:
+        """Forecast-priced distance until ``nid`` can start: the longest
+        cost path through its *unfinished* ancestors (KVFlow's
+        steps-to-execution, generalized from hop counts to seconds).
+
+        ``node_cost`` prices one ancestor's remaining work (defaults to
+        :meth:`work_estimate`); a node in ``finished`` contributes
+        nothing and cuts the paths through it. A ready node (every dep
+        finished) is at distance 0. The default-cost variant is cached
+        per ``finished`` frontier like the other structural metrics —
+        callers with a live cost function (forecaster-priced, progress-
+        scaled) bypass the cache."""
+        if node_cost is not None:
+            return self._steps_to_execution(finished, node_cost)[nid]
+        return self._cached(
+            ("ste", finished),
+            lambda: self._steps_to_execution(
+                finished, lambda n: self.work_estimate(self.nodes[n])))[nid]
+
+    def _steps_to_execution(self, finished, node_cost) -> Dict[int, float]:
+        eta: Dict[int, float] = {}
+        for n in self.topo_order():
+            eta[n] = max((eta[d] + node_cost(d)
+                          for d in self.nodes[n].deps if d not in finished),
+                         default=0.0)
+        return eta
+
     def on_critical_path(self) -> Dict[int, bool]:
         return self._cached(
             "on_cp", lambda: {n: n in set(self.critical_path())

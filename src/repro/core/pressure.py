@@ -38,6 +38,10 @@ class PressureSnapshot:
     pending_upload_debt: int          # blocks still owed to pending uploads
     host_free_blocks: int
     running_count: int
+    # transfer-plane state: seconds of work already booked on the shared
+    # copy stream when the snapshot was taken (the prefetch phase prices
+    # its lead time with this; admission keeps reading the live value)
+    stream_backlog_s: float = 0.0
 
     @property
     def total_blocks(self) -> int:
@@ -64,4 +68,5 @@ class PressureSnapshot:
                 f"crit {self.waiting_demand_critical}) "
                 f"stalled_offloadable={self.offloadable_stalled_blocks} "
                 f"upload_debt={self.pending_upload_debt} "
-                f"host_free={self.host_free_blocks}")
+                f"host_free={self.host_free_blocks} "
+                f"stream_backlog={self.stream_backlog_s:.3f}s")

@@ -94,7 +94,12 @@ class Request:
     # host-tier promotion in flight: the suffix prefill depends on KV the
     # copy stream is still uploading, so compute is gated until this time
     # (0.0 = no gate). Set by engine._start_promotion, inert once passed.
+    # The gate tracks the transfer's live booking: a priority insert on
+    # the stream re-books the slot and the TransferManager's reschedule
+    # hook moves the gate with it. ``promo_tid`` identifies the latest
+    # such transfer (wait-attribution introspection; cleared on evict).
     promo_ready_at: float = 0.0
+    promo_tid: Optional[int] = None
 
     # ---- derived -------------------------------------------------------------
     @property

@@ -59,6 +59,22 @@ class TemporalConfig:
     host_ttl: float = math.inf
     host_hit_decay: float = 600.0
     host_group_quota: float = 0.0
+    # workflow-aware KV prefetch (KVFlow-style steps-to-execution): pre-warm
+    # host->device promotions for agents the AppGraph says will activate
+    # within the horizon, so admission pins already-resident blocks instead
+    # of paying upload_time on the critical path. Off by default — every
+    # legacy mode keeps the purely reactive PR 5 behavior bit-identically.
+    prefetch: bool = False
+    prefetch_horizon_s: float = 30.0         # absolute activation horizon
+    prefetch_safety: float = 2.0             # x upload_lead_time fallback
+    # conservative quantile of the forecaster's per-tool interval used to
+    # price pending ancestors' tool time: a LOW quantile shortens the
+    # predicted gap, so a jittery tool prefetches earlier, never later
+    prefetch_quantile: float = 0.25
+    # optional quantile for the predictive-upload trigger: replace the
+    # fixed upload_safety multiplier with a conservative completion-time
+    # quantile (None keeps the legacy multiplier rule bit-identically)
+    upload_quantile: Optional[float] = None
 
 
 @dataclass
@@ -82,6 +98,7 @@ class TemporalScheduler:
         self.offload_count = 0
         self.upload_count = 0
         self.promotion_count = 0
+        self.prefetch_count = 0
         self.rejected_offloads = 0
         self.swapped_blocks = 0
         self.emergency_offloads = 0
@@ -241,6 +258,52 @@ class TemporalScheduler:
 
     def should_start_upload(self, req: Request, now: float) -> bool:
         """Begin reserving when predicted completion is within the safety
-        margin of the transfer time (predictive upload, §4.3)."""
+        margin of the transfer time (predictive upload, §4.3).
+
+        With ``upload_quantile`` set, the fixed multiplier is replaced by
+        a conservative quantile of the tool's forecast interval: upload
+        when ``now + t_up`` reaches the q-quantile completion time, so
+        the margin adapts to the tool's observed jitter instead of
+        scaling uniformly."""
         t_up = self.platform.upload_time(len(req.host_blocks))
+        q = self.cfg.upload_quantile
+        if q is not None and req.current_fc is not None:
+            fc = req.current_fc
+            t_q = self.forecaster.predict_interval(fc.tool, q,
+                                                   fc.predict_time)
+            return now + t_up >= req.fc_start + t_q
         return now + t_up * self.cfg.upload_safety >= req.fc_predicted_end
+
+    # ------------------------------------------- workflow-aware prefetch (§4.3+)
+    def prefetch_horizon(self, n_blocks: int, stream_backlog: float) -> float:
+        """How far ahead of an agent's activation a prefetch may launch:
+        at least the transfer's lead time (backlog + copy) with safety
+        slack — otherwise the blocks would land late and the prefetch
+        degenerates into a reactive promotion — widened to the absolute
+        horizon so cheap early warming is allowed when capacity permits."""
+        lead = self.platform.upload_lead_time(n_blocks, stream_backlog)
+        return max(self.cfg.prefetch_horizon_s,
+                   lead * self.cfg.prefetch_safety)
+
+    def activation_eta(self, graph, nid: int, finished: set,
+                       node_requests: Dict[int, Request]) -> float:
+        """Forecast-priced seconds until node ``nid`` can start
+        (steps-to-execution over the app DAG): each unfinished ancestor
+        contributes its LLM work plus its tools priced at the
+        conservative ``prefetch_quantile`` of the forecaster's interval,
+        scaled down by observed progress for ancestors already running."""
+        q = self.cfg.prefetch_quantile
+
+        def cost(d: int) -> float:
+            node = graph.nodes[d]
+            t = node.prompt_len * 5e-4 + node.total_decode * 0.03
+            t += sum(self.forecaster.predict_interval(fc.tool, q,
+                                                      fc.predict_time)
+                     for fc in node.func_calls if fc)
+            req = node_requests.get(d)
+            if req is not None:
+                t *= max(0.0, 1.0 - req.completion_frac())
+            return t
+
+        return graph.steps_to_execution(nid, finished=frozenset(finished),
+                                        node_cost=cost)

@@ -156,7 +156,8 @@ class PrefixStore:
         self._promos_by_rid: Dict[str, set] = {}
         # store-internal lifecycle counters only; hit/COW accounting lives
         # in the engine's metrics (counted once, at admission commit)
-        self.stats = {"published": 0, "reclaimed": 0, "promoted": 0}
+        self.stats = {"published": 0, "reclaimed": 0, "promoted": 0,
+                      "prefetch_wasted": 0}
         for p in pools:
             p.reclaim_cb = self._on_reclaim
             p.victim_cb = self._lru_victim
@@ -246,7 +247,8 @@ class PrefixStore:
         while (idx + 1) * self.bt <= matched:
             e = avail.get(idx)
             if e is not None:
-                if not e.ready and e.source == "promo" and not promo:
+                if not e.ready and e.source in ("promo", "prefetch") \
+                        and not promo:
                     m.pending_promo = True
                 break                    # device entry exists: not ours
             if idx not in hosts:
@@ -328,14 +330,19 @@ class PrefixStore:
         self._promo_holds[rid] = hbs
 
     def promote(self, rid: str, m: PrefixMatch,
-                blocks_by_device: Dict[int, List[int]]) -> int:
+                blocks_by_device: Dict[int, List[int]],
+                source: str = "promo") -> int:
         """Admission committed: attach *unready* device entries for the
         promoted blocks at the SAME radix nodes their host copies sit on
         (device and host tier share one tree), owned by the store and
         pinned by ``rid``. The entries flip ready only at ``upload_done``
         (``promotion_done``), so sharers never read in-flight KV; the
         host pins move from the admission hold to the transfer record.
-        Returns the promotion id for the engine's completion event."""
+        Returns the promotion id for the engine's completion event.
+
+        ``source="prefetch"`` marks a speculative ownerless promotion
+        (``rid`` is then the engine's synthetic prefetch tag, released
+        at delivery via :meth:`prefetch_done`)."""
         hbs = self._promo_holds.pop(rid)
         pb = self.pin_blocks.setdefault(rid, {d: [] for d in self.pools})
         entries: List[BlockEntry] = []
@@ -345,7 +352,7 @@ class PrefixStore:
                         if nd.start <= last < nd.end)
             e = BlockEntry(idx, {d: blocks_by_device[d][j]
                                  for d in self.pools}, self.bt,
-                           node=node, source="promo")
+                           node=node, source=source)
             node.entries[idx] = e
             for d, bid in e.blocks.items():
                 self.by_block[(d, bid)] = e
@@ -378,6 +385,26 @@ class PrefixStore:
         for e in promo.entries:
             e.ready = True
         return True
+
+    def prefetch_done(self, pid: int, now: float) -> bool:
+        """Delivery of a speculative (ownerless) promotion: flip the
+        entries ready exactly like :meth:`promotion_done`, stamp their
+        delivery time for hit/waste accounting, then release the
+        synthetic prefetch tag — the entries drop to the refcount-0
+        cached tier, matchable by the consumer the prefetch anticipated
+        (and reclaimable under pressure like any cached prefix, so a
+        misprediction leaks nothing). A prefetch cancelled mid-flight
+        only drops its host pins, same as a cancelled promotion."""
+        promo = self._promos.get(pid)
+        rid = promo.rid if promo is not None else None
+        entries = list(promo.entries) if promo is not None else []
+        ok = self.promotion_done(pid)
+        if ok:
+            for e in entries:
+                e.prefetched_at = now
+        if rid is not None:
+            self.release(rid)
+        return ok
 
     def host_handoff(self, blocks: Sequence[int], pinned: bool = False)\
             -> None:
@@ -687,6 +714,11 @@ class PrefixStore:
             return
         e.node.entries.pop(e.index, None)
         self.stats["reclaimed"] += 1
+        if e.prefetched_at is not None:
+            # delivered speculatively, reclaimed before any consumer
+            # pinned it: the prefetch bought nothing (misprediction)
+            self.stats["prefetch_wasted"] += 1
+            e.prefetched_at = None
         for d, b in e.blocks.items():
             if d == device:
                 continue

@@ -47,16 +47,22 @@ class BlockEntry:
 
     ``source`` distinguishes why an entry is unready: ``"prefill"``
     entries flip ready within the publisher's admission quantum, while
-    ``"promo"`` entries are H2D promotions in flight on the transfer
-    stream for a *multi-step* window — the store tells sharers to wait
-    for those instead of recomputing (or double-transferring) the blocks.
+    ``"promo"`` / ``"prefetch"`` entries are H2D promotions in flight on
+    the transfer stream for a *multi-step* window — the store tells
+    sharers to wait for those instead of recomputing (or
+    double-transferring) the blocks. A prefetch is an ownerless
+    promotion issued speculatively ahead of its consumer's arrival;
+    ``prefetched_at`` stamps its delivery time and stays set until the
+    first consumer pins the entry (hit) or reclaim takes it (waste), so
+    the engine can account prefetch hits/earliness exactly once.
     """
     index: int                       # block index = position // block_tokens
     blocks: Dict[int, int]           # device -> physical block id
     tokens: int                      # valid leading tokens in the block
     ready: bool = False              # prefill/upload has written the KV
     node: "RadixNode" = None         # owning node (kept in sync on splits)
-    source: str = "prefill"          # "prefill" | "promo" (H2D in flight)
+    source: str = "prefill"          # "prefill" | "promo" | "prefetch"
+    prefetched_at: Optional[float] = None   # delivery time, unhit prefetch
 
 
 def _entry_last_token(e: "BlockEntry", bt: int) -> int:

@@ -6,19 +6,29 @@ API provides — ``register_graph``, ``call_start``, ``call_finish`` — driven
 here by the workload generator instead of network clients. On a real
 deployment these map 1:1 onto the OpenAI-compatible endpoint extensions.
 
+Endpoint results are structured (``{"ok": ...}`` dicts, never silent
+no-ops): an unknown rid or a wrong-state call is an *external client
+error* — it is reported back, logged, and counted in
+``frontend_bad_calls`` so a misbehaving tool adapter is visible in the
+report instead of silently degrading the schedule.
+
     PYTHONPATH=src python -m repro.launch.serve --mode tokencake \
-        --apps 20 --qps 1.0 [--real-compute]
+        --apps 20 --qps 1.0 [--real-compute] [--prefetch]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import logging
 
 from repro.configs.base import get_smoke_config
 from repro.core.costmodel import PLATFORMS, A100_PCIE
 from repro.core.engine import Engine, EngineConfig
 from repro.core.request import ReqState
+from repro.core.temporal import TemporalConfig
 from repro.data.workloads import build_workload
+
+log = logging.getLogger("repro.serve")
 
 
 class MCPFrontend:
@@ -27,29 +37,61 @@ class MCPFrontend:
 
     def __init__(self, engine: Engine):
         self.engine = engine
+        self.bad_calls = 0
 
     def register_graph(self, graph, arrival: float = 0.0,
                        prompts=None) -> str:
         return self.engine.submit_app(graph, arrival, prompts)
 
-    def call_start(self, rid: str, estimate: float | None = None):
-        req = self.engine._find(rid)
-        if req is not None and req.state == ReqState.RUNNING:
-            if estimate is not None and req.next_fc() is not None:
-                req.next_fc().predict_time = estimate
-            self.engine.call_start(req)
+    def _bad(self, op: str, rid: str, error: str) -> dict:
+        self.bad_calls += 1
+        log.warning("%s(%s): %s", op, rid, error)
+        return {"ok": False, "op": op, "rid": rid, "error": error}
 
-    def call_finish(self, rid: str, elapsed: float | None = None):
+    def call_start(self, rid: str, estimate: float | None = None) -> dict:
         req = self.engine._find(rid)
-        if req is not None:
-            self.engine.call_finish(req)
+        if req is None:
+            return self._bad("call_start", rid, "unknown rid")
+        if req.state != ReqState.RUNNING:
+            return self._bad("call_start", rid,
+                             f"bad state {req.state.value!r} "
+                             f"(expected 'running')")
+        if req.next_fc() is None:
+            return self._bad("call_start", rid, "no pending function call")
+        if estimate is not None:
+            req.next_fc().predict_time = estimate
+        self.engine.call_start(req)
+        return {"ok": True, "op": "call_start", "rid": rid}
 
-    def states(self) -> dict:
-        out = {}
+    def call_finish(self, rid: str, elapsed: float | None = None) -> dict:
+        req = self.engine._find(rid)
+        if req is None:
+            return self._bad("call_finish", rid, "unknown rid")
+        if req.current_fc is None:
+            return self._bad("call_finish", rid, "no call in flight")
+        self.engine.call_finish(req)
+        return {"ok": True, "op": "call_finish", "rid": rid}
+
+    def states(self, verbose: bool = False) -> dict:
+        """rid -> state map; ``verbose`` wraps it with the engine's
+        transfer-plane ledger and the frontend's bad-call count."""
+        reqs = {}
         for app in self.engine.apps.values():
             for r in app.node_request.values():
-                out[r.rid] = r.state.value
-        return out
+                reqs[r.rid] = r.state.value
+        if not verbose:
+            return reqs
+        return {
+            "requests": reqs,
+            "transfers": self.engine.transfer_report(),
+            "frontend_bad_calls": self.bad_calls,
+        }
+
+    def report(self) -> dict:
+        rep = self.engine.report()
+        rep["frontend_bad_calls"] = self.bad_calls
+        rep["transfers"] = self.engine.transfer_report()
+        return rep
 
 
 def main():
@@ -65,12 +107,17 @@ def main():
                     choices=list(PLATFORMS))
     ap.add_argument("--real-compute", action="store_true",
                     help="tiny model + real paged KV + Pallas kernels")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="host-tier promotion + workflow-aware KV prefetch")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
     plat = PLATFORMS[args.platform]
-    ecfg = EngineConfig.preset(args.mode, gpu_blocks=args.blocks,
-                               max_running=64)
+    kw = dict(gpu_blocks=args.blocks, max_running=64)
+    if args.prefetch:
+        kw.update(host_promotion=True,
+                  temporal=TemporalConfig(prefetch=True))
+    ecfg = EngineConfig.preset(args.mode, **kw)
     backend = None
     if args.real_compute:
         from repro.core.backend import JaxBackend
@@ -86,13 +133,15 @@ def main():
                 n.decode_segments = [min(s, 16) for s in n.decode_segments]
         front.register_graph(g, t)
 
-    rep = eng.run(max_time=1e6)
+    eng.run(max_time=1e6)
+    rep = front.report()
     if args.json:
         print(json.dumps(rep, indent=1))
     else:
         print(f"[{args.mode}] {rep['apps_finished']}/{args.apps} apps, "
               f"avg {rep['avg_latency']:.1f}s p90 {rep['p90_latency']:.1f}s "
               f"offloads {rep['offloads']} "
+              f"prefetch {rep['prefetch_hits']}/{rep['prefetch_issued']} "
               f"effective-util {rep['effective_utilization']:.1%}")
 
 

@@ -51,3 +51,70 @@ def test_function_types_are_independent():
     assert f.predict("search") == 1.0
     assert f.predict("db") == 9.0
     assert f.predict("unknown", 3.0) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# dispersion tracking + quantile intervals (PR 6 satellite)
+# ---------------------------------------------------------------------------
+
+def test_first_observation_has_zero_variance():
+    f = Forecaster()
+    f.observe("search", 4.0)
+    assert f.var["search"] == 0.0
+    assert f.std("search") == 0.0
+
+
+def test_variance_is_ewma_of_squared_deviation_vs_pre_update_mean():
+    f = Forecaster(ewma_beta=0.5)
+    f.observe("db", 2.0)
+    f.observe("db", 6.0)          # dev vs pre-update mean 2.0 -> 4.0
+    assert f.var["db"] == pytest.approx(0.5 * 0.0 + 0.5 * 16.0)
+    f.observe("db", 4.0)          # mean was 4.0 -> dev 0
+    assert f.var["db"] == pytest.approx(0.5 * 8.0)
+    assert f.std("db") == pytest.approx(2.0)
+
+
+def test_predict_unchanged_by_variance_tracking():
+    """Eq. 1 mean math is untouched: predict() matches a by-hand EWMA."""
+    f = Forecaster(alpha=0.3, ewma_beta=0.5)
+    for x in (2.0, 6.0, 1.0, 9.0):
+        f.observe("db", x)
+    mean = 2.0
+    for x in (6.0, 1.0, 9.0):
+        mean = 0.5 * mean + 0.5 * x
+    assert f.history["db"] == pytest.approx(mean)
+    assert f.predict("db") == pytest.approx(mean)
+    assert f.predict("db", 3.0) == pytest.approx(0.3 * 3.0 + 0.7 * mean)
+
+
+def test_predict_interval_degrades_to_predict_without_dispersion():
+    f = Forecaster()
+    # no history at all: interval == predict == user estimate/default
+    assert f.predict_interval("search", 0.9, 2.5) == f.predict("search", 2.5)
+    # one observation: variance exists but is zero
+    f.observe("search", 4.0)
+    assert f.predict_interval("search", 0.05) == 4.0
+    assert f.predict_interval("search", 0.95) == 4.0
+
+
+def test_predict_interval_quantiles_bracket_the_mean():
+    f = Forecaster(ewma_beta=0.5)
+    f.observe("db", 2.0)
+    f.observe("db", 6.0)
+    mean = f.predict("db")
+    lo = f.predict_interval("db", 0.25)
+    hi = f.predict_interval("db", 0.75)
+    assert lo < mean < hi
+    assert f.predict_interval("db", 0.5) == mean
+    # symmetric normal model around the blend
+    assert mean - lo == pytest.approx(hi - mean)
+    # the user-estimate blend shifts the whole interval, not its width
+    lo_u = f.predict_interval("db", 0.25, user_estimate=mean + 1.0)
+    assert lo_u - lo == pytest.approx(f.predict("db", mean + 1.0) - mean)
+
+
+def test_predict_interval_floors_at_zero():
+    f = Forecaster(ewma_beta=0.5)
+    f.observe("db", 0.1)
+    f.observe("db", 40.0)         # huge dispersion, small-ish mean
+    assert f.predict_interval("db", 1e-6) == 0.0

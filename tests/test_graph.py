@@ -80,3 +80,67 @@ def test_poisson_arrivals_monotone():
     times = [t for t, _ in wl]
     assert times == sorted(times)
     assert len(wl) == 10
+
+
+# ---------------------------------------------------------------------------
+# steps-to-execution (PR 6: workflow-aware prefetch distance)
+# ---------------------------------------------------------------------------
+
+def test_steps_to_execution_ready_node_is_zero():
+    g, (a, b, c, d) = diamond()
+    assert g.steps_to_execution(a.node_id) == 0.0
+    # every dep finished -> ready, distance 0 regardless of path costs
+    fin = frozenset({a.node_id, b.node_id, c.node_id})
+    assert g.steps_to_execution(d.node_id, finished=fin) == 0.0
+
+
+def test_steps_to_execution_is_longest_cost_path():
+    g, (a, b, c, d) = diamond()
+    wa = g.work_estimate(g.nodes[a.node_id])
+    wc = g.work_estimate(g.nodes[c.node_id])
+    assert g.steps_to_execution(b.node_id) == pytest.approx(wa)
+    assert g.steps_to_execution(c.node_id) == pytest.approx(wa)
+    # join waits for the slower branch: c decodes 100x more than b
+    assert g.steps_to_execution(d.node_id) == pytest.approx(wa + wc)
+
+
+def test_steps_to_execution_finished_frontier_cuts_paths():
+    g, (a, b, c, d) = diamond()
+    wb = g.work_estimate(g.nodes[b.node_id])
+    wc = g.work_estimate(g.nodes[c.node_id])
+    fin = frozenset({a.node_id})
+    assert g.steps_to_execution(b.node_id, finished=fin) == 0.0
+    assert g.steps_to_execution(d.node_id, finished=fin) == \
+        pytest.approx(max(wb, wc))
+    # finishing the slow branch leaves only the fast one on the path
+    fin2 = frozenset({a.node_id, c.node_id})
+    assert g.steps_to_execution(d.node_id, finished=fin2) == \
+        pytest.approx(wb)
+
+
+def test_steps_to_execution_custom_cost_bypasses_cache():
+    g, (a, b, c, d) = diamond()
+    # default-cost result is cached per finished-frontier...
+    base = g.steps_to_execution(d.node_id)
+    # ...a live cost function (e.g. forecaster-priced, progress-scaled)
+    # must not read or poison that cache
+    flat = g.steps_to_execution(d.node_id, node_cost=lambda n: 1.0)
+    assert flat == 2.0                    # two hops on the longest chain
+    assert g.steps_to_execution(d.node_id) == base
+    half = g.steps_to_execution(
+        d.node_id, node_cost=lambda n: g.work_estimate(g.nodes[n]) * 0.5)
+    assert half == pytest.approx(base * 0.5)
+
+
+def test_steps_to_execution_cached_per_frontier():
+    g, (a, b, c, d) = diamond()
+    key = ("ste", frozenset())
+    g.steps_to_execution(d.node_id)
+    assert key in g._cache
+    eta = g._cache[key]
+    # repeat call returns the same dict (no recompute), and distinct
+    # frontiers get distinct cache entries
+    g.steps_to_execution(b.node_id)
+    assert g._cache[key] is eta
+    g.steps_to_execution(d.node_id, finished=frozenset({a.node_id}))
+    assert ("ste", frozenset({a.node_id})) in g._cache

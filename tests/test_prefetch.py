@@ -1,0 +1,369 @@
+"""Workflow-aware KV prefetch: speculative ownerless promotions.
+
+The PR 6 tentpole's scheduling half: the prefetch phase walks live apps'
+unspawned nodes (KVFlow-style ``steps_to_execution``), pre-warms their
+host-cached prefix runs onto the device within the promotion budget, and
+the eventual admission pins already-resident blocks with ZERO stream
+wait. Coverage:
+
+  * hit path — the prefetched agent admits without ever submitting a
+    transfer of its own (``promo_ready_at`` stays 0), the hit/earliness
+    metrics fire, and the blocks are the very ones the prefetch landed;
+  * mid-flight spawn — the agent arrives while its prefetch is still
+    copying: admission defers through the normal ``promotion_waits``
+    path (never a duplicate transfer), then pins post-delivery;
+  * misprediction — a delivered-but-never-hit prefetch retires through
+    the cached-LRU tier and is counted in ``prefetch_wasted``; no pin
+    or hold outlives it;
+  * seeded/property sweeps — whole-workload runs with prefetch on drain
+    clean (store invariants, no leaked pins) on many seeds;
+  * JaxBackend e2e — the prefetched agent prefills only its suffix and
+    its logits equal an unshared dense reference.
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.graph import AppGraph
+from repro.core.temporal import TemporalConfig
+from repro.data.workloads import build_workload
+
+from tests.test_promotion import (SLOW_PCIE, mk_engine as _mk_engine,
+                                  mk_shared_prompts, offload_now, step,
+                                  submit_one)
+
+BT = A100_PCIE.block_tokens
+
+
+def mk_engine(**kw):
+    tcfg = kw.pop("temporal", None) or TemporalConfig(prefetch=True)
+    return _mk_engine(temporal=tcfg, **kw)
+
+
+def submit_chain(eng, prompts, decode_len=64, name=None):
+    """Linear app n0 -> n1 -> ...: later nodes are unspawned while n0
+    runs — exactly the window the prefetch phase targets."""
+    g = AppGraph(name or f"chain{len(eng.apps)}")
+    prev = None
+    for i, p in enumerate(prompts):
+        prev = g.add_agent(f"n{i}", "w", len(p), decode_len=decode_len,
+                           deps=[prev] if prev else [])
+    return eng.submit_app(g, eng.clock,
+                          prompt_tokens={i: list(p)
+                                         for i, p in enumerate(prompts)})
+
+
+def seed_host_tier(eng, prompt, name="warm"):
+    """Host-index ``prompt``'s blocks (offload an app that used them)."""
+    submit_one(eng, prompt, name=name)
+    step(eng)
+    r = next(r for r in eng.running if r.rid.endswith(name))
+    offload_now(eng, r)
+    return r
+
+
+def drain_stream(eng):
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    eng._process_events_until(eng.clock)
+
+
+def test_prefetch_hit_zero_requester_stream_wait():
+    """Acceptance: the speculative upload runs entirely off the critical
+    path — when the target agent spawns, it pins ready resident blocks
+    and never touches the transfer stream itself."""
+    eng = mk_engine()
+    prefix, sfx = mk_shared_prompts(seed=31)
+    seed_host_tier(eng, prefix + sfx[0])
+
+    rng = np.random.default_rng(131)
+    head = [int(t) for t in rng.integers(0, 50000, 40)]
+    submit_chain(eng, [head, prefix + sfx[1]], decode_len=16, name="app")
+    step(eng)                                    # n0 admits; prefetch fires
+    assert eng.metrics["prefetch_issued"] == 1
+    assert eng.metrics["promotions"] == 0        # speculative, not demand
+    (tr,) = [t for t in eng.transfers.live() if t.kind == "prefetch"]
+    assert tr.owner.startswith("<prefetch>/")
+    assert (tr.owner.split("/")[-1] == "1")      # targets the unspawned n1
+
+    drain_stream(eng)                            # delivery: cached + ready
+    store = eng.prefix_store
+    assert not eng.host.pins                     # source pins dropped
+    assert not store._promos and not store._promo_holds
+    delivered = sorted((e for e in set(store.by_block.values())
+                        if e.source == "prefetch"), key=lambda e: e.index)
+    assert len(delivered) == 3
+    assert all(e.ready and e.prefetched_at is not None for e in delivered)
+    # unpinned: sitting in the reclaimable cached tier, matchable
+    assert all(e.blocks[0] in eng.pools[0].cached_blocks for e in delivered)
+    stamp = delivered[0].prefetched_at
+
+    # run n0 out; n1 spawns and admits against the warm blocks
+    from repro.core.request import ReqState
+    for _ in range(40):
+        step(eng)
+        r1 = next((r for a in eng.apps.values()
+                   for r in a.node_request.values()
+                   if r.rid.endswith("/n1")), None)
+        if r1 is not None and r1.state == ReqState.RUNNING:
+            break
+    assert r1 is not None
+    assert r1.prefix_cached_tokens == 3 * BT     # suffix-only prefill
+    assert r1.gpu_blocks[:3] == [e.blocks[0] for e in delivered]
+    # zero stream wait for the requester: no gate, no transfer of its own
+    assert r1.promo_ready_at == 0.0 and r1.promo_tid is None
+    assert not any(t.owner == r1.rid
+                   for t in eng.transfers.live() + eng.transfers.log)
+    assert eng.metrics["prefetch_hits"] == 3     # one per entry
+    # earliness: counted at the hit admission, bounded by now - delivery
+    assert 0.0 < eng.metrics["prefetch_early_s"] <= \
+        3 * (eng.clock - stamp) + 1e-6
+    assert all(e.prefetched_at is None for e in delivered)  # stamp cleared
+    store.check_invariants()
+
+    # a repeat admission of the same run is a plain prefix hit, not a
+    # second prefetch hit (the stamp is consumed exactly once)
+    hits0 = eng.metrics["prefetch_hits"]
+    submit_one(eng, prefix + sfx[2], name="c")
+    step(eng)
+    assert eng.metrics["prefetch_hits"] == hits0
+
+
+def test_agent_arriving_mid_flight_defers_then_pins():
+    """The misestimated-early spawn: n1 admits while its prefetch is
+    still copying. It must wait through ``promotion_waits`` (never start
+    a duplicate transfer) and pin the entries post-delivery."""
+    eng = mk_engine(platform=SLOW_PCIE)          # uploads stay in flight
+    prefix, sfx = mk_shared_prompts(seed=32)
+    seed_host_tier(eng, prefix + sfx[0])
+
+    rng = np.random.default_rng(132)
+    head = [int(t) for t in rng.integers(0, 50000, 40)]
+    submit_chain(eng, [head, prefix + sfx[1]], decode_len=4, name="app")
+    step(eng)
+    assert eng.metrics["prefetch_issued"] == 1
+    waits0 = eng.metrics["promotion_waits"]
+
+    # n0 (4 decode tokens, quantum 4) finishes long before the 1.2 s
+    # upload: n1 spawns against unready prefetch entries
+    deferred = False
+    for _ in range(8):
+        step(eng)
+        r1 = next((r for a in eng.apps.values()
+                   for r in a.node_request.values()
+                   if r.rid.endswith("/n1")), None)
+        if r1 is not None and eng.metrics["promotion_waits"] > waits0:
+            deferred = True
+            break
+    assert deferred
+    assert eng.metrics["prefetch_issued"] == 1   # no duplicate transfer
+    assert eng.metrics["promotions"] == 0
+
+    drain_stream(eng)
+    step(eng)
+    r1 = next(r for a in eng.apps.values() for r in a.node_request.values()
+              if r.rid.endswith("/n1"))
+    assert r1.prefix_cached_tokens == 3 * BT
+    assert r1.promo_ready_at == 0.0              # still never gated
+    assert eng.metrics["prefetch_hits"] == 3
+    assert not eng.host.pins
+    eng.prefix_store.check_invariants()
+
+
+def test_misprediction_counts_waste_and_leaks_nothing():
+    """A delivered prefetch whose agent never materializes (the app dies
+    with its consumer unspawned) sits in the cached tier until pressure
+    reclaims it — counted in ``prefetch_wasted``, stamps cleared, store
+    coherent throughout."""
+    eng = mk_engine()
+    prefix, sfx = mk_shared_prompts(seed=33)
+    seed_host_tier(eng, prefix + sfx[0])
+
+    rng = np.random.default_rng(133)
+    head = [int(t) for t in rng.integers(0, 50000, 40)]
+    submit_chain(eng, [head, prefix + sfx[1]], decode_len=16, name="app")
+    step(eng)
+    assert eng.metrics["prefetch_issued"] == 1
+    drain_stream(eng)
+    assert not eng.host.pins and not eng.prefix_store._promos
+
+    wasted0 = eng.prefix_store.stats["prefetch_wasted"]
+    p = eng.pools[0]
+    p.allocate(p.free, "pressure")               # reclaim the cached tier
+    assert eng.prefix_store.stats["prefetch_wasted"] == wasted0 + 3
+    assert eng.report()["prefetch_wasted"] == wasted0 + 3
+    # a hit can no longer be (mis)counted for the reclaimed entries
+    assert eng.metrics["prefetch_hits"] == 0
+    eng.prefix_store.check_invariants()
+
+
+def test_prefetch_respects_budget_and_headroom():
+    """No free capacity -> no speculation: with the pool nearly consumed
+    the phase declines (budget/headroom gates) instead of evicting or
+    thrashing demand admissions."""
+    eng = mk_engine(gpu_blocks=12)
+    prefix, sfx = mk_shared_prompts(seed=34)
+    seed_host_tier(eng, prefix + sfx[0])
+    rng = np.random.default_rng(134)
+    # a running request owns most of the tiny pool
+    submit_one(eng, [int(t) for t in rng.integers(0, 50000, 7 * BT)],
+               name="big", decode_len=128)
+    step(eng)
+    head = [int(t) for t in rng.integers(0, 50000, 40)]
+    submit_chain(eng, [head, prefix + sfx[1]], decode_len=8, name="app")
+    for _ in range(3):
+        step(eng)
+    assert eng.metrics["prefetch_issued"] == 0
+    assert not eng.host.pins and not eng.prefix_store._promo_holds
+    eng.prefix_store.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# seeded / property sweeps: whole workloads drain clean with prefetch on
+# ---------------------------------------------------------------------------
+
+def run_prefetch_workload(seed: int, n_apps: int = 6):
+    """Benchmark-scale contention (640-block pool, Code-Writer apps) with
+    prefetch on: the run must drain with no leaked pin/hold/promotion and
+    an exactly-conserved block ledger."""
+    cfg = EngineConfig.preset(
+        "tokencake", gpu_blocks=640, max_running=64,
+        host_promotion=True, promotion_policy="cost",
+        temporal=TemporalConfig(prefetch=True))
+    eng = Engine(cfg, A100_PCIE)
+    for t, g in build_workload("code_writer", qps=1.0, n_apps=n_apps,
+                               seed=seed):
+        eng.submit_app(g, t)
+    rep = eng.run(max_time=4000.0)
+    assert not eng.host.pins, seed
+    assert not eng.prefix_store._promo_holds, seed
+    assert not eng.prefix_store._promos, seed
+    eng.prefix_store.check_invariants()
+    # every prefetched block is hit at most once and wasted at most once,
+    # never both; blocks still warm at shutdown are neither
+    assert rep["prefetch_hits"] + rep["prefetch_wasted"] <= \
+        eng.transfers.blocks["prefetch"], seed
+    assert rep["prefetch_early_s"] >= 0.0
+    return rep
+
+
+def test_prefetch_workloads_drain_clean_5_seeds():
+    issued = 0
+    for seed in range(5):
+        issued += run_prefetch_workload(seed)["prefetch_issued"]
+    assert issued > 0       # the sweep actually exercised the phase
+
+
+@pytest.mark.fuzz
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_prefetch_workloads_drain_clean_hypothesis(seed):
+    run_prefetch_workload(seed, n_apps=4)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real JaxBackend, prefetched suffix prefill == dense reference
+# ---------------------------------------------------------------------------
+
+class TestPrefetchE2E:
+    """With the real data plane, the prefetched agent's suffix-only
+    prefill produces logits identical to an unshared dense prefill, and
+    the requester paid zero promotion stream wait."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax.numpy as jnp
+        from repro.configs.base import ModelConfig
+        from repro.core.backend import JaxBackend
+        from repro.models import model as M
+
+        cfg = ModelConfig(name="tiny-f32", arch_type="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=50000, dtype="float32")
+        ecfg = EngineConfig.preset(
+            "mooncake", gpu_blocks=64, host_blocks=32, max_running=8,
+            sched_quantum=4, host_promotion=True,
+            promotion_policy="always",
+            temporal=TemporalConfig(prefetch=True))
+        backend = JaxBackend(cfg, ecfg, A100_PCIE)
+        eng = Engine(ecfg, A100_PCIE, backend=backend)
+
+        prefix, sfx = mk_shared_prompts(seed=35)
+        prompt_warm, prompt_b = prefix + sfx[0], prefix + sfx[1]
+
+        # reference: n1's prompt decoded alone on a fresh engine
+        ref_ecfg = EngineConfig.preset("baseline", gpu_blocks=64,
+                                       host_blocks=32, max_running=8,
+                                       sched_quantum=4)
+        ref_backend = JaxBackend(cfg, ref_ecfg, A100_PCIE, key=backend.key)
+        ref_backend.params = backend.params
+        ref_eng = Engine(ref_ecfg, A100_PCIE, backend=ref_backend)
+        submit_one(ref_eng, prompt_b, decode_len=16)
+        for _ in range(30):
+            step(ref_eng)
+            if not (ref_eng.running or ref_eng.waiting or ref_eng.events):
+                break
+        (_, ref_toks), = ref_backend.generated.items()
+
+        seed_host_tier(eng, prompt_warm)
+        rng = np.random.default_rng(135)
+        head = [int(t) for t in rng.integers(0, 50000, 40)]
+        submit_chain(eng, [head, prompt_b], decode_len=16, name="app")
+        step(eng)                                # n0 admits; prefetch fires
+        issued = eng.metrics["prefetch_issued"]
+        drain_stream(eng)                        # delivery before n1 spawns
+        rb = None
+        for _ in range(60):
+            step(eng)
+            rb = next((r for a in eng.apps.values()
+                       for r in a.node_request.values()
+                       if r.rid.endswith("/n1")), None)
+            if rb is not None and rb.prefill_pending == 0 \
+                    and rb.rid in backend.last_prefill_logits:
+                break
+        return dict(eng=eng, backend=backend, cfg=cfg, rb=rb, issued=issued,
+                    prompt_b=prompt_b, ref_toks=ref_toks, M=M, jnp=jnp)
+
+    def test_prefetch_fired_and_hit(self, setup):
+        eng, rb = setup["eng"], setup["rb"]
+        assert setup["issued"] == 1
+        assert rb is not None
+        assert rb.prefix_cached_tokens == 3 * BT
+        assert eng.metrics["prefetch_hits"] == 3
+        assert eng.metrics["promotions"] == 0    # never a demand transfer
+
+    def test_zero_requester_stream_wait(self, setup):
+        eng, rb = setup["eng"], setup["rb"]
+        assert rb.promo_ready_at == 0.0 and rb.promo_tid is None
+        assert not any(t.owner == rb.rid
+                       for t in eng.transfers.live() + eng.transfers.log)
+        # the speculative upload itself is on the ledger, owned by its tag
+        assert eng.transfers.count["prefetch"] == 1
+        assert eng.transfers.wait_s["promotion"] == 0.0
+
+    def test_logits_equal_unshared_dense_prefill(self, setup):
+        M, jnp = setup["M"], setup["jnp"]
+        backend, cfg = setup["backend"], setup["cfg"]
+        toks = [t % cfg.vocab_size for t in setup["prompt_b"]]
+        batch = {"tokens": jnp.asarray([toks], jnp.int32)}
+        want, _ = M.prefill(cfg, backend.params, batch)
+        got = backend.last_prefill_logits[setup["rb"].rid]
+        np.testing.assert_allclose(
+            got, np.asarray(want[0, 0], np.float32), atol=2e-4, rtol=2e-4)
+
+    def test_decode_matches_reference(self, setup):
+        eng, rb = setup["eng"], setup["rb"]
+        for _ in range(60):
+            step(eng)
+            if rb.done:
+                break
+        got = setup["backend"].generated[rb.rid][:16]
+        assert got == setup["ref_toks"][:16]
+        assert not eng.host.pins
+        eng.prefix_store.check_invariants()

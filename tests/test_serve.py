@@ -1,0 +1,180 @@
+"""Serving frontend (§6.1/§6.2): structured endpoint results.
+
+The MCPFrontend's three endpoints are the external API surface; a
+misbehaving tool adapter (wrong rid, out-of-order call) must get a
+structured ``{"ok": False, ...}`` error back — counted in
+``frontend_bad_calls`` and surfaced through ``states(verbose)`` /
+``report()`` — never a silent no-op or an engine crash.
+"""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.graph import AppGraph, SearchNode
+from repro.core.request import ReqState
+from repro.launch.serve import MCPFrontend
+
+BT = A100_PCIE.block_tokens
+
+
+def mk_front(**kw):
+    kw.setdefault("max_running", 8)
+    cfg = EngineConfig.preset("tokencake", gpu_blocks=64, host_blocks=64,
+                              sched_quantum=4, **kw)
+    eng = Engine(cfg, A100_PCIE)
+    return MCPFrontend(eng), eng
+
+
+def fc_graph(prompt_len=48, name="g"):
+    g = AppGraph(name)
+    g.add_agent("n0", "w", prompt_len, decode_segments=[8, 8],
+                func_calls=[SearchNode()])
+    return g
+
+
+def admit_one(front, eng):
+    rng = np.random.default_rng(41)
+    prompt = [int(t) for t in rng.integers(0, 50000, 48)]
+    app_id = front.register_graph(fc_graph(), arrival=eng.clock,
+                                  prompts={0: prompt})
+    eng._process_events_until(eng.clock)
+    eng.schedule_step()
+    (req,) = eng.running
+    assert req.app_id == app_id
+    return req
+
+
+def test_register_and_lifecycle_roundtrip():
+    front, eng = mk_front()
+    req = admit_one(front, eng)
+    # decode through segment 0 so the function call is actually pending
+    while req.segment == 0 and req.state == ReqState.RUNNING:
+        eng.clock += eng.execute_iteration()
+        eng._process_events_until(eng.clock)
+    # the engine stalls the request itself at the segment boundary; drive
+    # the endpoints manually on a fresh copy of the state instead
+    assert front.bad_calls == 0
+
+
+def test_call_start_rejects_unknown_rid_and_counts():
+    front, eng = mk_front()
+    out = front.call_start("nope/r0")
+    assert out == {"ok": False, "op": "call_start", "rid": "nope/r0",
+                   "error": "unknown rid"}
+    out2 = front.call_finish("nope/r0")
+    assert out2["ok"] is False and out2["op"] == "call_finish"
+    assert front.bad_calls == 2
+
+
+def test_call_start_rejects_wrong_state():
+    front, eng = mk_front()
+    req = admit_one(front, eng)
+    # force a non-running state: a waiting request may not start a call
+    req.state = ReqState.WAITING
+    out = front.call_start(req.rid)
+    assert out["ok"] is False
+    assert "bad state 'waiting'" in out["error"]
+    assert front.bad_calls == 1
+    req.state = ReqState.RUNNING
+
+
+def test_call_finish_without_call_in_flight_is_structured_error():
+    front, eng = mk_front()
+    req = admit_one(front, eng)
+    out = front.call_finish(req.rid)
+    assert out == {"ok": False, "op": "call_finish", "rid": req.rid,
+                   "error": "no call in flight"}
+    assert front.bad_calls == 1
+
+
+def test_call_start_applies_external_estimate_and_stalls():
+    front, eng = mk_front()
+    req = admit_one(front, eng)
+    assert req.next_fc() is not None
+    out = front.call_start(req.rid, estimate=9.5)
+    assert out == {"ok": True, "op": "call_start", "rid": req.rid}
+    assert req.current_fc.predict_time == 9.5     # estimate overrode Table 3
+    assert req.rid in eng.stalled
+    # double-start: the pending call is now in flight -> structured error
+    out2 = front.call_start(req.rid)
+    assert out2["ok"] is False
+    assert front.bad_calls == 1
+    # finish resumes it
+    out3 = front.call_finish(req.rid)
+    assert out3["ok"] is True
+    assert req.rid not in eng.stalled
+    assert front.bad_calls == 1
+
+
+def test_call_start_without_pending_fc_is_rejected():
+    front, eng = mk_front()
+    rng = np.random.default_rng(42)
+    g = AppGraph("plain")
+    g.add_agent("n0", "w", 32, decode_len=8)      # no function calls at all
+    front.register_graph(g, arrival=eng.clock,
+                         prompts={0: [int(t) for t in
+                                      rng.integers(0, 50000, 32)]})
+    eng._process_events_until(eng.clock)
+    eng.schedule_step()
+    (req,) = eng.running
+    out = front.call_start(req.rid)
+    assert out["ok"] is False and "no pending function call" in out["error"]
+    assert front.bad_calls == 1
+
+
+def test_states_plain_and_verbose():
+    front, eng = mk_front()
+    req = admit_one(front, eng)
+    plain = front.states()
+    assert plain == {req.rid: "running"}
+    front.call_start("bogus")                     # bump the counter
+    v = front.states(verbose=True)
+    assert v["requests"] == {req.rid: "running"}
+    assert v["frontend_bad_calls"] == 1
+    # the transfer-plane ledger rides along for operators
+    assert set(v["transfers"]) == {"kinds", "bytes", "live", "backlog_s"}
+    assert set(v["transfers"]["kinds"]) == {"upload", "promotion",
+                                            "prefetch", "offload"}
+
+
+def test_report_merges_engine_and_frontend():
+    front, eng = mk_front()
+    admit_one(front, eng)
+    front.call_finish("ghost")
+    rep = front.report()
+    assert rep["frontend_bad_calls"] == 1
+    assert rep["transfers"]["live"] == 0
+    # the engine's prefetch metrics are part of the same report surface
+    for key in ("prefetch_issued", "prefetch_hits", "prefetch_wasted",
+                "prefetch_early_s"):
+        assert key in rep
+
+
+def test_bad_calls_never_perturb_the_schedule():
+    """A hostile adapter spamming invalid calls changes nothing about the
+    engine's execution — same finish state as an untouched run."""
+    outs = []
+    for hostile in (False, True):
+        front, eng = mk_front()
+        rng = np.random.default_rng(43)
+        prompt = [int(t) for t in rng.integers(0, 50000, 48)]
+        front.register_graph(fc_graph(), arrival=0.0, prompts={0: prompt})
+        for i in range(200):
+            if hostile and i % 3 == 0:
+                front.call_start("junk")
+                front.call_finish("junk")
+            eng._process_events_until(eng.clock)
+            eng.schedule_step()
+            if eng.running:
+                eng.clock += eng.execute_iteration()
+            else:
+                eng.clock += 1e-3
+            if all(r.done for a in eng.apps.values()
+                   for r in a.node_request.values()) and eng.apps:
+                break
+        outs.append((eng.clock, eng.metrics["prefill_tokens"],
+                     front.bad_calls > 0))
+    (t0, p0, h0), (t1, p1, h1) = outs
+    assert (t0, p0) == (t1, p1)
+    assert not h0 and h1

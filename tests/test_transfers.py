@@ -1,0 +1,288 @@
+"""Unified transfer plane: lifecycle records + priority stream queue.
+
+Unit coverage of :class:`TransferManager` (the PR 6 tentpole): FIFO
+traffic books bit-identically to the old ``stream_free_at`` scalar, a
+higher-priority submit displaces only *pending* slots (re-booking bumps
+the generation, orphans the stale completion event, and notifies the
+submitter), cancel is exactly-once with distinct pending/in-flight
+semantics, and the per-kind ledger stays consistent through all of it.
+The engine-level tests at the bottom drive the same machinery through
+eviction (cancel-during-flight regression) using the lifecycle log.
+"""
+import dataclasses
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import A100_PCIE
+from repro.core.transfers import (CANCELLED, DONE, IN_FLIGHT, PENDING,
+                                  PRIORITY, TransferManager)
+
+from tests.test_promotion import (SLOW_PCIE, mk_engine, mk_shared_prompts,
+                                  offload_now, step, submit_one)
+
+
+class Stream:
+    """TransferManager + a hand-cranked virtual clock and event queue."""
+
+    def __init__(self, platform=A100_PCIE):
+        self.now = 0.0
+        self.events = []
+        self.metrics = {}
+        self.tm = TransferManager(platform, lambda: self.now,
+                                  self._push, self.metrics)
+
+    def _push(self, t, kind, payload):
+        assert kind == "transfer_done"
+        heapq.heappush(self.events, (t, payload))
+
+    def deliver_next(self):
+        """Pop the earliest event, advance the clock, resolve it."""
+        t, payload = heapq.heappop(self.events)
+        self.now = max(self.now, t)
+        return self.tm.on_event(payload)
+
+    def drain(self):
+        out = []
+        while self.events:
+            tr = self.deliver_next()
+            if tr is not None:
+                out.append(tr)
+        return out
+
+
+def test_fifo_booking_matches_scalar_stream():
+    """Same-kind traffic is pure FIFO: starts chain end-to-end exactly
+    like the old ``stream_free_at = max(now, stream_free_at) + dur``."""
+    s = Stream()
+    a = s.tm.submit("offload", 4, "ra")
+    b = s.tm.submit("offload", 2, "rb")
+    assert a.start == 0.0 and a.end == A100_PCIE.offload_time(4)
+    assert b.start == a.end                      # serialized, no overlap
+    assert b.end == a.end + A100_PCIE.offload_time(2)
+    assert s.tm.free_at == b.end
+    assert b.waited == pytest.approx(a.end)      # queue wait booked upfront
+    assert s.metrics["stream_wait_s"] == pytest.approx(a.end)
+    done = s.drain()
+    assert [t.tid for t in done] == [a.tid, b.tid]
+    assert all(t.state == DONE and t.done_t == t.end for t in done)
+    assert s.tm.log == done and not s.tm.live()
+
+
+def test_backlog_and_live_blocks():
+    s = Stream()
+    s.tm.submit("offload", 4, "ra")
+    s.tm.submit("prefetch", 3, "p1")
+    assert s.tm.backlog() == pytest.approx(s.tm.free_at)
+    assert s.tm.live_blocks("prefetch") == 3
+    assert s.tm.live_blocks("offload") == 4
+    s.drain()
+    assert s.tm.backlog() == 0.0                 # clock caught up
+    assert s.tm.live_blocks("prefetch") == 0
+
+
+def test_priority_submit_displaces_pending_not_in_flight():
+    """An upload jumps a queued prefetch but never the slot already
+    copying; the displaced slot is re-booked with a fresh generation,
+    its stale event goes dead, and its submitter hears the new ETA."""
+    s = Stream()
+    heard = []
+    a = s.tm.submit("offload", 4, "ra")          # becomes in-flight
+    b = s.tm.submit("prefetch", 2, "p1",
+                    on_reschedule=lambda end: heard.append(end))
+    assert a.state == IN_FLIGHT                  # started at t=0, immovable
+    b_end0, b_gen0 = b.end, b.gen
+    c = s.tm.submit("upload", 1, "rc")
+    assert [t.tid for t in s.tm.live()] == [a.tid, c.tid, b.tid]
+    assert c.start == a.end                      # behind the started slot
+    assert b.start == c.end and b.gen == b_gen0 + 1
+    assert heard == [b.end] and b.end > b_end0
+    # stale booking generation: the original event resolves to None
+    assert s.tm.on_event((b.tid, b_gen0)) is None
+    assert [t.tid for t in s.drain()] == [a.tid, c.tid, b.tid]
+    # wait accounting followed the displacement
+    assert s.tm.wait_s["prefetch"] == pytest.approx(b.waited)
+    assert b.waited == pytest.approx(a.end + c.duration)
+
+
+def test_equal_priority_is_stable_fifo():
+    s = Stream()
+    s.tm.submit("offload", 1, "r0")
+    xs = [s.tm.submit("promotion", 1, f"p{i}") for i in range(3)]
+    assert [t.payload for t in s.tm.live()[1:]] == ["p0", "p1", "p2"]
+    assert all(x.gen == 1 for x in xs)           # never displaced
+
+
+def test_cancel_pending_removes_and_repacks():
+    """Pending cancel: slot off the stream, its wait refunded, followers
+    move earlier (fresh generation), and cancel is exactly-once."""
+    s = Stream()
+    a = s.tm.submit("offload", 4, "ra")
+    b = s.tm.submit("offload", 2, "rb")
+    c = s.tm.submit("offload", 1, "rc")
+    c_gen0 = c.gen
+    assert s.tm.cancel(b.tid) is True
+    assert s.tm.cancel(b.tid) is False           # exactly-once
+    assert b.state == CANCELLED and b in s.tm.log and b.done_t is None
+    assert b.waited == 0.0                       # refunded: never ran a slot
+    # the ledger now holds only the survivors' (re-booked) queue waits
+    assert s.metrics["stream_wait_s"] == pytest.approx(a.waited + c.waited)
+    assert c.waited == pytest.approx(a.end)      # moved up behind a
+    assert c.start == a.end and c.gen == c_gen0 + 1
+    assert s.tm.free_at == c.end
+    # b's event is orphaned; a and c still deliver
+    assert [t.tid for t in s.drain()] == [a.tid, c.tid]
+
+
+def test_cancel_in_flight_marks_only_and_event_still_fires():
+    """A slot already copying cannot be un-copied: cancel marks it, the
+    stream timing is untouched, and its completion event fires with
+    state ``cancelled`` so the caller can run teardown there."""
+    s = Stream()
+    a = s.tm.submit("offload", 4, "ra")
+    b = s.tm.submit("offload", 2, "rb")
+    s.tm._advance(s.now)
+    assert a.state == IN_FLIGHT
+    end0 = a.end
+    assert s.tm.cancel(a.tid) is True
+    assert s.tm.cancel(a.tid) is False
+    assert a.state == CANCELLED and a.end == end0
+    assert b.start == end0                       # follower did not move
+    got = s.drain()
+    assert [t.state for t in got] == [CANCELLED, DONE]
+    assert got[0].done_t == end0
+    # terminal records reject further cancels
+    assert s.tm.cancel(b.tid) is False
+
+
+def test_cancel_owner_returns_only_dead_event_records():
+    """cancel_owner sweeps one owner's transfers; only slots removed
+    while pending come back (their events never fire — the caller owes
+    them their completion teardown)."""
+    s = Stream()
+    a = s.tm.submit("offload", 4, "r1", owner="r1")      # in-flight
+    b = s.tm.submit("promotion", 2, "p1", owner="r1")    # pending
+    c = s.tm.submit("offload", 1, "r2", owner="r2")
+    removed = s.tm.cancel_owner("r1")
+    assert removed == [b] and b.state == CANCELLED
+    assert a.state == CANCELLED                  # marked, event still due
+    assert c.state != CANCELLED                  # other owner untouched
+    assert c.start == a.end                      # moved up behind a
+    got = s.drain()
+    assert {t.tid for t in got} == {a.tid, c.tid}
+    assert s.tm.cancel_owner("r1") == []         # idempotent
+
+
+def test_ledger_counts_blocks_bytes_describe():
+    plat = A100_PCIE
+    s = Stream(plat)
+    s.tm.submit("offload", 4, "ra")
+    s.tm.submit("upload", 2, "ra")
+    s.tm.submit("prefetch", 3, "p1")
+    assert s.tm.count == {"upload": 1, "promotion": 0,
+                          "prefetch": 1, "offload": 1}
+    assert s.tm.blocks["offload"] == 4 and s.tm.blocks["prefetch"] == 3
+    assert s.tm.bytes["d2h"] == 4 * plat.block_bytes
+    assert s.tm.bytes["h2d"] == 5 * plat.block_bytes
+    assert s.metrics["swap_blocks"] == 9
+    assert s.metrics["d2h_bytes"] == 4 * plat.block_bytes
+    assert s.metrics["h2d_bytes"] == 5 * plat.block_bytes
+    d = s.tm.describe()
+    assert d["live"] == 3 and d["backlog_s"] > 0
+    assert set(d["kinds"]) == set(PRIORITY)
+    assert d["kinds"]["offload"]["blocks"] == 4
+
+
+def test_priority_table_orders_demand_over_speculation():
+    assert (PRIORITY["upload"] < PRIORITY["promotion"]
+            < PRIORITY["prefetch"] < PRIORITY["offload"])
+
+
+# ---------------------------------------------------------------------------
+# engine-level: cancel-during-flight through the lifecycle records
+# ---------------------------------------------------------------------------
+
+def test_engine_evict_cancels_in_flight_promotion_exactly_once():
+    """Acceptance regression (tentpole): requester evicted while its
+    promotion is copying. The transfer plane marks the slot cancelled
+    (exactly once), the completion event still fires and retires a
+    ``cancelled`` lifecycle record, and the stream timing/ledger are
+    unperturbed — no double teardown, no stuck slot."""
+    eng = mk_engine(platform=SLOW_PCIE)
+    prefix, sfx = mk_shared_prompts(seed=21)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra)
+
+    submit_one(eng, prefix + sfx[1], name="b")
+    step(eng)
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    (tr,) = [t for t in eng.transfers.live() if t.kind == "promotion"]
+    assert tr.owner == rb.rid and tr.tid == rb.promo_tid
+    # state is materialized lazily: the slot started (start <= now) even
+    # though no submit/cancel has observed it yet
+    eng.transfers._advance(eng.clock)
+    assert tr.state == IN_FLIGHT
+    end0, free0 = tr.end, eng.transfers.free_at
+
+    eng._evict(rb, None)
+    assert tr.state == CANCELLED
+    assert rb.promo_tid is None and rb.promo_ready_at == 0.0
+    # in-flight: still booked, timing untouched, cancel not repeatable
+    assert tr in eng.transfers.live() and tr.end == end0
+    assert eng.transfers.free_at == free0
+    assert eng.transfers.cancel(tr.tid) is False
+    assert eng.transfers.cancel_owner(rb.rid) == []
+
+    # the slot runs out: exactly one terminal record, host pins dropped
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    eng._process_events_until(eng.clock)
+    assert [t for t in eng.transfers.log if t.tid == tr.tid] == [tr]
+    assert tr.done_t == end0
+    assert not eng.prefix_store._promos and not eng.host.pins
+    eng.prefix_store.check_invariants()
+
+    # path stays healthy: B re-admits and promotes again
+    step(eng)
+    assert eng.metrics["promotions"] == 2
+    eng.prefix_store.check_invariants()
+
+
+def test_engine_evict_cancels_pending_promotion_via_cancel_owner():
+    """The still-queued flavor: a promotion waiting behind an in-flight
+    D2H is removed outright at eviction — its event goes stale, so the
+    engine runs the host-pin teardown itself (via cancel_owner's
+    returned records), exactly once."""
+    eng = mk_engine(platform=SLOW_PCIE)
+    prefix, sfx = mk_shared_prompts(seed=22)
+    submit_one(eng, prefix + sfx[0], name="a")
+    step(eng)
+    (ra,) = eng.running
+    offload_now(eng, ra, drain=False)            # D2H occupies the stream
+
+    submit_one(eng, prefix + sfx[1], name="b")
+    eng._process_events_until(eng.clock)
+    eng.schedule_step()
+    rb = next(r for r in eng.running if r.rid.endswith("b"))
+    (tr,) = [t for t in eng.transfers.live() if t.kind == "promotion"]
+    assert tr.state == PENDING                   # queued behind the D2H
+    n_events = sum(1 for t in eng.transfers.live())
+
+    eng._evict(rb, None)
+    assert tr.state == CANCELLED and tr.done_t is None
+    assert tr not in eng.transfers.live()
+    assert len(eng.transfers.live()) == n_events - 1
+    # teardown already ran here — the store holds no promotion state and
+    # no host pin survives, before any event delivery
+    assert not eng.prefix_store._promos and not eng.host.pins
+    eng.prefix_store.check_invariants()
+
+    # the orphaned event delivers to nobody; the D2H completes normally
+    eng.clock = max(eng.clock, eng.stream_free_at + 1e-9)
+    eng._process_events_until(eng.clock)
+    assert not eng.host.pins
+    assert all(t.kind != "promotion" or t.tid == tr.tid
+               for t in eng.transfers.log)
+    eng.prefix_store.check_invariants()
