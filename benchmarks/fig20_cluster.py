@@ -1,0 +1,125 @@
+"""Fig. 20 — cluster serving plane: routing policy comparison.
+
+Three policies over the same N-replica cluster and arrival trace:
+
+* ``round_robin`` — DAG-blind spread: perfect balance, zero affinity;
+  every replica recomputes every app's shared system prefix.
+* ``affinity`` — consistent-hash home per app + gossiped radix-summary
+  override + saturation spill (placement only, no KV moves).
+* ``affinity_pull`` — same placement, plus cost-model-priced
+  cross-replica KV pulls over an RDMA-class link when the decided
+  replica lacks blocks a peer advertises (spills and overrides).
+
+Reported per row: aggregate latency, throughput, load skew
+(max/mean of per-replica work), mean per-replica prefix hit rate,
+pulled blocks and cross-replica bytes, and routing-decision counts.
+
+The ``parity1`` row is the acceptance check for the co-simulation
+itself: a single-replica cluster must be *bit-identical* to the bare
+engine on the fig12 quick row (same report dict, exact float equality)
+— the router at N=1 routes everything home and must perturb nothing.
+
+Standalone: ``python benchmarks/fig20_cluster.py [--quick] [--json PATH]``
+(CI ``sim-smoke`` runs ``--quick`` and asserts affinity beats
+round-robin on aggregate latency, pulls > 0, and parity).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import A100_PCIE, DEFAULTS, CsvWriter, run_engine
+from repro.cluster import GossipConfig, Router
+from repro.core.costmodel import make_link
+from repro.core.engine import Engine, EngineConfig
+from repro.data.workloads import build_workload
+
+# keys run_engine stamps onto the report (excluded from parity compare)
+_STAMPS = ("mode", "qps", "app", "dataset", "platform")
+
+# tiered-cache replicas: device radix + host tier with the cost-model
+# promotion policy — the richest coverage for summaries to advertise
+_ENGINE_KW = dict(prefix_cache=True, host_promotion=True,
+                  promotion_policy="cost")
+
+
+def _make_engine_factory(engine_kw):
+    kw = dict(DEFAULTS)
+    kw.update(engine_kw)
+
+    def make(i):
+        return Engine(EngineConfig.preset("mooncake", **kw), A100_PCIE)
+    return make
+
+
+def run_cluster(policy, n_replicas, qps, n_apps, max_time,
+                pull=False, seed=1, engine_kw=None):
+    link = make_link(A100_PCIE, "rdma_100g") if pull else None
+    if engine_kw is None:
+        engine_kw = dict(_ENGINE_KW, remote_pull=pull)
+    router = Router(
+        _make_engine_factory(engine_kw),
+        n_replicas, policy=policy, link=link,
+        gossip=GossipConfig(interval=5.0, max_stale=30.0),
+        # spill eagerly: the bench regime is bursty enough that the
+        # saturation path (the pull-generating case) actually triggers
+        policy_kw=(dict(saturate_factor=1.25, saturate_min=2)
+                   if policy == "affinity" else None))
+    for t, g in build_workload("code_writer", "d1", qps=qps,
+                               n_apps=n_apps, seed=seed):
+        router.submit_app(g, t)
+    return router.run(max_time=max_time)
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    n_replicas = 3
+    qps, n_apps, max_time = (1.0, 12, 12000.0) if quick \
+        else (1.5, 30, 30000.0)
+
+    for name, policy, pull in [("round_robin", "round_robin", False),
+                               ("affinity", "affinity", False),
+                               ("affinity_pull", "affinity", True)]:
+        rep = run_cluster(policy, n_replicas, qps, n_apps, max_time,
+                          pull=pull)
+        out[name] = rep
+        r = rep["routing"]
+        hit = sum(rep["prefix_hit_rates"]) / n_replicas
+        csv.row(f"fig20.{name}", rep["avg_latency"] * 1e6,
+                f"avg_s={rep['avg_latency']:.1f};"
+                f"tput_rps={rep['throughput_rps']:.4f};"
+                f"skew={rep['load_skew']:.3f};"
+                f"hit_rate={hit:.3f};"
+                f"pulls={rep['pulls']};"
+                f"pulled_blocks={rep['pulled_blocks']};"
+                f"xbytes={rep['cross_replica_bytes']};"
+                f"overrides={r['overrides']};"
+                f"spills={r['spills']};"
+                f"stale_s={r['staleness_avg_s']:.2f}")
+
+    # single-replica parity: the cluster wrapper at N=1 must reproduce
+    # the bare engine bit-for-bit on the fig12 quick
+    # ``mooncake_promote_cost`` row (same engine config, exact float
+    # equality on the whole report)
+    kw = dict(host_promotion=True, promotion_policy="cost")
+    bare = run_engine("mooncake", qps=0.5, n_apps=8, max_time=10000.0, **kw)
+    solo = run_cluster("affinity", 1, qps=0.5, n_apps=8, max_time=10000.0,
+                       pull=True, engine_kw=dict(kw, remote_pull=True))
+    bare_cmp = {k: v for k, v in bare.items() if k not in _STAMPS}
+    parity = bare_cmp == solo["per_replica"][0]
+    out["parity1"] = dict(solo, parity=parity)
+    csv.row("fig20.parity1", bare["avg_latency"] * 1e6,
+            f"parity={int(parity)};"
+            f"apps={solo['apps_finished']};"
+            f"pulls={solo['pulls']}")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_args, write_json
+    args = bench_args()
+    out = run(CsvWriter(), quick=args.quick)
+    rows = [dict(rep, row=name) for name, rep in out.items()]
+    if args.json:
+        write_json("fig20_cluster", rows, args.json)

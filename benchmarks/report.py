@@ -116,6 +116,31 @@ def promotion_table() -> str:
     return "\n".join(rows)
 
 
+def cluster_table() -> str:
+    """Cluster routing summary (fig20): per-policy aggregate latency,
+    prefix hit rate, cross-replica pull volume and load skew pulled out
+    of the fig20 rows' derived columns."""
+    path = os.path.join(ROOT, "results/bench/summary.csv")
+    if not os.path.exists(path):
+        return "(run benchmarks first)"
+    keys = ("avg_s", "tput_rps", "hit_rate", "skew", "pulls",
+            "pulled_blocks", "xbytes", "overrides", "spills", "stale_s")
+    rows = ["| row | " + " | ".join(keys) + " |",
+            "|---|" + "---|" * len(keys)]
+    for line in open(path).read().splitlines():
+        if not line.startswith("fig20"):
+            continue
+        name, _, derived = line.split(",", 2)
+        kv = dict(p.split("=", 1) for p in derived.split(";") if "=" in p)
+        if "parity" in kv:
+            rows.append(f"| {name} (parity={kv['parity']}) | "
+                        + " | ".join(kv.get(k, "-") for k in keys) + " |")
+            continue
+        rows.append(f"| {name} | "
+                    + " | ".join(kv.get(k, "-") for k in keys) + " |")
+    return "\n".join(rows)
+
+
 SECTIONS = {
     "dryrun_table": dryrun_table,
     "roofline_table": roofline_table,
@@ -130,7 +155,9 @@ SECTIONS = {
     "fig16": lambda: bench_section("fig16"),
     "fig17": lambda: bench_section("fig17"),
     "fig18": lambda: bench_section("fig18"),
+    "fig20": lambda: bench_section("fig20"),
     "promotion_table": promotion_table,
+    "cluster_table": cluster_table,
 }
 
 

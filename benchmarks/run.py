@@ -31,6 +31,7 @@ FIGURES = [
     ("fig17_transfer", "Fig 17 transfer overhead"),
     ("fig18_tiered", "Beyond-paper: tiered offload (paper §9)"),
     ("fig19_seeds", "Beyond-paper: seed robustness of the ablation"),
+    ("fig20_cluster", "Beyond-paper: cluster routing policies"),
     ("roofline", "Roofline terms from dry-run"),
 ]
 

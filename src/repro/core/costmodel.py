@@ -180,3 +180,43 @@ TPU_V5E = PlatformModel(
 
 PLATFORMS = {p.name: p for p in
              (A100_PCIE, H20_QWEN32, H20X2_QWEN72, TPU_V5E)}
+
+
+# ---- inter-replica links ----------------------------------------------------
+def remote_link(platform: PlatformModel, gbytes_per_s: float,
+                fixed_ms: float = 0.5,
+                chunk_blocks: int = 0) -> PlatformModel:
+    """A cross-replica fabric as one more :class:`PlatformModel`.
+
+    A remote replica is just another tier with its own bandwidth: the
+    link's ``upload_time(k)`` is the wire time of pulling ``k`` KV blocks
+    from a peer, so ``promote_gain`` / ``promotion_cutoff`` price
+    pull-vs-recompute with the exact machinery the host-tier promotion
+    cutoff uses — only the per-block milliseconds change. ``fixed_ms``
+    models the pull RPC round-trip (summary validation + source pinning),
+    ``chunk_blocks`` > 0 a fabric that stages through fixed-size bounce
+    buffers (one launch per chunk, like the chunked PCIe stream).
+    """
+    ms_per_block = platform.block_bytes / (gbytes_per_s * 1e9) * 1e3
+    return replace(
+        platform,
+        name=f"{platform.name}+link{gbytes_per_s:g}GBps",
+        offload_ms_per_block=ms_per_block,
+        upload_ms_per_block=ms_per_block,
+        transfer_fixed_ms=fixed_ms,
+        stream_chunk_blocks=chunk_blocks,
+    )
+
+
+# Named link presets (per-direction effective GB/s, not signaling rate):
+# an RDMA NIC moving KV point-to-point, and a TCP fallback an order of
+# magnitude slower — slow enough that short runs lose to recompute.
+LINKS = {
+    "rdma_100g": dict(gbytes_per_s=10.0, fixed_ms=0.5),
+    "tcp_25g": dict(gbytes_per_s=2.5, fixed_ms=1.5),
+}
+
+
+def make_link(platform: PlatformModel, name: str = "rdma_100g")\
+        -> PlatformModel:
+    return remote_link(platform, **LINKS[name])

@@ -72,6 +72,13 @@ class EngineConfig:
     #              kept for the fig12/fig18 policy-comparison rows and
     #              for tests that exercise raw transfer mechanics).
     promotion_policy: str = "cost"
+    # cluster plane: let admissions wait on (and account for) in-flight
+    # cross-replica pulls. The pulls themselves are issued by the cluster
+    # Router through ``start_remote_pull``; this flag makes the prefix
+    # lookup run with promote=True so matches into an unready
+    # source="remote" run defer (pending-promotion gate) instead of
+    # recomputing blocks a pull is already delivering.
+    remote_pull: bool = False
     spatial_enabled: bool = True
     temporal_enabled: bool = True
     reactive_offload: bool = False       # Mooncake-style pressure offload
@@ -122,6 +129,13 @@ class AppState:
     finished_nodes: set = field(default_factory=set)
     node_request: Dict[int, Request] = field(default_factory=dict)
     finish_time: Optional[float] = None
+    # cluster plane: ``external`` marks a *mirror* of an app homed on
+    # another replica — this engine runs individual nodes the router
+    # placed here, but DAG progression and app-completion accounting stay
+    # with the home replica. ``external_nodes`` (on the home copy) are
+    # nodes the router placed away; their Requests live elsewhere.
+    external: bool = False
+    external_nodes: set = field(default_factory=set)
 
     def progress(self) -> float:
         return len(self.finished_nodes) / max(len(self.graph.nodes), 1)
@@ -164,6 +178,15 @@ class Engine:
         self._fresh_stalled: List[Request] = []
         self._prefetched: set = set()              # (app_id, nid) issued
 
+        # cluster plane (all inert in single-replica runs): the router
+        # installs ``router_cb(app, nid, toks) -> bool`` to intercept node
+        # spawns (False = placed on another replica); ``outbox`` carries
+        # replica->router messages (node finishes, pull deliveries) the
+        # router drains after each step; ``_pull_seq`` names pull tags.
+        self.router_cb = None
+        self.outbox: List[tuple] = []
+        self._pull_seq = itertools.count()
+
         # ---- metrics ----
         self.metrics = {
             "offloads": 0, "uploads": 0, "swap_blocks": 0,
@@ -191,6 +214,12 @@ class Engine:
             # takes them first (store-side, merged into report())
             "prefetch_issued": 0, "prefetch_hits": 0,
             "prefetch_early_s": 0.0,
+            # cluster plane: cross-replica KV pulls landing on this
+            # replica (issued by the router, priced per link); pull_hits
+            # counts consumers pinning pulled blocks, remote_bytes the
+            # wire traffic (accounted by the TransferManager)
+            "remote_pulls": 0, "remote_pulled_blocks": 0,
+            "pull_hits": 0, "remote_bytes": 0,
         }
         # unified transfer plane: every offload/upload/promotion/prefetch
         # books a lifecycle record on the single copy stream, priority-
@@ -207,8 +236,12 @@ class Engine:
         heapq.heappush(self.events, (t, next(self._seq), kind, payload))
 
     def submit_app(self, graph: AppGraph, arrival: float,
-                   prompt_tokens: Optional[Dict[int, List[int]]] = None):
-        app_id = f"{graph.name}#{len(self.apps)}"
+                   prompt_tokens: Optional[Dict[int, List[int]]] = None,
+                   app_id: Optional[str] = None):
+        """Register an app. ``app_id`` override: the cluster router
+        assigns globally unique ids (its registry counts apps across
+        replicas); standalone engines keep the local counter."""
+        app_id = app_id or f"{graph.name}#{len(self.apps)}"
         app = AppState(app_id, graph, arrival, prompts=prompt_tokens or {})
         self.apps[app_id] = app
         self._push(arrival, "app_arrival", app_id)
@@ -225,10 +258,16 @@ class Engine:
     def _spawn_ready_nodes(self, app: AppState):
         on_cp = app.graph.on_critical_path()
         for nid, node in app.graph.nodes.items():
-            if nid in app.node_request:
+            if nid in app.node_request or nid in app.external_nodes:
                 continue
             if all(d in app.finished_nodes for d in node.deps):
                 toks = self._node_prompt(app, nid)
+                if self.router_cb is not None \
+                        and not self.router_cb(app, nid, toks):
+                    # the router placed this node on another replica; its
+                    # finish comes back through ``external_finished``
+                    app.external_nodes.add(nid)
+                    continue
                 req = Request(rid=f"{app.app_id}/{node.name}",
                               app_id=app.app_id, node=node, graph=app.graph,
                               arrival=self.clock, prompt_tokens=toks,
@@ -248,6 +287,92 @@ class Engine:
         rest = [(seed_n * 31 + i * 2654435761) % 50000
                 for i in range(node.prompt_len - sys_len)]
         return sys_prefix + rest
+
+    # ---------------------------------------------------- cluster plane (router)
+    def submit_external(self, app_id: str, graph: AppGraph, arrival: float,
+                        nid: int, toks: List[int], when: float) -> None:
+        """Router placement: run one node of an app homed on another
+        replica. Creates (or reuses) a *mirror* AppState — external apps
+        never spawn their own successors and never count toward this
+        replica's app completions; the home replica owns both. The spawn
+        lands as an event at ``when`` (the home replica's clock when the
+        placement was decided), so replica clock skew stays bounded by
+        the co-simulation's event ordering, not wall clock."""
+        app = self.apps.get(app_id)
+        if app is None:
+            app = AppState(app_id, graph, arrival, external=True)
+            self.apps[app_id] = app
+        self._push(when, "ext_spawn", (app_id, nid, toks))
+
+    def _spawn_external(self, app_id: str, nid: int,
+                        toks: List[int]) -> None:
+        app = self.apps[app_id]
+        node = app.graph.nodes[nid]
+        on_cp = app.graph.on_critical_path()
+        req = Request(rid=f"{app.app_id}/{node.name}", app_id=app_id,
+                      node=node, graph=app.graph, arrival=self.clock,
+                      prompt_tokens=toks, critical=on_cp[nid],
+                      enqueue_time=self.clock, group=app.graph.name)
+        app.node_request[nid] = req
+        self.waiting.append(req)
+
+    def external_finished(self, app_id: str, nid: int, when: float) -> None:
+        """Router notification: a node of a *locally homed* app finished
+        on another replica — progress the DAG here."""
+        self._push(when, "ext_finish", (app_id, nid))
+
+    def mirror_finished(self, app_id: str, nid: int) -> None:
+        """Router sync for non-home mirrors: record a node finish decided
+        elsewhere so priority/progress inputs stay consistent."""
+        app = self.apps.get(app_id)
+        if app is not None:
+            app.finished_nodes.add(nid)
+
+    def queue_remote_pull(self, tokens: List[int], start: int, k: int,
+                          link: PlatformModel, tag: str,
+                          when: float) -> None:
+        """Router-side pull booking rides the event loop: the transfer
+        stream books at this replica's clock, so an idle replica whose
+        clock lags the placement decision would otherwise get the wire
+        time for free. The event lands at ``when`` (decision time) and
+        the booking happens once the clock has caught up."""
+        self._push(when, "pull_start", (tokens, start, k, link, tag))
+
+    def start_remote_pull(self, tokens: List[int], start: int, k: int,
+                          link: PlatformModel,
+                          tag: Optional[str] = None) -> Tuple[Optional[str], int]:
+        """Import ``k`` blocks of a prefix resident on a peer replica,
+        starting at block index ``start`` of ``tokens``: allocate
+        destination blocks, publish unready ``source="remote"`` entries
+        along the token path (sharers wait on the pending-promotion gate,
+        never double-transfer), and book a ``"remote"`` transfer priced
+        by the inter-replica ``link`` model on this replica's stream.
+        Returns ``(pull tag, blocks booked)`` — ``(None, 0)`` when pool
+        pressure or a race with local coverage voids the pull."""
+        if k <= 0 or any(p.free < k + self._headroom() for p in self.pools):
+            return None, 0
+        tag = tag or f"<pull>/{next(self._pull_seq)}"
+        dests = {p.device: p.allocate(k, tag) for p in self.pools}
+        pid, used = self.prefix_store.remote_import(tag, tokens, start,
+                                                    dests)
+        if used < k:             # local coverage won part of the race
+            for p in self.pools:
+                p.release(dests[p.device][used:])
+        if used == 0:
+            return None, 0
+        self._submit_transfer("remote", used, pid, owner=tag,
+                              duration=link.upload_time(used))
+        self.metrics["remote_pulls"] += 1
+        self.metrics["remote_pulled_blocks"] += used
+        return tag, used
+
+    def _finish_pull(self, tr: Transfer) -> None:
+        """Delivery of a cross-replica pull: entries flip ready and drop
+        to the cached tier (the admission that deferred on them pins them
+        next step); the router learns via the outbox so it can release
+        the source replica's pins."""
+        self.prefix_store.remote_done(tr.payload, self.clock)
+        self.outbox.append(("pull_done", tr.owner, self.clock))
 
     # ------------------------------------------------------------ MCP endpoints
     def call_start(self, req: Request) -> None:
@@ -393,13 +518,17 @@ class Engine:
 
     def _submit_transfer(self, kind: str, n_blocks: int, payload,
                          owner: Optional[str] = None,
-                         on_reschedule=None) -> Transfer:
+                         on_reschedule=None,
+                         duration: Optional[float] = None) -> Transfer:
         """Book a block transfer on the unified transfer plane (offloads,
-        uploads, promotions and prefetches share the one serial copy
-        stream, priority-arbitrated) and return its lifecycle record;
-        the ``transfer_done`` event fires at the slot's end."""
+        uploads, promotions, prefetches and cross-replica pulls share the
+        one serial copy stream, priority-arbitrated) and return its
+        lifecycle record; the ``transfer_done`` event fires at the slot's
+        end. ``duration`` overrides the local platform timing (remote
+        pulls are priced by their link's PlatformModel)."""
         tr = self.transfers.submit(kind, n_blocks, payload, owner=owner,
-                                   on_reschedule=on_reschedule)
+                                   on_reschedule=on_reschedule,
+                                   duration=duration)
         self.temporal.swapped_blocks += n_blocks
         return tr
 
@@ -553,7 +682,10 @@ class Engine:
         # expensive store walk; the exact per-run check happens after
         min_horizon = self.temporal.prefetch_horizon(1, backlog)
         for app in self.apps.values():
-            if app.arrival > self.clock or app.finish_time is not None:
+            if (app.arrival > self.clock or app.finish_time is not None
+                    or app.external):
+                # mirrors don't own their DAG: the home replica decides
+                # what activates next, so speculating here double-spends
                 continue
             for nid in app.graph.topo_order():
                 if budget <= 0:
@@ -628,10 +760,22 @@ class Engine:
         self.spatial.release(req, cache=False)
         app = self.apps[req.app_id]
         app.finished_nodes.add(req.node.node_id)
+        if app.external:
+            # mirror of a remotely-homed app: the router relays the finish
+            # to the home replica, which owns DAG progression and the
+            # app-completion accounting
+            self.outbox.append(("node_finished", req.app_id,
+                                req.node.node_id, self.clock))
+            return
         self._spawn_ready_nodes(app)
         if len(app.finished_nodes) == len(app.graph.nodes):
             app.finish_time = self.clock
             self.app_latencies.append(self.clock - app.arrival)
+        elif self.router_cb is not None:
+            # home-side finish of a clustered app: mirrors elsewhere need
+            # the progress update (priority inputs), via the router
+            self.outbox.append(("node_finished", req.app_id,
+                                req.node.node_id, self.clock))
 
     # -------------------------------------------------------------- preemption
     def _preempt_for(self, needed: int, victim_pool: List[Request],
@@ -952,9 +1096,11 @@ class Engine:
         promoted entries live in the device tier afterwards, so the tree
         is matched even when the vLLM-style device cache is off."""
         m = PrefixMatch()
-        if self.cfg.prefix_cache or self.cfg.host_promotion:
-            m = self.prefix_store.match(req.prompt_tokens,
-                                        promote=self.cfg.host_promotion)
+        if (self.cfg.prefix_cache or self.cfg.host_promotion
+                or self.cfg.remote_pull):
+            m = self.prefix_store.match(
+                req.prompt_tokens,
+                promote=self.cfg.host_promotion or self.cfg.remote_pull)
         if self.cfg.cpu_prefix_cache and req.generated_total == 0:
             # carried on the match, counted only when admission commits —
             # a deferred request must not re-count its hit every retry
@@ -991,9 +1137,12 @@ class Engine:
         # pinned; counted once per entry (the stamp clears on the hit).
         for e in m.full_entries:
             if e.prefetched_at is not None:
-                self.metrics["prefetch_hits"] += 1
-                self.metrics["prefetch_early_s"] += max(
-                    self.clock - e.prefetched_at, 0.0)
+                if e.source == "remote":
+                    self.metrics["pull_hits"] += 1
+                else:
+                    self.metrics["prefetch_hits"] += 1
+                    self.metrics["prefetch_early_s"] += max(
+                        self.clock - e.prefetched_at, 0.0)
                 e.prefetched_at = None
         if m.partial_len:
             src = self.prefix_store.cow_fork(req.rid, m)
@@ -1149,6 +1298,27 @@ class Engine:
             self.clock = max(self.clock, when)
             if kind == "app_arrival":
                 self._spawn_ready_nodes(self.apps[payload])
+            elif kind == "ext_spawn":
+                self._spawn_external(*payload)
+            elif kind == "pull_start":
+                toks, start, k, link, tag = payload
+                got, _used = self.start_remote_pull(toks, start, k, link,
+                                                    tag=tag)
+                if got is None:
+                    # voided at booking time (pool pressure / local
+                    # coverage won the race) — the router still holds
+                    # source pins keyed by ``tag``; tell it to drop them
+                    self.outbox.append(("pull_done", tag, self.clock))
+            elif kind == "ext_finish":
+                app_id, nid = payload
+                app = self.apps[app_id]
+                app.finished_nodes.add(nid)
+                self._spawn_ready_nodes(app)
+                if (app.finish_time is None
+                        and len(app.finished_nodes)
+                        == len(app.graph.nodes)):
+                    app.finish_time = self.clock
+                    self.app_latencies.append(self.clock - app.arrival)
             elif kind == "call_finish":
                 req = self._find(payload)
                 if req is not None:
@@ -1175,6 +1345,8 @@ class Engine:
             self._finish_promotion(tr.payload)
         elif tr.kind == "prefetch":
             self._finish_prefetch(tr.payload)
+        elif tr.kind == "remote":
+            self._finish_pull(tr)
 
     def _find(self, rid: str) -> Optional[Request]:
         for coll in (self.stalled, self.offloaded):
@@ -1200,33 +1372,47 @@ class Engine:
         self.util_samples.append(
             (self.clock, used, len(active) / p.num_blocks))
 
+    def step(self) -> bool:
+        """One main-loop iteration (events -> schedule -> execute).
+
+        Returns False when the engine can make no further progress on its
+        own: fully drained, or starved (waiting work, nothing admissible,
+        no pending events). The cluster replica handle drives this same
+        body, so a single-replica cluster run is the bare ``run`` loop —
+        bit-identical, not merely equivalent. A False return is not
+        final in a cluster: router-injected events (ext_spawn, pulls)
+        revive the replica."""
+        self._process_events_until(self.clock)
+        if not (self.running or self.waiting):
+            if not self.events and not self.offloaded:
+                return False
+            if not self.events and self.offloaded:
+                # offloaded requests awaiting upload: run a scheduling
+                # step so phase 3 can reserve blocks / start transfers
+                self.schedule_step()
+                self.clock += 1e-3
+                return True
+            # idle: jump to next event
+            self.clock = self.events[0][0]
+            return True
+        self.schedule_step()
+        if not self.running and not self.events and self.waiting:
+            return False   # genuine starvation: nothing admissible
+        dur = self.execute_iteration()
+        self.clock += dur
+        if not self.running and self.events:
+            # nothing runnable (e.g. pool held by stalled agents):
+            # jump to the next event instead of micro-stepping
+            self.clock = max(self.clock, self.events[0][0])
+        self._sample_utilization()
+        return True
+
     def run(self, max_time: float = 1e9, max_iters: int = 2_000_000) -> dict:
         iters = 0
         while iters < max_iters and self.clock < max_time:
             iters += 1
-            self._process_events_until(self.clock)
-            if not (self.running or self.waiting):
-                if not self.events and not self.offloaded:
-                    break
-                if not self.events and self.offloaded:
-                    # offloaded requests awaiting upload: run a scheduling
-                    # step so phase 3 can reserve blocks / start transfers
-                    self.schedule_step()
-                    self.clock += 1e-3
-                    continue
-                # idle: jump to next event
-                self.clock = self.events[0][0]
-                continue
-            self.schedule_step()
-            if not self.running and not self.events and self.waiting:
-                break   # genuine starvation: nothing admissible, no events
-            dur = self.execute_iteration()
-            self.clock += dur
-            if not self.running and self.events:
-                # nothing runnable (e.g. pool held by stalled agents):
-                # jump to the next event instead of micro-stepping
-                self.clock = max(self.clock, self.events[0][0])
-            self._sample_utilization()
+            if not self.step():
+                break
         return self.report()
 
     # ----------------------------------------------------------------- report
@@ -1257,5 +1443,6 @@ class Engine:
             # prefetch waste is store-side: a delivered-but-unhit entry is
             # only known wasted when reclaim takes it
             "prefetch_wasted": self.prefix_store.stats["prefetch_wasted"],
+            "pull_wasted": self.prefix_store.stats["pull_wasted"],
             **self.metrics,
         }

@@ -7,7 +7,8 @@ The :class:`TransferManager` replaces that with per-transfer *lifecycle
 records* (pending → in-flight → done/cancelled, exactly-once cancel) and
 a priority-ordered queue over the shared stream:
 
-    owed stall-resumes (uploads) > demand promotions > prefetches > offloads
+    owed stall-resumes (uploads) > demand promotions > remote pulls
+    > prefetches > offloads
 
 Timing model (virtual time): transfers are booked into a serialized
 timeline the moment they are submitted — ``start = max(now, prev_end)``,
@@ -36,8 +37,12 @@ from repro.core.costmodel import PlatformModel
 
 # stream arbitration order (lower value wins a free slot first): an owed
 # stall-resume must never queue behind speculative work, and speculative
-# prefetches must never delay a demand promotion some admission is gated on
-PRIORITY = {"upload": 0, "promotion": 1, "prefetch": 2, "offload": 3}
+# prefetches must never delay a demand promotion some admission is gated
+# on. Cross-replica pulls ("remote") sit between the two: an admission may
+# be gated on the pulled blocks (demand), but the local host tier's own
+# promotions answer the same demand with a faster link, so they go first.
+PRIORITY = {"upload": 0, "promotion": 1, "remote": 2, "prefetch": 3,
+            "offload": 4}
 
 PENDING = "pending"
 IN_FLIGHT = "in_flight"
@@ -49,8 +54,8 @@ CANCELLED = "cancelled"
 class Transfer:
     """Lifecycle record of one block copy on the shared stream."""
     tid: int
-    kind: str                    # "upload" | "promotion" | "prefetch" | "offload"
-    direction: str               # "h2d" | "d2h"
+    kind: str                    # one of the PRIORITY keys
+    direction: str               # "h2d" | "d2h" | "remote"
     n_blocks: int
     payload: object              # rid (offload/upload) or promotion id
     owner: Optional[str]         # cancelling scope (rid / prefetch tag)
@@ -85,7 +90,7 @@ class TransferManager:
         self.count = {k: 0 for k in PRIORITY}
         self.wait_s = {k: 0.0 for k in PRIORITY}
         self.blocks = {k: 0 for k in PRIORITY}
-        self.bytes = {"h2d": 0, "d2h": 0}
+        self.bytes = {"h2d": 0, "d2h": 0, "remote": 0}
 
     # ------------------------------------------------------------- accounting
     def _acct(self, key: str, delta) -> None:
@@ -138,11 +143,23 @@ class TransferManager:
 
     def submit(self, kind: str, n_blocks: int, payload,
                owner: Optional[str] = None,
-               on_reschedule: Optional[Callable[[float], None]] = None)\
-            -> Transfer:
-        direction = "d2h" if kind == "offload" else "h2d"
-        dur = (self.platform.offload_time(n_blocks) if direction == "d2h"
-               else self.platform.upload_time(n_blocks))
+               on_reschedule: Optional[Callable[[float], None]] = None,
+               duration: Optional[float] = None) -> Transfer:
+        """Book a copy on the stream. ``duration`` overrides the local
+        platform's timing — cross-replica pulls are priced by the caller
+        through a per-link :class:`PlatformModel` (the inter-replica
+        fabric is not this replica's PCIe/DMA engine) but still serialize
+        on this stream because the landing blocks do ride it."""
+        if kind == "remote":
+            direction = "remote"
+        else:
+            direction = "d2h" if kind == "offload" else "h2d"
+        if duration is not None:
+            dur = duration
+        else:
+            dur = (self.platform.offload_time(n_blocks)
+                   if direction == "d2h"
+                   else self.platform.upload_time(n_blocks))
         now = self._clock()
         tr = Transfer(next(self._seq), kind, direction, n_blocks, payload,
                       owner, PRIORITY[kind], now, dur,

@@ -58,6 +58,10 @@ from repro.kvcache.radix_index import BlockEntry, RadixNode, RadixTree
 
 SHARED_OWNER = "<shared-prefix>"
 
+# tier bitmask of the gossip coverage digest (see ``coverage_digest``)
+TIER_DEVICE = 1
+TIER_HOST = 2
+
 
 @dataclass
 class PrefixMatch:
@@ -157,7 +161,7 @@ class PrefixStore:
         # store-internal lifecycle counters only; hit/COW accounting lives
         # in the engine's metrics (counted once, at admission commit)
         self.stats = {"published": 0, "reclaimed": 0, "promoted": 0,
-                      "prefetch_wasted": 0}
+                      "prefetch_wasted": 0, "pull_wasted": 0}
         for p in pools:
             p.reclaim_cb = self._on_reclaim
             p.victim_cb = self._lru_victim
@@ -247,7 +251,8 @@ class PrefixStore:
         while (idx + 1) * self.bt <= matched:
             e = avail.get(idx)
             if e is not None:
-                if not e.ready and e.source in ("promo", "prefetch") \
+                if not e.ready \
+                        and e.source in ("promo", "prefetch", "remote") \
                         and not promo:
                     m.pending_promo = True
                 break                    # device entry exists: not ours
@@ -602,6 +607,91 @@ class PrefixStore:
             n += 1
         return n
 
+    # ---- cluster plane: coverage digest + remote-sourced publish -------------
+    def coverage_digest(self) -> List[Tuple[int, int, int]]:
+        """Compact gossip summary of this replica's radix coverage.
+
+        Returns ``(idx, chain_hash, bits)`` triples — one per servable
+        block-aligned prefix, never the tree itself: ``bits`` is
+        ``TIER_DEVICE`` for a ready full block resident on every device
+        and/or ``TIER_HOST`` for a host-backed index. Read-only (a gossip
+        tick must not perturb the store), and deliberately lossy: the
+        router walking a prompt's :func:`token_chain` against the hash
+        set stops at the first absent block, so non-contiguous coverage
+        truncates to the leading servable run exactly like a real match
+        would."""
+        def classify(node: RadixNode, idx: int) -> int:
+            bits = 0
+            e = node.entries.get(idx)
+            if (e is not None and e.ready and e.tokens >= self.bt
+                    and all(d in e.blocks for d in self.pools)):
+                bits |= TIER_DEVICE
+            if idx in node.host:
+                bits |= TIER_HOST
+            return bits
+        return self.tree.block_digest(classify)
+
+    def remote_import(self, rid: str, prompt_tokens: Sequence[int],
+                      start: int, blocks_by_device: Dict[int, List[int]],
+                      ) -> Tuple[Optional[int], int]:
+        """Publish a cross-replica pull in flight: *unready* entries with
+        ``source="remote"`` for block indices ``start..start+k`` along the
+        prompt's token path, pinned by the synthetic pull tag ``rid``.
+
+        The PR 4 promotion discipline applies unchanged — sharers that
+        match into the run wait on the pending-promotion gate instead of
+        recomputing or starting a duplicate pull, and the entries flip
+        ready only at :meth:`remote_done`. Adoption stops at the first
+        index that already carries any device entry (ready, or another
+        transfer in flight: never double-transfer) — the caller frees the
+        unused destination blocks. Returns ``(promotion id, blocks
+        adopted)``; ``(None, 0)`` when local coverage won the race
+        entirely."""
+        k = min(len(v) for v in blocks_by_device.values())
+        cover = min(len(prompt_tokens), (start + k) * self.bt)
+        path = self.tree.insert(prompt_tokens[:cover])
+        avail: Dict[int, BlockEntry] = {}
+        for node in path:
+            avail.update(node.entries)
+        pb = self.pin_blocks.setdefault(rid, {d: [] for d in self.pools})
+        entries: List[BlockEntry] = []
+        for j, idx in enumerate(range(start, start + k)):
+            if (idx + 1) * self.bt > cover:
+                break            # partial tail: not block-aligned pullable
+            if avail.get(idx) is not None:
+                break            # foreign coverage: never double-transfer
+            last = (idx + 1) * self.bt - 1
+            node = next(nd for nd in path if nd.start <= last < nd.end)
+            e = BlockEntry(idx, {d: blocks_by_device[d][j]
+                                 for d in self.pools}, self.bt,
+                           node=node, source="remote")
+            node.entries[idx] = e
+            for nd in path:      # pin the path down to the adopting node
+                self._pin(rid, nd)
+                if nd is node:
+                    break
+            for d, bid in e.blocks.items():
+                self.by_block[(d, bid)] = e
+                self.pools[d].meta[bid].owner = SHARED_OWNER
+                pb[d].append(bid)
+            entries.append(e)
+        self.tree.maybe_remove(path[-1])
+        if not entries:
+            self.release(rid)    # drop the empty pin-block record
+            return None, 0
+        pid = self._promo_seq = self._promo_seq + 1
+        self._promos[pid] = _Promotion(rid, entries, [])
+        self._promos_by_rid.setdefault(rid, set()).add(pid)
+        self.stats["promoted"] += len(entries)
+        return pid, len(entries)
+
+    def remote_done(self, pid: int, now: float) -> bool:
+        """Delivery of a cross-replica pull: identical lifecycle to an
+        ownerless prefetch (flip ready, stamp delivery time, release the
+        synthetic tag so the blocks drop to the cached tier) — the
+        ``source="remote"`` marker splits the hit/waste counters."""
+        return self.prefetch_done(pid, now)
+
     def _on_host_release(self, blocks: Sequence[int]) -> None:
         """Host pool freed blocks (upload finished): unindex them."""
         for hb in blocks:
@@ -716,8 +806,10 @@ class PrefixStore:
         self.stats["reclaimed"] += 1
         if e.prefetched_at is not None:
             # delivered speculatively, reclaimed before any consumer
-            # pinned it: the prefetch bought nothing (misprediction)
-            self.stats["prefetch_wasted"] += 1
+            # pinned it: the transfer bought nothing (misprediction —
+            # cross-replica pulls account separately from prefetches)
+            self.stats["pull_wasted" if e.source == "remote"
+                       else "prefetch_wasted"] += 1
             e.prefetched_at = None
         for d, b in e.blocks.items():
             if d == device:

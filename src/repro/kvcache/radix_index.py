@@ -32,8 +32,32 @@ the token structure intact — a later publisher re-adopts blocks into them.
 """
 from __future__ import annotations
 
+import struct
+import zlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+
+def token_chain(tokens: Sequence[int], bt: int) -> List[int]:
+    """Chained per-block hashes of every full ``bt``-token leading block.
+
+    ``chain[i]`` digests blocks ``0..i`` — position-dependent, so equal
+    chain values identify equal *block-aligned prefixes*, not merely equal
+    block contents. This is the compact coverage key the cluster layer
+    gossips: a replica summary is the set of chain values it can serve
+    (:meth:`RadixTree.block_digest`), and a router scores a prompt against
+    it without ever seeing the tree. Deliberately coarser than the radix
+    match (mid-block divergence scores as a miss past the last aligned
+    block) — that precision loss is the price of a digest that ships in a
+    heartbeat.
+    """
+    out: List[int] = []
+    h = 0
+    for i in range(len(tokens) // bt):
+        blk = tokens[i * bt:(i + 1) * bt]
+        h = zlib.crc32(struct.pack(f"<{bt}q", *blk), h)
+        out.append(h)
+    return out
 
 
 @dataclass(eq=False)
@@ -50,7 +74,9 @@ class BlockEntry:
     ``"promo"`` / ``"prefetch"`` entries are H2D promotions in flight on
     the transfer stream for a *multi-step* window — the store tells
     sharers to wait for those instead of recomputing (or
-    double-transferring) the blocks. A prefetch is an ownerless
+    double-transferring) the blocks, and ``"remote"`` entries are
+    cross-replica pulls in flight on the same stream, gated identically.
+    A prefetch is an ownerless
     promotion issued speculatively ahead of its consumer's arrival;
     ``prefetched_at`` stamps its delivery time and stays set until the
     first consumer pins the entry (hit) or reclaim takes it (waste), so
@@ -61,7 +87,7 @@ class BlockEntry:
     tokens: int                      # valid leading tokens in the block
     ready: bool = False              # prefill/upload has written the KV
     node: "RadixNode" = None         # owning node (kept in sync on splits)
-    source: str = "prefill"          # "prefill" | "promo" | "prefetch"
+    source: str = "prefill"   # "prefill" | "promo" | "prefetch" | "remote"
     prefetched_at: Optional[float] = None   # delivery time, unhit prefetch
 
 
@@ -239,6 +265,43 @@ class RadixTree:
             if has and not below and not node.refs and node is not self.root:
                 out.append(node)
             backed[id(node)] = has or below
+        return out
+
+    # ---- coverage digest -----------------------------------------------------
+    def block_digest(self, classify: Callable[[RadixNode, int], int]
+                     ) -> List[Tuple[int, int, int]]:
+        """Chain-hash digest of every servable block-aligned prefix.
+
+        Read-only DFS (never splits — safe to call from a gossip tick
+        without perturbing the tree). For each block index ``idx`` owned
+        by a node, ``classify(node, idx)`` returns a tier bitmask (0 =
+        not servable); servable blocks are emitted as ``(idx, chain_hash,
+        bits)`` where ``chain_hash`` is the :func:`token_chain` value of
+        the path's first ``idx + 1`` blocks. A block is only emitted when
+        the path covers its full token span — partial tail blocks can't
+        anchor a block-aligned prefix.
+        """
+        out: List[Tuple[int, int, int]] = []
+        # stack carries (node, tokens-so-far, chain-so-far); token tuples
+        # are shared between siblings via the parent reference
+        stack: List[Tuple[RadixNode, Tuple[int, ...], List[int]]] = [
+            (self.root, (), [])]
+        while stack:
+            node, ptoks, pchain = stack.pop()
+            toks = ptoks + tuple(node.edge)
+            chain = list(pchain)
+            h = chain[-1] if chain else 0
+            for i in range(len(chain), len(toks) // self.bt):
+                blk = toks[i * self.bt:(i + 1) * self.bt]
+                h = zlib.crc32(struct.pack(f"<{self.bt}q", *blk), h)
+                chain.append(h)
+            for idx in sorted(set(node.entries) | set(node.host)):
+                if idx < len(chain):
+                    bits = classify(node, idx)
+                    if bits:
+                        out.append((idx, chain[idx], bits))
+            stack.extend((c, toks, chain)
+                         for c in node.children.values())
         return out
 
     # ---- introspection / invariants ------------------------------------------

@@ -1,0 +1,255 @@
+"""Cluster serving plane tests: chain digests, gossip summaries,
+placement policies, cross-replica pulls, and router determinism."""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+from repro.cluster import (GossipConfig, HashRing, PrefixAffinity,
+                           ReplicaSummary, RoundRobin, Router)
+from repro.core.costmodel import A100_PCIE, make_link
+from repro.core.engine import Engine, EngineConfig
+from repro.data.workloads import build_workload
+from repro.kvcache.prefix_store import TIER_DEVICE, TIER_HOST
+from repro.kvcache.radix_index import token_chain
+
+BT = A100_PCIE.block_tokens
+
+
+def mk_engine(**kw):
+    kw.setdefault("gpu_blocks", 64)
+    return Engine(EngineConfig.preset("vllm_prefix", **kw), A100_PCIE)
+
+
+def seed_prefix(eng, prompt, n_blocks, rid="seed"):
+    """Publish a ready device-resident prefix into an engine's store."""
+    store, p = eng.prefix_store, eng.pools[0]
+    bbd = {0: p.allocate(n_blocks, rid)}
+    store.publish(rid, prompt[:n_blocks * BT], bbd, start=0)
+    store.mark_ready(rid)
+    return store
+
+
+def drain(eng):
+    while eng.step():
+        pass
+
+
+# ------------------------------------------------------------- token chains
+def test_token_chain_identifies_shared_prefixes():
+    a = list(range(4 * BT))
+    b = list(range(2 * BT)) + [9999] * (2 * BT)
+    ca, cb = token_chain(a, BT), token_chain(b, BT)
+    assert len(ca) == 4
+    assert ca[:2] == cb[:2]          # identical first two blocks
+    assert ca[2] != cb[2]            # divergence changes that hash...
+    assert ca[3] != cb[3]            # ...and chains into every later one
+
+
+def test_token_chain_partial_block_excluded():
+    assert token_chain(list(range(BT + 3)), BT) == \
+        token_chain(list(range(BT)), BT)
+
+
+# ------------------------------------------------------------------ summary
+def test_summary_coverage_tiers_and_gaps():
+    eng = mk_engine()
+    prompt = list(range(4 * BT))
+    store = seed_prefix(eng, prompt, 3)
+    hb = eng.host.allocate(4, "h")
+    store.host_publish(prompt, hb, start=0)       # host covers block 3 too
+    s = ReplicaSummary.capture(0, store, now=1.0, max_entries=4096)
+    chain = token_chain(prompt, BT)
+    assert s.coverage(chain) == (3, 4)            # device run 3, any-tier 4
+    # a foreign prompt scores zero
+    assert s.coverage(token_chain([7] * 4 * BT, BT)) == (0, 0)
+    # truncation drops the deepest block first: any-tier run shrinks
+    s2 = ReplicaSummary.capture(0, store, now=1.0, max_entries=3)
+    assert s2.truncated == 1
+    assert s2.coverage(chain) == (3, 3)
+
+
+def test_summary_digest_bits_match_tiers():
+    eng = mk_engine()
+    prompt = list(range(2 * BT))
+    store = seed_prefix(eng, prompt, 2)
+    trip = dict((h, bits) for _i, h, bits in store.coverage_digest())
+    chain = token_chain(prompt, BT)
+    assert trip[chain[0]] & TIER_DEVICE
+    assert not trip[chain[0]] & TIER_HOST
+
+
+# ---------------------------------------------------------------- hash ring
+def test_hash_ring_deterministic_and_covering():
+    ring = HashRing(3)
+    keys = [f"app#{i}" for i in range(200)]
+    owners = [ring.lookup(k) for k in keys]
+    assert owners == [HashRing(3).lookup(k) for k in keys]
+    assert set(owners) == {0, 1, 2}
+
+
+# ------------------------------------------------------- placement policies
+class FakeView:
+    def __init__(self, covs, loads):
+        self.covs, self._loads = covs, loads
+
+    def coverage(self, i, chain):
+        return self.covs[i]
+
+    def loads(self):
+        return self._loads
+
+
+def test_round_robin_cycles():
+    rr = RoundRobin(3)
+    v = FakeView([(0, 0)] * 3, [0] * 3)
+    assert [rr.place(0, [], v).replica for _ in range(5)] == [0, 1, 2, 0, 1]
+
+
+def test_affinity_home_without_coverage_edge():
+    pol = PrefixAffinity(3)
+    dec = pol.place(1, [1, 2], FakeView([(0, 0)] * 3, [0] * 3))
+    assert (dec.replica, dec.kind) == (1, "home")
+    assert dec.pull_src is None
+
+
+def test_affinity_override_needs_min_gain():
+    v_small = FakeView([(0, 1), (0, 0), (0, 0)], [0] * 3)
+    assert PrefixAffinity(3).place(1, [1], v_small).kind == "home"
+    v_big = FakeView([(4, 4), (0, 0), (0, 0)], [0] * 3)
+    dec = PrefixAffinity(3).place(1, [1] * 4, v_big)
+    assert (dec.replica, dec.kind) == (0, "override")
+
+
+def test_affinity_spill_and_pull_candidate():
+    pol = PrefixAffinity(3, saturate_factor=1.5, saturate_min=2)
+    # home 0 is saturated; node spills to least-loaded replica 2, and
+    # replica 0's device blocks become the pull source
+    dec = pol.place(0, [1] * 4,
+                    FakeView([(4, 4), (0, 0), (0, 0)], [9, 3, 0]))
+    assert (dec.replica, dec.kind) == (2, "spill")
+    assert (dec.pull_src, dec.src_cov) == (0, 4)
+
+
+# -------------------------------------------------------- pull (two engines)
+def test_remote_pull_lifecycle_and_dedup():
+    src = mk_engine()
+    dst = mk_engine(remote_pull=True)
+    link = make_link(A100_PCIE, "rdma_100g")
+    prompt = list(range(4 * BT))
+    store_src = seed_prefix(src, prompt, 4)
+
+    # router handshake: pin the source run for the copy's duration
+    m = store_src.match(prompt)
+    assert m.n_full == 4
+    store_src.acquire("p0/src", m)
+    tag, used = dst.start_remote_pull(prompt, 0, 4, link, tag="p0")
+    assert (tag, used) == ("p0", 4)
+    assert dst.metrics["remote_pulls"] == 1
+    # unready remote entries are already in the tree: a second pull for
+    # the same range books nothing (never double-transfer)
+    assert dst.start_remote_pull(prompt, 0, 4, link) == (None, 0)
+
+    drain(dst)                                   # deliver the transfer
+    assert ("pull_done", "p0", dst.clock) in dst.outbox
+    m2 = dst.prefix_store.match(prompt)
+    assert m2.n_full == 4
+    assert all(e.source == "remote" for e in m2.full_entries)
+    assert dst.transfers.bytes["remote"] == 4 * A100_PCIE.block_bytes
+
+    store_src.release("p0/src")                  # router drops source pins
+    store_src.check_invariants()
+    dst.prefix_store.check_invariants()
+
+
+def test_remote_pull_respects_pool_pressure():
+    dst = mk_engine(gpu_blocks=8, remote_pull=True)
+    link = make_link(A100_PCIE, "rdma_100g")
+    assert dst.start_remote_pull(list(range(64 * BT)), 0, 64, link) \
+        == (None, 0)
+
+
+# ----------------------------------------------------------------- end2end
+def run_cluster(n, policy="affinity", pull=True, n_apps=3, seed=1,
+                max_time=20000.0):
+    link = make_link(A100_PCIE, "rdma_100g") if pull else None
+    router = Router(
+        lambda i: Engine(EngineConfig.preset(
+            "vllm_prefix", gpu_blocks=640, max_running=16,
+            remote_pull=pull), A100_PCIE),
+        n, policy=policy, link=link,
+        gossip=GossipConfig(interval=2.0),
+        policy_kw=(dict(saturate_factor=1.2, saturate_min=2)
+                   if policy == "affinity" else None))
+    for t, g in build_workload("code_writer", "d1", qps=1.0,
+                               n_apps=n_apps, seed=seed):
+        router.submit_app(g, t)
+    rep = router.run(max_time=max_time)
+    return router, rep
+
+
+def test_cluster_completes_all_apps_and_releases_pulls():
+    router, rep = run_cluster(2)
+    assert rep["apps_finished"] == 3
+    assert rep["routing"]["placements"] == sum(
+        len(ca.graph.nodes) for ca in router.apps.values())
+    assert rep["pulls"] > 0                      # the wire actually moved KV
+    assert rep["pull_hits"] > 0                  # ...and admissions hit it
+    assert not router._pulls                     # every pull released
+    for h in router.replicas:
+        h.engine.prefix_store.check_invariants()
+    # only home replicas account app completion (mirrors never do)
+    assert sum(len(h.engine.app_latencies)
+               for h in router.replicas) == 3
+
+
+def test_single_replica_cluster_matches_bare_engine():
+    def bare():
+        eng = Engine(EngineConfig.preset("vllm_prefix", gpu_blocks=640,
+                                         max_running=16), A100_PCIE)
+        for t, g in build_workload("code_writer", "d1", qps=1.0,
+                                   n_apps=3, seed=1):
+            eng.submit_app(g, t)
+        return eng.run(max_time=20000.0)
+
+    router, rep = run_cluster(1)
+    assert rep["per_replica"][0] == bare()       # exact, float-for-float
+    assert rep["pulls"] == 0                     # nowhere to pull from
+
+
+def test_router_determinism_same_trace_same_placements():
+    """Same seed + arrival trace => identical placements and per-replica
+    metrics: the gossip tick and all routing inputs are virtual-time
+    functions of the trace, never wall clock."""
+    ra, repa = run_cluster(3, n_apps=4)
+    rb, repb = run_cluster(3, n_apps=4)
+    assert {a: ca.placed for a, ca in ra.apps.items()} == \
+        {a: cb.placed for a, cb in rb.apps.items()}
+    assert repa["routing"] == repb["routing"]
+    assert repa["per_replica"] == repb["per_replica"]
+    assert repa["avg_latency"] == repb["avg_latency"]
+
+
+# ----------------------------------------------------------------- property
+@settings(max_examples=50, deadline=None)
+@given(blocks=st.integers(0, 6), tail=st.integers(0, 15),
+       flip=st.integers(0, 5), data=st.data())
+def test_token_chain_prefix_sensitivity(blocks, tail, flip, data):
+    toks = [data.draw(st.integers(0, 999)) for _ in range(blocks * 8 + tail)]
+    bt = 8
+    chain = token_chain(toks, bt)
+    assert len(chain) == len(toks) // bt
+    # chains are prefix-stable: truncating tokens truncates the chain
+    cut = data.draw(st.integers(0, len(chain))) if chain else 0
+    assert token_chain(toks[:cut * bt], bt) == chain[:cut]
+    if flip < len(chain):
+        # flipping one token in block ``flip`` changes every hash from
+        # that block on (position-dependent chaining)
+        mut = list(toks)
+        mut[flip * bt] ^= 1 << 30
+        mchain = token_chain(mut, bt)
+        assert mchain[:flip] == chain[:flip]
+        assert all(mchain[i] != chain[i] for i in range(flip, len(chain)))

@@ -1,0 +1,133 @@
+"""Unit + property tests for the waiting-request selection policies
+(§4.2/§7.5): the opportunistic gate's choice of which waiting request
+takes blocks freed by an offload."""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:   # hypothesis is an optional test dep (see pyproject)
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+from repro.core.graph import AppGraph, SearchNode
+from repro.core.policies import (POLICIES, _fits, best_fit, first_fit,
+                                 priority_first)
+from repro.core.request import Request
+
+BT = 16
+
+
+def mk_request(prompt=64, decode=32, priority=0.0, name="a"):
+    g = AppGraph("t")
+    node = g.add_agent(name, "worker", prompt, decode_segments=[decode],
+                       func_calls=[None])
+    r = Request(rid=f"r/{name}/{prompt}", app_id="app0", node=node, graph=g,
+                arrival=0.0, prompt_tokens=list(range(prompt)))
+    r.priority = priority
+    return r
+
+
+# ------------------------------------------------------------------ _fits
+def test_fits_requires_blocks_and_token_capacity():
+    r = mk_request(prompt=64, decode=32)           # 4 blocks, 32 tokens left
+    assert _fits(r, 4, 32, BT)                     # exact on both axes
+    assert not _fits(r, 3, 32, BT)                 # one block short
+    assert not _fits(r, 4, 31, BT)                 # one token over the window
+    assert _fits(r, 100, 1e9, BT)
+
+
+def test_fits_counts_generated_context():
+    r = mk_request(prompt=64, decode=32)
+    r.generated_total = 1                          # context spills into block 5
+    assert not _fits(r, 4, 100, BT)
+    assert _fits(r, 5, 100, BT)
+
+
+# --------------------------------------------------------------- first_fit
+def test_first_fit_preserves_queue_order():
+    big = mk_request(prompt=320, name="big")       # 20 blocks
+    small = mk_request(prompt=32, name="small")    # 2 blocks
+    tiny = mk_request(prompt=16, name="tiny")      # 1 block
+    assert first_fit([big, small, tiny], 4, 1e9, BT) is small
+    assert first_fit([big, small, tiny], 24, 1e9, BT) is big
+
+
+def test_first_fit_none_when_nothing_fits():
+    assert first_fit([], 100, 1e9, BT) is None
+    assert first_fit([mk_request(prompt=320)], 4, 1e9, BT) is None
+
+
+# ---------------------------------------------------------------- best_fit
+def test_best_fit_minimizes_leftover_blocks():
+    a = mk_request(prompt=32, name="a")            # 2 blocks -> leftover 4
+    b = mk_request(prompt=80, name="b")            # 5 blocks -> leftover 1
+    c = mk_request(prompt=160, name="c")           # 10 blocks: does not fit
+    assert best_fit([a, b, c], 6, 1e9, BT) is b
+
+
+def test_best_fit_tie_keeps_queue_order():
+    # min() is stable: equal leftover resolves to the earlier request
+    a = mk_request(prompt=64, name="a")
+    b = mk_request(prompt=64, name="b")
+    assert best_fit([a, b], 6, 1e9, BT) is a
+
+
+def test_best_fit_respects_token_capacity():
+    a = mk_request(prompt=32, decode=100, name="a")
+    b = mk_request(prompt=48, decode=10, name="b")
+    # a is the tighter block fit but its 100 remaining tokens blow the
+    # completion window; b is selected instead
+    assert best_fit([a, b], 4, 50, BT) is b
+    assert best_fit([a, b], 4, 5, BT) is None
+
+
+# ---------------------------------------------------------- priority_first
+def test_priority_first_picks_max_priority_fit():
+    lo = mk_request(prompt=32, priority=1.0, name="lo")
+    hi = mk_request(prompt=64, priority=9.0, name="hi")
+    huge = mk_request(prompt=640, priority=99.0, name="huge")
+    assert priority_first([lo, hi, huge], 8, 1e9, BT) is hi
+
+
+def test_priority_first_ignores_token_capacity():
+    # deliberate §7.5 behavior: the window is not consulted, so a long
+    # important request wins over a short one that would complete in it
+    long_hi = mk_request(prompt=32, decode=500, priority=9.0, name="l")
+    short_lo = mk_request(prompt=32, decode=5, priority=1.0, name="s")
+    assert priority_first([short_lo, long_hi], 4, 10, BT) is long_hi
+    assert first_fit([short_lo, long_hi], 4, 10, BT) is short_lo
+
+
+def test_priority_first_none_when_no_block_fit():
+    assert priority_first([mk_request(prompt=320)], 4, 1e9, BT) is None
+
+
+# ---------------------------------------------------------------- registry
+def test_policy_registry():
+    assert POLICIES == {"first_fit": first_fit, "best_fit": best_fit,
+                        "priority_first": priority_first}
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=60, deadline=None)
+@given(prompts=st.lists(st.integers(1, 400), min_size=1, max_size=8),
+       freed=st.integers(0, 30), cap=st.integers(0, 300))
+def test_policies_only_return_admissible_requests(prompts, freed, cap):
+    waiting = [mk_request(prompt=p, priority=float(i), name=f"n{i}")
+               for i, p in enumerate(prompts)]
+    ff = first_fit(waiting, freed, cap, BT)
+    bf = best_fit(waiting, freed, cap, BT)
+    pf = priority_first(waiting, freed, cap, BT)
+    fits = [r for r in waiting if _fits(r, freed, cap, BT)]
+    # first_fit: the earliest admissible request, None iff none fit
+    assert ff is (fits[0] if fits else None)
+    # best_fit: admissible and leftover-minimal
+    assert bf is (min(fits, key=lambda r: freed - r.blocks_needed(BT))
+                  if fits else None)
+    # priority_first: block-admissible with maximal priority
+    block_fits = [r for r in waiting if r.blocks_needed(BT) <= freed]
+    if block_fits:
+        assert pf in block_fits
+        assert pf.priority == max(r.priority for r in block_fits)
+    else:
+        assert pf is None

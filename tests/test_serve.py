@@ -135,7 +135,7 @@ def test_states_plain_and_verbose():
     # the transfer-plane ledger rides along for operators
     assert set(v["transfers"]) == {"kinds", "bytes", "live", "backlog_s"}
     assert set(v["transfers"]["kinds"]) == {"upload", "promotion",
-                                            "prefetch", "offload"}
+                                            "remote", "prefetch", "offload"}
 
 
 def test_report_merges_engine_and_frontend():

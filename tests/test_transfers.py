@@ -180,7 +180,7 @@ def test_ledger_counts_blocks_bytes_describe():
     s.tm.submit("offload", 4, "ra")
     s.tm.submit("upload", 2, "ra")
     s.tm.submit("prefetch", 3, "p1")
-    assert s.tm.count == {"upload": 1, "promotion": 0,
+    assert s.tm.count == {"upload": 1, "promotion": 0, "remote": 0,
                           "prefetch": 1, "offload": 1}
     assert s.tm.blocks["offload"] == 4 and s.tm.blocks["prefetch"] == 3
     assert s.tm.bytes["d2h"] == 4 * plat.block_bytes
@@ -197,6 +197,9 @@ def test_ledger_counts_blocks_bytes_describe():
 def test_priority_table_orders_demand_over_speculation():
     assert (PRIORITY["upload"] < PRIORITY["promotion"]
             < PRIORITY["prefetch"] < PRIORITY["offload"])
+    # cross-replica pulls: demand-gated like promotions but on a slower
+    # fabric — between the local demand kinds and the speculative ones
+    assert PRIORITY["promotion"] < PRIORITY["remote"] < PRIORITY["prefetch"]
 
 
 # ---------------------------------------------------------------------------
