@@ -89,6 +89,37 @@ def run(csv: CsvWriter, quick: bool = False):
     out["host_tier_promote_cost"] = rep
     csv.row("fig18.host_tier_promote_cost", rep["avg_latency"] * 1e6,
             f"avg_s={rep['avg_latency']:.1f};" + _econ_cols(rep))
+    # precision-tiered row: identical policy stack, int8 host tier —
+    # every offload quantizes on D2H and every promotion dequantizes on
+    # H2D, so the same workload moves half the wire bytes and the
+    # repriced crossover promotes runs fp16 would recompute (the CI gate
+    # asserts h2d_bytes drops >= 1.5x at equal-or-better avg latency)
+    rep = run_engine("tokencake", qps=1.0, platform=A100_PCIE,
+                     host_promotion=True, promotion_policy="cost",
+                     temporal=TemporalConfig(kv_precision="int8_host"),
+                     **scale)
+    out["host_tier_promote_cost_int8"] = rep
+    csv.row("fig18.host_tier_promote_cost_int8", rep["avg_latency"] * 1e6,
+            f"avg_s={rep['avg_latency']:.1f};"
+            f"h2d_bytes={rep['h2d_bytes']};"
+            f"d2h_bytes={rep['d2h_bytes']};" + _econ_cols(rep))
+    # analytic crossover: on a slow inter-replica link with a backlogged
+    # stream, the halved per-block wire time moves the promote-vs-
+    # recompute crossover — list the run lengths where int8 still
+    # promotes while fp16 elects a full recompute
+    from repro.core.costmodel import make_link
+    link = make_link(A100_PCIE, "tcp_25g")
+    backlog = 0.05
+    split = [k for k in range(1, 33)
+             if link.promotion_cutoff(k, backlog, "int8_host") > 0
+             and link.promotion_cutoff(k, backlog) == 0]
+    out["int8_crossover"] = {
+        "link": "tcp_25g", "backlog_s": backlog,
+        "fp16_recompute_int8_promote_runs": split,
+    }
+    csv.row("fig18.int8_crossover", float(len(split)),
+            f"link=tcp_25g;backlog_s={backlog};"
+            f"runs={'|'.join(map(str, split)) or 'none'}")
     # workflow-aware prefetch row: same cost policy, plus speculative
     # promotions launched ahead of each agent's forecast activation
     # (steps-to-execution) — hit admissions pin already-resident blocks,

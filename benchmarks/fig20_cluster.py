@@ -78,11 +78,20 @@ def run(csv: CsvWriter, quick: bool = False):
     qps, n_apps, max_time = (1.0, 12, 12000.0) if quick \
         else (1.5, 30, 30000.0)
 
-    for name, policy, pull in [("round_robin", "round_robin", False),
-                               ("affinity", "affinity", False),
-                               ("affinity_pull", "affinity", True)]:
+    from repro.core.temporal import TemporalConfig
+    int8_kw = dict(_ENGINE_KW, remote_pull=True,
+                   temporal=TemporalConfig(kv_precision="int8_host"))
+    for name, policy, pull, ekw in [
+            ("round_robin", "round_robin", False, None),
+            ("affinity", "affinity", False, None),
+            ("affinity_pull", "affinity", True, None),
+            # precision-tiered replicas: int8 host tier + int8 wire —
+            # pulls are repriced at half the per-block cost, so the
+            # per-link crossover admits runs fp16 pricing declines and
+            # cross_replica_bytes halves per pulled block
+            ("affinity_pull_int8", "affinity", True, int8_kw)]:
         rep = run_cluster(policy, n_replicas, qps, n_apps, max_time,
-                          pull=pull)
+                          pull=pull, engine_kw=ekw)
         out[name] = rep
         r = rep["routing"]
         hit = sum(rep["prefix_hit_rates"]) / n_replicas

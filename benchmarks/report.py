@@ -95,13 +95,18 @@ def promotion_table() -> str:
     """Host-tier promotion summary across the tiered-cache figures: pulls
     the promotion and transfer-economics metrics (promotions / cutoffs /
     recompute elections / trimmed blocks / saved tokens / bytes) out of
-    the fig12 and fig18 rows' derived columns into one table."""
+    the fig12 and fig18 rows' derived columns into one table. The
+    ``h2d_bytes`` / ``d2h_bytes`` columns report *wire* traffic: an
+    ``int8_host`` row moves half the bytes per block that its fp16 twin
+    does for the same promotions (the ledger prices each transfer at
+    ``block_bytes_for(precision)``, not pool-slot capacity)."""
     path = os.path.join(ROOT, "results/bench/summary.csv")
     if not os.path.exists(path):
         return "(run benchmarks first)"
     keys = ("promotions", "promotion_cutoffs", "recompute_elections",
             "promo_blocks_trimmed", "promoted_blocks",
-            "promotion_saved_tokens", "prefill_tokens", "h2d_bytes")
+            "promotion_saved_tokens", "prefill_tokens", "h2d_bytes",
+            "d2h_bytes")
     rows = ["| row | " + " | ".join(keys) + " |",
             "|---|" + "---|" * len(keys)]
     for line in open(path).read().splitlines():

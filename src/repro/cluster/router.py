@@ -175,7 +175,8 @@ class Router:
         if k_max <= 0:
             self.metrics["pull_declined"] += 1
             return
-        k = self.link.promotion_cutoff(k_max, dst.transfers.backlog())
+        k = self.link.promotion_cutoff(k_max, dst.transfers.backlog(),
+                                       dst.kv_precision)
         if k <= 0:
             self.metrics["pull_declined"] += 1   # recompute election
             return

@@ -129,7 +129,9 @@ class JaxBackend:
         self.cache = PagedKVCache(cfg, engine_cfg.gpu_blocks,
                                   platform.block_tokens,
                                   host_blocks=engine_cfg.host_blocks,
-                                  dtype=dtype)
+                                  dtype=dtype,
+                                  host_precision=(
+                                      engine_cfg.temporal.kv_precision))
         self.block_tokens = platform.block_tokens
         self.generated: Dict[str, List[int]] = {}
         # tokens actually resident in the paged cache per request (the
@@ -158,10 +160,11 @@ class JaxBackend:
         need = [r for r in reqs if self._needs_prefill(r)]
         if need:
             # batched suffix prefill serves archs whose layer body the
-            # paged scan reproduces exactly; moe is excluded (bucket
-            # padding would perturb expert-capacity routing — see
-            # decoder._paged_ffn), as are window/ssm/cross-attn archs
-            if self.cfg.arch_type == "dense" \
+            # paged scan reproduces exactly: dense, and moe now that
+            # padded rows are pinned to the sentinel expert (see
+            # decoder._paged_ffn / moe_ffn's pad_mask); window/ssm/
+            # cross-attn archs still take the per-request path
+            if self.cfg.arch_type in ("dense", "moe") \
                     and self.cfg.sliding_window is None:
                 self._prefill_batch(need)
             else:

@@ -15,6 +15,17 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 
 
+# KV block precisions the transfer plane prices. ``fp16`` is the native
+# device/pool precision (2 bytes/elem — the calibrated ``block_bytes``);
+# ``int8_host`` halves the payload (1 byte/elem) for blocks that cooled
+# into the host tier or ride a cross-replica wire. The per-(block, kv-head)
+# fp32 scales add < 1% of the payload (2·Hkv floats vs bs·Hkv·D bytes) and
+# are absorbed into the halved figure rather than modeled separately.
+KV_PRECISIONS = ("fp16", "int8_host")
+
+_PRECISION_DIVISOR = {"fp16": 1, "bf16": 1, "int8": 2, "int8_host": 2}
+
+
 @dataclass(frozen=True)
 class PlatformModel:
     name: str
@@ -41,17 +52,44 @@ class PlatformModel:
             return 1
         return -(-n_blocks // self.stream_chunk_blocks)
 
+    # ---- precision-tiered block sizing --------------------------------------
+    def block_bytes_for(self, precision: str = "fp16") -> int:
+        """Wire/storage bytes of one KV block at ``precision``.
+
+        ``block_bytes`` is calibrated at the native fp16/bf16 pool layout;
+        int8 tiers move half the payload. This single number is what every
+        transfer-time and ledger path scales by, so the promote-vs-recompute
+        crossover reprices automatically when blocks change precision."""
+        div = _PRECISION_DIVISOR.get(precision)
+        if div is None:
+            raise ValueError(f"unknown KV precision {precision!r} "
+                             f"(known: {sorted(_PRECISION_DIVISOR)})")
+        return self.block_bytes // div
+
+    def _per_block_ms(self, ms: float, precision: str) -> float:
+        """Scale a calibrated per-block millisecond figure to ``precision``.
+
+        fp16 returns the figure untouched (no float multiply — the legacy
+        rows must stay bit-identical); other precisions scale by the
+        byte ratio, since per-block copy time is bandwidth-bound."""
+        if precision == "fp16":
+            return ms
+        return ms * (self.block_bytes_for(precision) / self.block_bytes)
+
     # ---- Eq. 2: T_transfer = T_offload(N) + T_upload(N) ---------------------
-    def offload_time(self, n_blocks: int) -> float:
+    def offload_time(self, n_blocks: int, precision: str = "fp16") -> float:
         return (self._launches(n_blocks) * self.transfer_fixed_ms
-                + n_blocks * self.offload_ms_per_block) / 1e3
+                + n_blocks * self._per_block_ms(self.offload_ms_per_block,
+                                                precision)) / 1e3
 
-    def upload_time(self, n_blocks: int) -> float:
+    def upload_time(self, n_blocks: int, precision: str = "fp16") -> float:
         return (self._launches(n_blocks) * self.transfer_fixed_ms
-                + n_blocks * self.upload_ms_per_block) / 1e3
+                + n_blocks * self._per_block_ms(self.upload_ms_per_block,
+                                                precision)) / 1e3
 
-    def transfer_time(self, n_blocks: int) -> float:
-        return self.offload_time(n_blocks) + self.upload_time(n_blocks)
+    def transfer_time(self, n_blocks: int, precision: str = "fp16") -> float:
+        return (self.offload_time(n_blocks, precision)
+                + self.upload_time(n_blocks, precision))
 
     def recompute_time(self, n_tokens: int) -> float:
         return n_tokens * self.prefill_ms_per_token / 1e3
@@ -61,9 +99,13 @@ class PlatformModel:
                 + batch_size * self.decode_ms_per_seq) / 1e3
 
     def decode_throughput(self, batch_size: int) -> float:
-        """System tokens/s at the given running batch."""
+        """System tokens/s at the given running batch.
+
+        An empty batch produces no tokens: 0.0, not a fictitious floor
+        (callers that need a progress rate for a *hypothetical* single
+        request use :meth:`per_seq_decode_rate`, which clamps)."""
         if batch_size <= 0:
-            return 1.0
+            return 0.0
         return batch_size / self.decode_iter_time(batch_size)
 
     def per_seq_decode_rate(self, batch_size: int) -> float:
@@ -80,15 +122,18 @@ class PlatformModel:
         return -(-n_tokens // self.block_tokens)
 
     def upload_lead_time(self, n_blocks: int,
-                         stream_backlog: float = 0.0) -> float:
+                         stream_backlog: float = 0.0,
+                         precision: str = "fp16") -> float:
         """Seconds between submitting an H2D upload of ``n_blocks`` now
         and its last byte landing: the serial stream's current backlog
         plus the copy itself. This is the minimum lead a *prefetch* needs
         over its target's activation to have the KV resident in time."""
-        return max(stream_backlog, 0.0) + self.upload_time(n_blocks)
+        return max(stream_backlog, 0.0) + self.upload_time(n_blocks,
+                                                           precision)
 
     # ---- transfer economics: promote-vs-recompute crossover -----------------
-    def promote_gain(self, k: int, stream_backlog: float = 0.0) -> float:
+    def promote_gain(self, k: int, stream_backlog: float = 0.0,
+                     precision: str = "fp16") -> float:
         """Seconds saved by uploading ``k`` host-cached blocks instead of
         recomputing their tokens in the suffix prefill.
 
@@ -99,13 +144,17 @@ class PlatformModel:
         ``recompute_time(k * block_tokens)`` merged into the prefill the
         requester runs anyway. Positive = promoting beats recomputing.
         ``promote_gain(0)`` is 0 by definition (nothing moves, nothing
-        recomputed)."""
+        recomputed). ``precision`` prices the *upload* side only — the
+        recompute side regenerates full-precision KV either way — so an
+        int8 host tier strictly widens the gain for every k."""
         if k <= 0:
             return 0.0
         return (self.recompute_time(k * self.block_tokens)
-                - (max(stream_backlog, 0.0) + self.upload_time(k)))
+                - (max(stream_backlog, 0.0)
+                   + self.upload_time(k, precision)))
 
-    def promotion_cutoff(self, k_max: int, stream_backlog: float = 0.0) -> int:
+    def promotion_cutoff(self, k_max: int, stream_backlog: float = 0.0,
+                         precision: str = "fp16") -> int:
         """Blocks of a ``k_max``-block promotable run worth uploading: the
         argmax of cumulative ``promote_gain`` over ``0..k_max``.
 
@@ -121,7 +170,7 @@ class PlatformModel:
         a full extra launch for less than a chunk of saved recompute."""
         best_k, best_g = 0, 0.0
         for k in range(1, k_max + 1):
-            g = self.promote_gain(k, stream_backlog)
+            g = self.promote_gain(k, stream_backlog, precision)
             if g >= best_g:
                 best_k, best_g = k, g
         return best_k
@@ -192,7 +241,11 @@ def remote_link(platform: PlatformModel, gbytes_per_s: float,
     link's ``upload_time(k)`` is the wire time of pulling ``k`` KV blocks
     from a peer, so ``promote_gain`` / ``promotion_cutoff`` price
     pull-vs-recompute with the exact machinery the host-tier promotion
-    cutoff uses — only the per-block milliseconds change. ``fixed_ms``
+    cutoff uses — only the per-block milliseconds change. Precision
+    awareness comes free: the link's per-block ms derives from
+    ``block_bytes`` at fp16, and ``upload_time(k, precision)`` scales it
+    by ``block_bytes_for(precision)/block_bytes`` — exactly the wire time
+    of the smaller payload at the same GB/s. ``fixed_ms``
     models the pull RPC round-trip (summary validation + source pinning),
     ``chunk_blocks`` > 0 a fabric that stages through fixed-size bounce
     buffers (one launch per chunk, like the chunked PCIe stream).

@@ -158,11 +158,17 @@ class Engine:
         self.pools = [BP.DevicePool(cfg.gpu_blocks, d)
                       for d in range(cfg.num_devices)]
         self.host = BP.HostPool(cfg.host_blocks)
+        # KV precision of the host tier and every transfer payload:
+        # "fp16" is the legacy full-precision path (bit-identical timings
+        # and ledgers); "int8_host" halves every wire byte and reprices
+        # the transfer economics accordingly
+        self.kv_precision = cfg.temporal.kv_precision
         # ref-counted COW prefix store over every device pool + host tier;
         # the device tier engages when cfg.prefix_cache, the host tier when
         # cfg.cpu_prefix_cache (mooncake §6.3)
         self.prefix_store = PrefixStore(self.pools, self.host,
-                                        platform.block_tokens)
+                                        platform.block_tokens,
+                                        host_precision=self.kv_precision)
         self._pending_ready: List[str] = []
         self.forecaster = Forecaster()
         self.spatial = SpatialScheduler(self.pools, cfg.spatial)
@@ -361,7 +367,8 @@ class Engine:
         if used == 0:
             return None, 0
         self._submit_transfer("remote", used, pid, owner=tag,
-                              duration=link.upload_time(used))
+                              duration=link.upload_time(
+                                  used, self.kv_precision))
         self.metrics["remote_pulls"] += 1
         self.metrics["remote_pulled_blocks"] += used
         return tag, used
@@ -525,10 +532,26 @@ class Engine:
         one serial copy stream, priority-arbitrated) and return its
         lifecycle record; the ``transfer_done`` event fires at the slot's
         end. ``duration`` overrides the local platform timing (remote
-        pulls are priced by their link's PlatformModel)."""
+        pulls are priced by their link's PlatformModel).
+
+        A non-fp16 ``kv_precision`` reprices the slot (quantized payloads
+        move fewer wire bytes, so per-block time shrinks by the same
+        ratio) and tells the ledgers the true per-block wire bytes. The
+        fp16 path passes None for both so submissions stay byte-identical
+        to the legacy engine."""
+        bpb = None
+        if self.kv_precision != "fp16":
+            bpb = self.platform.block_bytes_for(self.kv_precision)
+            if duration is None:
+                duration = (
+                    self.platform.offload_time(n_blocks, self.kv_precision)
+                    if kind == "offload"
+                    else self.platform.upload_time(n_blocks,
+                                                   self.kv_precision))
         tr = self.transfers.submit(kind, n_blocks, payload, owner=owner,
                                    on_reschedule=on_reschedule,
-                                   duration=duration)
+                                   duration=duration,
+                                   bytes_per_block=bpb)
         self.temporal.swapped_blocks += n_blocks
         return tr
 
@@ -1000,7 +1023,7 @@ class Engine:
                 # deferred request must not re-count its decision every
                 # retry, same convention as cpu_hits.)
                 k_cut = self.platform.promotion_cutoff(
-                    k_promo, self.stream_backlog())
+                    k_promo, self.stream_backlog(), self.kv_precision)
                 promo_trimmed = k_promo - k_cut
                 k_promo = k_cut
             if k_promo < len(m.promo):   # budget-/cost-trimmed: shrink

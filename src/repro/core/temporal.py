@@ -75,6 +75,13 @@ class TemporalConfig:
     # fixed upload_safety multiplier with a conservative completion-time
     # quantile (None keeps the legacy multiplier rule bit-identically)
     upload_quantile: Optional[float] = None
+    # precision tier of the host-cached KV (ROADMAP "Quantized KV tier"):
+    # "fp16" keeps every legacy row bit-identical; "int8_host" quantizes
+    # blocks as they cool — fp16 hot on device, int8 payload + per-(block,
+    # kv-head) fp32 scales in the host pool and on every wire (D2H, H2D,
+    # cross-replica pulls). Halved wire bytes reprice offload_time/
+    # upload_time and shift every promotion cutoff toward promoting.
+    kv_precision: str = "fp16"
 
 
 @dataclass
@@ -147,7 +154,8 @@ class TemporalScheduler:
         if n_blocks == 0:
             return OffloadDecision(False, "no blocks")
 
-        t_transfer = self.platform.transfer_time(n_blocks)       # Eq. 2
+        t_transfer = self.platform.transfer_time(
+            n_blocks, self.cfg.kv_precision)                     # Eq. 2
         t_fc = self.predict_fc(req)
 
         # ---- hard rejections (§4.2) ----
@@ -239,7 +247,8 @@ class TemporalScheduler:
                         importance: float) -> float:
         """P_upload = I + U (importance + urgency)."""
         horizon = max(req.fc_predicted_end - now, 0.0)
-        t_up = self.platform.upload_time(len(req.host_blocks))
+        t_up = self.platform.upload_time(len(req.host_blocks),
+                                         self.cfg.kv_precision)
         urgency = 1.0 / (1.0 + max(horizon - t_up, 0.0))
         return importance + urgency
 
@@ -265,7 +274,8 @@ class TemporalScheduler:
         when ``now + t_up`` reaches the q-quantile completion time, so
         the margin adapts to the tool's observed jitter instead of
         scaling uniformly."""
-        t_up = self.platform.upload_time(len(req.host_blocks))
+        t_up = self.platform.upload_time(len(req.host_blocks),
+                                         self.cfg.kv_precision)
         q = self.cfg.upload_quantile
         if q is not None and req.current_fc is not None:
             fc = req.current_fc
@@ -281,7 +291,8 @@ class TemporalScheduler:
         slack — otherwise the blocks would land late and the prefetch
         degenerates into a reactive promotion — widened to the absolute
         horizon so cheap early warming is allowed when capacity permits."""
-        lead = self.platform.upload_lead_time(n_blocks, stream_backlog)
+        lead = self.platform.upload_lead_time(n_blocks, stream_backlog,
+                                              self.cfg.kv_precision)
         return max(self.cfg.prefetch_horizon_s,
                    lead * self.cfg.prefetch_safety)
 

@@ -144,12 +144,18 @@ class TransferManager:
     def submit(self, kind: str, n_blocks: int, payload,
                owner: Optional[str] = None,
                on_reschedule: Optional[Callable[[float], None]] = None,
-               duration: Optional[float] = None) -> Transfer:
+               duration: Optional[float] = None,
+               bytes_per_block: Optional[int] = None) -> Transfer:
         """Book a copy on the stream. ``duration`` overrides the local
         platform's timing — cross-replica pulls are priced by the caller
         through a per-link :class:`PlatformModel` (the inter-replica
         fabric is not this replica's PCIe/DMA engine) but still serialize
-        on this stream because the landing blocks do ride it."""
+        on this stream because the landing blocks do ride it.
+        ``bytes_per_block`` overrides the platform's fixed fp16 block size
+        in the h2d/d2h/remote ledgers — a quantized block moves fewer
+        bytes on the wire than the pool slot it fills, and the ledgers
+        report *wire* traffic (``platform.block_bytes_for(precision)``),
+        not slot capacity."""
         if kind == "remote":
             direction = "remote"
         else:
@@ -178,9 +184,11 @@ class TransferManager:
         self._repack(i, now)
         self.count[kind] += 1
         self.blocks[kind] += n_blocks
-        self.bytes[direction] += n_blocks * self.platform.block_bytes
+        bpb = (bytes_per_block if bytes_per_block is not None
+               else self.platform.block_bytes)
+        self.bytes[direction] += n_blocks * bpb
         self._acct("swap_blocks", n_blocks)
-        self._acct(f"{direction}_bytes", n_blocks * self.platform.block_bytes)
+        self._acct(f"{direction}_bytes", n_blocks * bpb)
         return tr
 
     def on_event(self, payload: Tuple[int, int]) -> Optional[Transfer]:

@@ -90,6 +90,88 @@ def block_scatter_layers(pools, indices, staging, *, interpret: bool = True):
     )(indices, staging, pools)
 
 
+def block_gather_quant_layers(pools, indices, *, interpret: bool = True):
+    """Fused all-layer gather + int8 quantize — the quantize-on-offload
+    data plane: pools (L, N, bs, Hkv, D) float; indices (M,) int32
+    -> (staging (L, M, bs, Hkv, D) int8, scales (L, M, Hkv) float32).
+
+    One grid step owns one (layer, block) pair, reads the scattered pool
+    page, and emits the int8 payload plus a per-kv-head scale
+    (``max(amax/127, 1e-8)`` over the (token, dim) plane) — so the D2H
+    copy that follows moves half the fp16 bytes. Gridded-only, like the
+    other migration kernels (the grid is the data plane's natural shape;
+    interpret mode executes it the same way).
+    """
+    nl, n, bs, hkv, d = pools.shape
+    m = indices.shape[0]
+
+    def kernel(idx_ref, src_ref, q_ref, s_ref):
+        x = src_ref[0, 0].astype(jnp.float32)          # (bs, Hkv, D)
+        amax = jnp.max(jnp.abs(x), axis=(0, 2))        # (Hkv,)
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        q = jnp.clip(jnp.round(x / scale[None, :, None]), -127, 127)
+        q_ref[0, 0] = q.astype(jnp.int8)
+        s_ref[0, 0] = scale
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nl, m),
+            in_specs=[pl.BlockSpec((1, 1, bs, hkv, d),
+                                   lambda l, i, idx: (l, idx[i], 0, 0, 0))],
+            out_specs=[pl.BlockSpec((1, 1, bs, hkv, d),
+                                    lambda l, i, idx: (l, i, 0, 0, 0)),
+                       pl.BlockSpec((1, 1, hkv),
+                                    lambda l, i, idx: (l, i, 0))],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((nl, m, bs, hkv, d), jnp.int8),
+                   jax.ShapeDtypeStruct((nl, m, hkv), jnp.float32)],
+        interpret=interpret,
+    )(indices, pools)
+
+
+def block_scatter_dequant_layers(pools, indices, staging, scales,
+                                 *, interpret: bool = True):
+    """Fused dequantize + all-layer scatter — the promotion/pull delivery
+    path: staging (L, M, bs, Hkv, D) int8 + scales (L, M, Hkv) float32
+    are expanded back to the pool dtype and written into pool blocks
+    ``indices`` across every layer. Aliased in place when compiled, like
+    :func:`block_scatter_layers`; the device pool stays full-precision —
+    quantization lives only in the host tier and on the wire.
+    """
+    nl, n, bs, hkv, d = pools.shape
+    m = indices.shape[0]
+
+    def kernel(idx_ref, staging_ref, scales_ref, pools_in_ref,
+               pools_out_ref):
+        q = staging_ref[0, 0].astype(jnp.float32)      # (bs, Hkv, D)
+        s = scales_ref[0, 0]                           # (Hkv,)
+        pools_out_ref[0, 0] = (q * s[None, :, None]).astype(
+            pools_out_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nl, m),
+            in_specs=[
+                pl.BlockSpec((1, 1, bs, hkv, d),
+                             lambda l, i, idx: (l, i, 0, 0, 0)),
+                pl.BlockSpec((1, 1, hkv),
+                             lambda l, i, idx: (l, i, 0)),
+                pl.BlockSpec((1, 1, bs, hkv, d),
+                             lambda l, i, idx: (l, idx[i], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bs, hkv, d),
+                                   lambda l, i, idx: (l, idx[i], 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pools.shape, pools.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(indices, staging, scales, pools)
+
+
 def block_scatter(pages, indices, staging, *, interpret: bool = True):
     """Write staging (M, bs, Hkv, D) into pool blocks ``indices``.
 

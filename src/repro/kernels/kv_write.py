@@ -118,6 +118,106 @@ def _chunk_kernel_flat(wpages_ref, wstart_ref, wcount_ref, k_new_ref,
     v_out_ref[...] = v.reshape(v_in_ref.shape)
 
 
+def _quant_kernel(x_ref, q_ref, s_ref):
+    """One grid step quantizes one block: scale per kv head over the
+    (token, dim) plane, symmetric int8 payload."""
+    x = x_ref[0].astype(jnp.float32)                   # (bs, Hkv, D)
+    amax = jnp.max(jnp.abs(x), axis=(0, 2))            # (Hkv,)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x / scale[None, :, None]), -127, 127)
+    q_ref[0] = q.astype(jnp.int8)
+    s_ref[0] = scale
+
+
+def _quant_kernel_flat(x_ref, q_ref, s_ref):
+    """Single-grid-step variant: all blocks in one vectorized pass."""
+    x = x_ref[...].astype(jnp.float32)                 # (M, bs, Hkv, D)
+    amax = jnp.max(jnp.abs(x), axis=(1, 3))            # (M, Hkv)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x / scale[:, None, :, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, out_dtype):
+    q = q_ref[0].astype(jnp.float32)                   # (bs, Hkv, D)
+    s = s_ref[0]                                       # (Hkv,)
+    x_ref[0] = (q * s[None, :, None]).astype(out_dtype)
+
+
+def _dequant_kernel_flat(q_ref, s_ref, x_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)                 # (M, bs, Hkv, D)
+    s = s_ref[...]                                     # (M, Hkv)
+    x_ref[...] = (q * s[:, None, :, None]).astype(out_dtype)
+
+
+def kv_block_quant(blocks, *, interpret: bool = True, flat: bool = None):
+    """Quantize staged KV blocks to int8 with per-(block, kv-head) scales.
+
+    blocks: (M, bs, Hkv, D) float — a gathered staging buffer (the D2H
+    offload path quantizes AFTER the gather, so the wire payload is the
+    int8 tensor + fp32 scales, half the fp16 bytes).
+    returns: (q (M, bs, Hkv, D) int8, scales (M, Hkv) float32) with
+    ``scale = max(amax/127, 1e-8)`` over each block's (token, dim) plane.
+
+    ``flat`` selects the single-grid-step kernel; defaults to the
+    interpret setting (gridded for Mosaic on TPU, flat for the CPU
+    interpreter), as everywhere in this package.
+    """
+    m, bs, hkv, d = blocks.shape
+    if flat is None:
+        flat = interpret
+    out_shape = [jax.ShapeDtypeStruct((m, bs, hkv, d), jnp.int8),
+                 jax.ShapeDtypeStruct((m, hkv), jnp.float32)]
+
+    if flat:
+        return pl.pallas_call(
+            _quant_kernel_flat, out_shape=out_shape, interpret=interpret,
+        )(blocks)
+
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((1, bs, hkv, d), lambda i: (i, 0, 0, 0))],
+        out_specs=[pl.BlockSpec((1, bs, hkv, d), lambda i: (i, 0, 0, 0)),
+                   pl.BlockSpec((1, hkv), lambda i: (i, 0))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(blocks)
+
+
+def kv_block_dequant(q, scales, out_dtype=jnp.float32,
+                     *, interpret: bool = True, flat: bool = None):
+    """Dequantize int8 KV blocks back to ``out_dtype``.
+
+    q: (M, bs, Hkv, D) int8; scales: (M, Hkv) float32. The H2D promotion
+    path dequantizes INTO the staging buffer before the pool scatter, so
+    the device pool stays full-precision and the attention hot loop is
+    untouched by the host tier's precision.
+    """
+    m, bs, hkv, d = q.shape
+    if flat is None:
+        flat = interpret
+    out_shape = jax.ShapeDtypeStruct((m, bs, hkv, d), out_dtype)
+
+    if flat:
+        kernel = functools.partial(_dequant_kernel_flat, out_dtype=out_dtype)
+        return pl.pallas_call(
+            kernel, out_shape=out_shape, interpret=interpret,
+        )(q, scales)
+
+    kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((1, bs, hkv, d), lambda i: (i, 0, 0, 0)),
+                  pl.BlockSpec((1, hkv), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, bs, hkv, d), lambda i: (i, 0, 0, 0)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, scales)
+
+
 def kv_chunk_write(k_pages, v_pages, k_new, v_new, wpages, wstart, wcount,
                    *, interpret: bool = True, flat: bool = None):
     """Scatter one suffix chunk per sequence into the paged KV pool.

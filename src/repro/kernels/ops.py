@@ -62,6 +62,50 @@ def block_scatter_layers(pools, indices, staging):
                                     interpret=INTERPRET)
 
 
+@functools.partial(jax.jit, static_argnames=())
+def paged_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                          block_tables, context_lens):
+    """Decode attention over an int8-quantized pool (dequant fused)."""
+    return _pa.paged_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                     block_tables, context_lens,
+                                     interpret=INTERPRET)
+
+
+@jax.jit
+def paged_prefill_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                  block_tables, q_pos):
+    """Chunked suffix-prefill attention over an int8-quantized pool."""
+    return _pp.paged_prefill_attention_quant(q, k_pages, v_pages, k_scale,
+                                             v_scale, block_tables, q_pos,
+                                             interpret=INTERPRET)
+
+
+@jax.jit
+def kv_block_quant(blocks):
+    """Quantize staged KV blocks to int8 + per-(block, kv-head) scales."""
+    return _kw.kv_block_quant(blocks, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def kv_block_dequant(q, scales, out_dtype=jnp.float32):
+    """Dequantize int8 KV blocks back to ``out_dtype``."""
+    return _kw.kv_block_dequant(q, scales, out_dtype, interpret=INTERPRET)
+
+
+@jax.jit
+def block_gather_quant_layers(pools, indices):
+    """Fused all-layer gather + int8 quantize (quantize-on-offload)."""
+    return _bc.block_gather_quant_layers(pools, indices,
+                                         interpret=INTERPRET)
+
+
+@jax.jit
+def block_scatter_dequant_layers(pools, indices, staging, scales):
+    """Fused dequantize + all-layer scatter (promotion/pull delivery)."""
+    return _bc.block_scatter_dequant_layers(pools, indices, staging,
+                                            scales, interpret=INTERPRET)
+
+
 @jax.jit
 def kv_token_write(k_pages, v_pages, k_new, v_new, slots):
     """Batched one-token-per-sequence KV write into the paged pool."""

@@ -128,6 +128,168 @@ def _kernel_flat(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
     jax.lax.fori_loop(0, batch, body_b, 0)
 
 
+def _kernel_quant(block_tables_ref, context_lens_ref,   # scalar prefetch
+                  q_ref, k_ref, v_ref, ks_ref, vs_ref,  # VMEM blocks
+                  o_ref,                                # output block
+                  m_scr, l_scr, acc_scr,                # VMEM scratch
+                  *, block_size: int, num_pages: int):
+    """Dequant-fused variant of ``_kernel``: the pools are int8 with
+    per-(page, kv-head) fp32 scales; the page is expanded to f32 right
+    after the VMEM fetch and the flash math is identical from there."""
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = context_lens_ref[b]
+    start = p * block_size
+
+    q = q_ref[0].astype(jnp.float32)                  # (Hkv, G, D)
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][None, :, None]
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][None, :, None]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+
+    scores = jax.lax.dot_general(                     # (Hkv, G, bs)
+        q, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2)
+    valid = pos < ctx                                  # (1, 1, bs)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_scr[...]                                # (Hkv, G, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    probs = jnp.where(valid, jnp.exp(scores - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + probs.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        probs, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _kernel_quant_flat(bt_ref, cl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                       o_ref, *, block_size: int, num_pages: int,
+                       batch: int):
+    """Flat (CPU-interpret) dequant-fused variant of ``_kernel_flat``."""
+
+    def body_b(b, _):
+        q = q_ref[pl.ds(b, 1)][0].astype(jnp.float32)      # (Hkv, G, D)
+        ctx = cl_ref[b]
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+        hkv, g, d = q.shape
+        init = (jnp.full((hkv, g, 1), NEG_INF, jnp.float32),
+                jnp.zeros((hkv, g, 1), jnp.float32),
+                jnp.zeros((hkv, g, d), jnp.float32))
+
+        def body_p(p, carry):
+            m_prev, l_prev, acc = carry
+            blk = bt_ref[b, p]
+            ks = ks_ref[pl.ds(blk, 1)][0]                    # (Hkv,)
+            vs = vs_ref[pl.ds(blk, 1)][0]
+            k = k_ref[pl.ds(blk, 1)][0].astype(jnp.float32) \
+                * ks[None, :, None]
+            v = v_ref[pl.ds(blk, 1)][0].astype(jnp.float32) \
+                * vs[None, :, None]
+            scores = jax.lax.dot_general(
+                q, k, (((2,), (2,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32) * scale
+            pos = p * block_size + jax.lax.broadcasted_iota(
+                jnp.int32, (1, 1, block_size), 2)
+            valid = pos < ctx
+            scores = jnp.where(valid, scores, NEG_INF)
+            m_cur = jnp.max(scores, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            probs = jnp.where(valid, jnp.exp(scores - m_new), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + probs.sum(axis=-1, keepdims=True)
+            acc = acc * alpha + jax.lax.dot_general(
+                probs, v, (((2,), (0,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc
+
+        _, l_fin, acc = jax.lax.fori_loop(0, num_pages, body_p, init)
+        out = acc / jnp.maximum(l_fin, 1e-20)
+        o_ref[pl.ds(b, 1)] = out.astype(o_ref.dtype)[None]
+        return 0
+
+    jax.lax.fori_loop(0, batch, body_b, 0)
+
+
+def paged_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                          block_tables, context_lens,
+                          *, interpret: bool = True, flat: bool = None):
+    """Decode attention over an int8-quantized paged KV pool.
+
+    q: (B, H, D) float; k_pages/v_pages: (N, bs, Hkv, D) int8;
+    k_scale/v_scale: (N, Hkv) float32 per-(page, kv-head) scales;
+    tables: (B, P); lens: (B,). Dequant is fused into the page fetch —
+    the int8 pool is never materialized at full precision. A separate
+    entry point (not a flag on :func:`paged_attention`) so the fp16 hot
+    path keeps its exact jit signature and numerics.
+    """
+    b, h, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    p = block_tables.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    if flat is None:
+        flat = interpret
+
+    if flat:
+        kernel = functools.partial(_kernel_quant_flat, block_size=bs,
+                                   num_pages=p, batch=b)
+        out = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+            interpret=interpret,
+        )(block_tables, context_lens, qg, k_pages, v_pages,
+          k_scale, v_scale)
+        return out.reshape(b, h, d)
+
+    kernel = functools.partial(_kernel_quant, block_size=bs, num_pages=p)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, p),
+            in_specs=[
+                pl.BlockSpec((1, hkv, g, d),
+                             lambda b_, p_, bt, cl: (b_, 0, 0, 0)),
+                pl.BlockSpec((1, bs, hkv, d),
+                             lambda b_, p_, bt, cl: (bt[b_, p_], 0, 0, 0)),
+                pl.BlockSpec((1, bs, hkv, d),
+                             lambda b_, p_, bt, cl: (bt[b_, p_], 0, 0, 0)),
+                pl.BlockSpec((1, hkv),
+                             lambda b_, p_, bt, cl: (bt[b_, p_], 0)),
+                pl.BlockSpec((1, hkv),
+                             lambda b_, p_, bt, cl: (bt[b_, p_], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, hkv, g, d),
+                                   lambda b_, p_, bt, cl: (b_, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((hkv, g, 1), jnp.float32),
+                pltpu.VMEM((hkv, g, 1), jnp.float32),
+                pltpu.VMEM((hkv, g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, k_pages, v_pages, k_scale, v_scale)
+    return out.reshape(b, h, d)
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
                     *, interpret: bool = True, flat: bool = None):
     """q: (B, H, D); pools: (N, bs, Hkv, D); tables: (B, P); lens: (B,).

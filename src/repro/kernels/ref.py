@@ -76,6 +76,60 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, q_pos):
     return out.reshape(b, c, h, d).astype(q.dtype)
 
 
+def quantize_block_ref(x):
+    """Symmetric int8 block quantization, scale per (block, kv head).
+
+    x: (..., bs, Hkv, D) float — any leading block axes. Returns
+    (q int8 same shape, scales float32 (..., Hkv)) with
+    ``scale = max(amax/127, 1e-8)`` over each block's (token, dim) plane.
+    Every quantizing kernel (offload gather, staging quant) must agree
+    with this bit-for-bit.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-3, -1))           # (..., Hkv)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale[..., None, :, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_block_ref(q, scale, out_dtype=jnp.float32):
+    """Inverse of :func:`quantize_block_ref` (up to rounding error
+    bounded by scale/2 per element)."""
+    return (q.astype(jnp.float32)
+            * scale[..., None, :, None]).astype(out_dtype)
+
+
+def paged_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                              block_tables, context_lens):
+    """Decode attention over int8 pools: dequantize, then the fp oracle.
+
+    k_pages/v_pages: (N, bs, Hkv, D) int8; k_scale/v_scale: (N, Hkv) f32.
+    """
+    k = dequantize_block_ref(k_pages, k_scale)
+    v = dequantize_block_ref(v_pages, v_scale)
+    return paged_attention_ref(q, k, v, block_tables, context_lens)
+
+
+def paged_prefill_attention_quant_ref(q, k_pages, v_pages, k_scale,
+                                      v_scale, block_tables, q_pos):
+    """Chunked prefill attention over int8 pools (dequant-then-oracle)."""
+    k = dequantize_block_ref(k_pages, k_scale)
+    v = dequantize_block_ref(v_pages, v_scale)
+    return paged_prefill_attention_ref(q, k, v, block_tables, q_pos)
+
+
+def block_gather_quant_layers_ref(pools, indices):
+    """Fused gather+quantize oracle. pools: (L, N, bs, Hkv, D) float;
+    indices: (M,) -> (int8 (L, M, bs, Hkv, D), scales (L, M, Hkv))."""
+    return quantize_block_ref(pools[:, indices])
+
+
+def block_scatter_dequant_layers_ref(pools, indices, staging, scales):
+    """Fused dequantize+scatter oracle (promotion delivery path)."""
+    x = dequantize_block_ref(staging, scales, pools.dtype)
+    return pools.at[:, indices].set(x)
+
+
 def block_gather_ref(pages, indices):
     """Gather pool blocks into a contiguous staging buffer.
 

@@ -27,20 +27,47 @@ from repro.kernels import ops
 
 class PagedKVCache:
     def __init__(self, cfg, num_blocks: int, block_size: int,
-                 host_blocks: int = 0, dtype=jnp.bfloat16):
+                 host_blocks: int = 0, dtype=jnp.bfloat16,
+                 host_precision: str = "fp16"):
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.scratch_block = num_blocks          # masked-write sink (row N)
+        self.host_precision = host_precision
         nl, hkv, dh = cfg.num_layers, max(cfg.num_kv_heads, 1), \
             max(cfg.head_dim, 1)
         shape = (nl, num_blocks + 1, block_size, hkv, dh)
         self.k = jnp.zeros(shape, dtype)
         self.v = jnp.zeros(shape, dtype)
-        # host pool is numpy (pinned host memory stand-in)
-        hshape = (nl, max(host_blocks, 1), block_size, hkv, dh)
-        self.host_k = np.zeros(hshape, dtype)
-        self.host_v = np.zeros(hshape, dtype)
+        # host pool is numpy (pinned host memory stand-in); host_blocks=0
+        # means the tier is OFF — allocate nothing (the old max(n, 1)
+        # phantom block burned a full L*bs*Hkv*D slab per cache and let
+        # misrouted offloads silently "succeed" into it)
+        self.host_scales_k = self.host_scales_v = None
+        if host_blocks <= 0:
+            self.host_k = self.host_v = None
+        elif host_precision == "int8_host":
+            # quantized host tier: int8 payload + per-(block, kv-head)
+            # fp32 scales, half the fp16 bytes (the device pool keeps
+            # ``dtype`` — precision changes only as blocks cool to host)
+            hshape = (nl, host_blocks, block_size, hkv, dh)
+            self.host_k = np.zeros(hshape, np.int8)
+            self.host_v = np.zeros(hshape, np.int8)
+            self.host_scales_k = np.zeros((nl, host_blocks, hkv),
+                                          np.float32)
+            self.host_scales_v = np.zeros((nl, host_blocks, hkv),
+                                          np.float32)
+        else:
+            hshape = (nl, host_blocks, block_size, hkv, dh)
+            self.host_k = np.zeros(hshape, dtype)
+            self.host_v = np.zeros(hshape, dtype)
+
+    def _require_host(self, op: str) -> None:
+        if self.host_k is None:
+            raise RuntimeError(
+                f"host tier is disabled (host_blocks=0) but {op} was "
+                "reached — the engine must not route offload/upload "
+                "traffic to a cache constructed without a host pool")
 
     @property
     def scratch_slot(self) -> int:
@@ -146,8 +173,19 @@ class PagedKVCache:
     # ---- migration (paper §6.3) ---------------------------------------------
     def offload(self, gpu_blocks: List[int], host_blocks: List[int]):
         """D2H: gather device blocks (all layers, one kernel launch) into
-        staging, copy to the host pool."""
+        staging, copy to the host pool. An ``int8_host`` tier quantizes
+        inside the gather kernel (fused) so the D2H copy moves the int8
+        payload + scales — half the fp16 wire bytes."""
+        self._require_host("offload()")
         idx = jnp.asarray(gpu_blocks, jnp.int32)
+        if self.host_precision == "int8_host":
+            kq, ks = ops.block_gather_quant_layers(self.k, idx)
+            vq, vs = ops.block_gather_quant_layers(self.v, idx)
+            self.host_k[:, host_blocks] = np.asarray(kq)
+            self.host_v[:, host_blocks] = np.asarray(vq)
+            self.host_scales_k[:, host_blocks] = np.asarray(ks)
+            self.host_scales_v[:, host_blocks] = np.asarray(vs)
+            return
         self.host_k[:, host_blocks] = np.asarray(
             ops.block_gather_layers(self.k, idx))
         self.host_v[:, host_blocks] = np.asarray(
@@ -155,8 +193,20 @@ class PagedKVCache:
 
     def upload(self, host_blocks: List[int], gpu_blocks: List[int]):
         """H2D: read host blocks, scatter into (possibly new) device blocks
-        across every layer in one kernel launch."""
+        across every layer in one kernel launch. An ``int8_host`` tier
+        dequantizes inside the scatter kernel (fused) — the device pool
+        is always full precision, so decode/prefill attention never sees
+        int8 on device."""
+        self._require_host("upload()")
         idx = jnp.asarray(gpu_blocks, jnp.int32)
+        if self.host_precision == "int8_host":
+            self.k = ops.block_scatter_dequant_layers(
+                self.k, idx, jnp.asarray(self.host_k[:, host_blocks]),
+                jnp.asarray(self.host_scales_k[:, host_blocks]))
+            self.v = ops.block_scatter_dequant_layers(
+                self.v, idx, jnp.asarray(self.host_v[:, host_blocks]),
+                jnp.asarray(self.host_scales_v[:, host_blocks]))
+            return
         self.k = ops.block_scatter_layers(
             self.k, idx, jnp.asarray(self.host_k[:, host_blocks]))
         self.v = ops.block_scatter_layers(

@@ -126,10 +126,16 @@ class _Promotion:
 
 class PrefixStore:
     def __init__(self, pools: Sequence[DevicePool],
-                 host: Optional[HostPool], block_tokens: int):
+                 host: Optional[HostPool], block_tokens: int,
+                 host_precision: str = "fp16"):
         self.pools = {p.device: p for p in pools}
         self.host = host
         self.bt = block_tokens
+        # precision of the host tier's stored payload: entries created by
+        # promotions (and cross-replica pulls sourced from a same-config
+        # peer) inherit this tag so the transfer plane can price the wire
+        # bytes they move (``fp16`` | ``int8_host``)
+        self.host_precision = host_precision
         self.tree = RadixTree(block_tokens, on_split=self._on_split)
         self.by_block: Dict[Tuple[int, int], BlockEntry] = {}
         # rid -> pinned nodes, appended shallow-to-deep (release walks the
@@ -357,7 +363,8 @@ class PrefixStore:
                         if nd.start <= last < nd.end)
             e = BlockEntry(idx, {d: blocks_by_device[d][j]
                                  for d in self.pools}, self.bt,
-                           node=node, source=source)
+                           node=node, source=source,
+                           precision=self.host_precision)
             node.entries[idx] = e
             for d, bid in e.blocks.items():
                 self.by_block[(d, bid)] = e
@@ -664,7 +671,8 @@ class PrefixStore:
             node = next(nd for nd in path if nd.start <= last < nd.end)
             e = BlockEntry(idx, {d: blocks_by_device[d][j]
                                  for d in self.pools}, self.bt,
-                           node=node, source="remote")
+                           node=node, source="remote",
+                           precision=self.host_precision)
             node.entries[idx] = e
             for nd in path:      # pin the path down to the adopting node
                 self._pin(rid, nd)

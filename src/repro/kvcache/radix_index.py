@@ -89,6 +89,12 @@ class BlockEntry:
     node: "RadixNode" = None         # owning node (kept in sync on splits)
     source: str = "prefill"   # "prefill" | "promo" | "prefetch" | "remote"
     prefetched_at: Optional[float] = None   # delivery time, unhit prefetch
+    # precision of the tier copy this entry was filled FROM: device entries
+    # are always full precision once ready (upload dequantizes in-kernel),
+    # but a promotion/pull in flight from an int8 host tier is tagged so
+    # match/pin knows the wire payload it is waiting on — the transfer
+    # plane prices it via ``PlatformModel.block_bytes_for(precision)``
+    precision: str = "fp16"
 
 
 def _entry_last_token(e: "BlockEntry", bt: int) -> int:

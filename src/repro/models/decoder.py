@@ -266,17 +266,24 @@ def prefill(cfg, stacked, x, positions, cache_size: Optional[int] = None):
     return h, cache
 
 
-def _paged_ffn(cfg, lp, h):
-    """FFN sub-block of the paged serving bodies — dense SwiGLU only.
+def _paged_ffn(cfg, lp, h, valid=None):
+    """FFN sub-block of the paged serving bodies — dense SwiGLU or
+    masked MoE.
 
-    MoE expert FFNs are deliberately NOT run here: the paged bodies
-    operate on bucket-padded batches/chunks, and padded rows would route
-    through ``moe_ffn``'s sort-based capacity dispatch, crowding real
-    tokens out of expert capacity (outputs would diverge from the dense
-    path nondeterministically with bucket size). MoE requests therefore
-    keep the per-request dense prefill path (``JaxBackend._prefill_one``)
-    and attention-only paged decode; masked MoE routing is a ROADMAP
-    item."""
+    The paged bodies operate on bucket-padded batches/chunks, so MoE
+    routing must pin padded rows out of the expert dispatch: ``valid``
+    (same leading shape as ``h``'s tokens, True = real) feeds
+    ``moe_ffn``'s ``pad_mask``, which routes padded rows to a sentinel
+    expert that sorts behind every real segment and scatters out of
+    bounds. Without the mask, padded rows crowd real tokens out of
+    expert capacity and outputs diverge from the dense path
+    nondeterministically with bucket size (the pre-fix hazard that kept
+    MoE off the batched paged paths). Aux loss is discarded — serving
+    runs no optimizer."""
+    if "we1" in lp:
+        out, _ = M.moe_ffn(cfg, lp, L.rms_norm(h, lp["mlp_norm"]),
+                           pad_mask=valid)
+        return h + out
     if "w1" in lp:
         return h + L.mlp(lp, L.rms_norm(h, lp["mlp_norm"]))
     return h
@@ -305,6 +312,7 @@ def paged_decode(cfg, stacked, x, k_pool, v_pool, tables, positions,
     from repro.kernels import ops
 
     pos = positions[:, None]                             # (B, 1)
+    valid = (attn_lens > 0)[:, None]                     # (B, 1) real rows
 
     def body(h, xs):
         lp, kl, vl = xs
@@ -315,7 +323,7 @@ def paged_decode(cfg, stacked, x, k_pool, v_pool, tables, positions,
         kl, vl = ops.kv_token_write(kl, vl, k[:, 0], v[:, 0], slots)
         out = ops.paged_attention(q[:, 0], kl, vl, tables, attn_lens)
         h = h + L.attn_out(lp, out[:, None])
-        h = _paged_ffn(cfg, lp, h)
+        h = _paged_ffn(cfg, lp, h, valid)
         return h, (kl, vl)
 
     h, (k_pool, v_pool) = stack_scan(body, x, (stacked, k_pool, v_pool))
@@ -349,6 +357,7 @@ def paged_prefill(cfg, stacked, x, k_pool, v_pool, tables, q_pos,
     from repro.kernels import ops
 
     pos = jnp.maximum(q_pos, 0)                          # rope positions
+    valid = q_pos >= 0                                   # (B, C) real queries
 
     def body(h, xs):
         lp, kl, vl = xs
@@ -359,7 +368,7 @@ def paged_prefill(cfg, stacked, x, k_pool, v_pool, tables, q_pos,
         kl, vl = ops.kv_chunk_write(kl, vl, k, v, wpages, wstart, wcount)
         out = ops.paged_prefill_attention(q, kl, vl, tables, q_pos)
         h = h + L.attn_out(lp, out)
-        h = _paged_ffn(cfg, lp, h)
+        h = _paged_ffn(cfg, lp, h, valid)
         return h, (kl, vl)
 
     h, (k_pool, v_pool) = stack_scan(body, x, (stacked, k_pool, v_pool))

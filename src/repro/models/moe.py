@@ -42,10 +42,18 @@ def capacity(num_tokens: int, cfg, factor: float = None) -> int:
     return max(cap, cfg.experts_per_token, 4)
 
 
-def moe_ffn(cfg, lp, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_ffn(cfg, lp, x, pad_mask=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) -> (out, aux_loss).
 
     lp holds one layer's expert params: wr (d,E), we1/we3 (E,d,f), we2 (E,f,d).
+
+    ``pad_mask`` (B, S) bool marks real tokens. Padded rows (False) are
+    routed to a *sentinel* expert id ``E``: the stable argsort keeps them
+    behind every real expert segment and the pack scatter drops them out
+    of bounds, so bucket padding can never crowd a real token out of
+    expert capacity (and padded outputs come back exactly zero). Without
+    a mask every token is real — that path is bit-identical to the
+    original dispatch.
     """
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
@@ -58,25 +66,41 @@ def moe_ffn(cfg, lp, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     gate, idx = jax.lax.top_k(probs, k)                      # (T, k)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
 
-    # load-balance aux loss (Switch-style) + router z-loss
-    me = probs.mean(0)                                       # (E,)
-    ce = jnp.zeros(e).at[idx.reshape(-1)].add(1.0) / (t * k)
-    aux = e * jnp.sum(me * ce) * cfg.moe_router_aux_coef
-    aux = aux + 1e-4 * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    if pad_mask is not None:
+        valid = pad_mask.reshape(t)
+        vf = valid.astype(jnp.float32)
+        nv = jnp.maximum(vf.sum(), 1.0)
+        flat_e = jnp.where(jnp.repeat(valid, k), flat_e, e)  # sentinel id
+        gate = gate * vf[:, None]
+        # load-balance aux + z-loss over real tokens only
+        me = (probs * vf[:, None]).sum(0) / nv               # (E,)
+        ce = jnp.zeros(e).at[flat_e].add(
+            jnp.repeat(vf, k), mode="drop") / (nv * k)
+        aux = e * jnp.sum(me * ce) * cfg.moe_router_aux_coef
+        aux = aux + 1e-4 * jnp.sum(
+            jax.nn.logsumexp(logits, axis=-1) ** 2 * vf) / nv
+    else:
+        # load-balance aux loss (Switch-style) + router z-loss
+        me = probs.mean(0)                                   # (E,)
+        ce = jnp.zeros(e).at[flat_e].add(1.0) / (t * k)
+        aux = e * jnp.sum(me * ce) * cfg.moe_router_aux_coef
+        aux = aux + 1e-4 * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
 
     # --- sort-based dispatch -------------------------------------------------
     cap = capacity(t, cfg)
-    flat_e = idx.reshape(-1)                                 # (T*k,)
     sort_idx = jnp.argsort(flat_e, stable=True)              # (T*k,)
     sorted_e = flat_e[sort_idx]
     token_of = sort_idx // k                                 # source token row
-    # rank of each entry within its expert segment
-    counts = jnp.zeros(e, jnp.int32).at[sorted_e].add(1)
+    # rank of each entry within its expert segment, counted over E+1 ids
+    # so the sentinel segment gets a well-defined (discarded) rank too
+    counts = jnp.zeros(e + 1, jnp.int32).at[sorted_e].add(1)
     starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
                               jnp.cumsum(counts)[:-1]])
     rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
 
-    # pack tokens into (E, cap, d); overflow (rank >= cap) dropped via OOB
+    # pack tokens into (E, cap, d); overflow (rank >= cap) and sentinel
+    # entries (expert id E — the padded rows) are dropped via OOB
     rank_c = jnp.where(rank < cap, rank, cap)                # cap == OOB row
     buf = jnp.zeros((e, cap, d), x.dtype)
     buf = buf.at[sorted_e, rank_c].set(xt[token_of], mode="drop")

@@ -180,3 +180,105 @@ def test_cutoff_is_argmax_hypothesis(upload_ms, fixed_ms, prefill_ms,
     assert best >= -1e-15
     for k in range(k_max + 1):
         assert plat.promote_gain(k, backlog) <= best + 1e-15
+
+
+# ---------------------------------------------------------------------------
+# decode_throughput edge case (PR 8 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_decode_throughput_zero_or_negative_batch_is_zero():
+    """An empty batch decodes zero tokens per second. The seed returned
+    1.0 here (a phantom token/s out of thin air); no shipped caller ever
+    passes batch_size <= 0 — hypothetical-rate math goes through
+    ``per_seq_decode_rate`` — so returning the physically true 0.0 can
+    change nothing downstream, but a future caller dividing by the old
+    phantom rate would have silently mis-sized an admission."""
+    for plat in PLATFORMS.values():
+        assert plat.decode_throughput(0) == 0.0
+        assert plat.decode_throughput(-3) == 0.0
+        assert plat.decode_throughput(1) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# precision-tiered transfer economics (PR 8 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_block_bytes_for_precisions():
+    for plat in PLATFORMS.values():
+        assert plat.block_bytes_for() == plat.block_bytes
+        assert plat.block_bytes_for("fp16") == plat.block_bytes
+        assert plat.block_bytes_for("int8_host") == plat.block_bytes // 2
+    with pytest.raises(ValueError):
+        A100_PCIE.block_bytes_for("fp4")
+
+
+def test_fp16_precision_arg_is_bit_identical():
+    """precision="fp16" must not even touch the float math — the legacy
+    figures are gated byte-identical with the tier off."""
+    for plat in PLATFORMS.values():
+        for n in (0, 1, 7, 256):
+            assert plat.upload_time(n, "fp16") == plat.upload_time(n)
+            assert plat.offload_time(n, "fp16") == plat.offload_time(n)
+            assert plat.transfer_time(n, "fp16") == plat.transfer_time(n)
+        for k in (0, 1, 9):
+            for w in (0.0, 0.05):
+                assert (plat.promote_gain(k, w, "fp16")
+                        == plat.promote_gain(k, w))
+                assert (plat.promotion_cutoff(k, w, "fp16")
+                        == plat.promotion_cutoff(k, w))
+
+
+def test_int8_halves_per_block_wire_time_not_fixed_cost():
+    for plat in PLATFORMS.values():
+        for n in (1, 7, 256):
+            fixed = plat.upload_time(0)
+            assert plat.upload_time(n, "int8_host") == pytest.approx(
+                fixed + (plat.upload_time(n) - fixed) / 2)
+            fixed = plat.offload_time(0)
+            assert plat.offload_time(n, "int8_host") == pytest.approx(
+                fixed + (plat.offload_time(n) - fixed) / 2)
+
+
+def test_int8_cutoff_never_below_fp16_cutoff_seeded():
+    """gain_int8(k) = gain_fp16(k) + (U_fp16(k) - U_int8(k)); the added
+    term is >= 0 and non-decreasing in k, so the argmax (ties -> larger)
+    can only move right: cheaper wire bytes never demote a block the
+    fp16 economics would have promoted."""
+    rng = np.random.default_rng(8)
+    for _ in range(300):
+        plat = mk_platform(
+            upload_ms=float(rng.uniform(0.01, 30.0)),
+            fixed_ms=float(rng.uniform(0.0, 50.0)),
+            prefill_ms=float(rng.uniform(0.01, 1.0)),
+            chunk=int(rng.integers(0, 6)),
+            bt=int(rng.integers(1, 33)))
+        k_max = int(rng.integers(0, 24))
+        backlog = float(rng.uniform(0.0, 0.2)) * int(rng.integers(0, 2))
+        assert (plat.promotion_cutoff(k_max, backlog, "int8_host")
+                >= plat.promotion_cutoff(k_max, backlog))
+
+
+def test_tcp_link_crossover_int8_promotes_where_fp16_recomputes():
+    """The fig18 crossover demonstration, pinned: on the tcp_25g link at
+    50 ms backlog there is a run length where halving the wire bytes
+    flips the decision from full recompute to promote."""
+    from repro.core.costmodel import make_link
+    link = make_link(A100_PCIE, "tcp_25g")
+    split = [k for k in range(1, 33)
+             if link.promotion_cutoff(k, 0.05, "int8_host") > 0
+             and link.promotion_cutoff(k, 0.05) == 0]
+    assert split, "no crossover run length on tcp_25g at 0.05s backlog"
+    assert 8 in split
+
+
+@pytest.mark.fuzz
+@given(st.floats(0.01, 30.0), st.floats(0.0, 50.0), st.floats(0.01, 1.0),
+       st.integers(0, 6), st.integers(1, 33), st.integers(0, 24),
+       st.floats(0.0, 0.3))
+@settings(max_examples=300, deadline=None)
+def test_int8_cutoff_never_below_fp16_hypothesis(upload_ms, fixed_ms,
+                                                 prefill_ms, chunk, bt,
+                                                 k_max, backlog):
+    plat = mk_platform(upload_ms, fixed_ms, prefill_ms, chunk, bt)
+    assert (plat.promotion_cutoff(k_max, backlog, "int8_host")
+            >= plat.promotion_cutoff(k_max, backlog))

@@ -57,3 +57,41 @@ def test_system_pool_conserved(served):
     eng, _, rep = served
     p = eng.pools[0]
     assert p.free + len(p.pending_free) == p.num_blocks
+
+
+@pytest.fixture(scope="module")
+def served_int8():
+    """Same workload under the int8 host tier: every offload quantizes on
+    D2H, every upload/promotion dequantizes on H2D."""
+    cfg = get_smoke_config("stablelm_3b")
+    ecfg = EngineConfig.preset(
+        "tokencake", gpu_blocks=128, host_blocks=256, max_running=8,
+        temporal=TemporalConfig(score_threshold=-1.0,
+                                pressure_watermark=0.0,
+                                kv_precision="int8_host"))
+    backend = JaxBackend(cfg, ecfg, A100_PCIE)
+    eng = Engine(ecfg, A100_PCIE, backend=backend)
+    for t, g in build_workload("deep_research", qps=2.0, n_apps=2, seed=0):
+        for n in g.nodes.values():
+            n.prompt_len = min(n.prompt_len, 64)
+            n.decode_segments = [min(s, 16) for s in n.decode_segments]
+        eng.submit_app(g, t)
+    rep = eng.run(max_time=5000)
+    return eng, backend, rep
+
+
+def test_system_int8_tier_serves_and_prices_wire_bytes(served_int8):
+    import numpy as np
+    eng, backend, rep = served_int8
+    assert rep["apps_finished"] == 2
+    assert rep["offloads"] >= 1 and rep["offloads"] == rep["uploads"]
+    assert backend.cache.host_k.dtype == np.int8
+    for rid, toks in backend.generated.items():
+        assert all(0 <= t < 512 for t in toks), rid
+    # the transfer ledgers price wire traffic at the int8 block size:
+    # every booked byte count is a whole multiple of block_bytes // 2,
+    # and a same-shape fp16 run would book exactly twice the bytes
+    bpb = A100_PCIE.block_bytes_for("int8_host")
+    assert bpb * 2 == A100_PCIE.block_bytes
+    assert rep["d2h_bytes"] > 0 and rep["d2h_bytes"] % bpb == 0
+    assert rep["h2d_bytes"] > 0 and rep["h2d_bytes"] % bpb == 0
