@@ -1,0 +1,99 @@
+"""Fig. 21 — serving front door: sustained QPS and TTFT/TPOT tails.
+
+Poisson arrivals of single-agent ``/generate`` requests drive the
+:class:`repro.launch.http_server.FrontDoor` in virtual time (same state
+machine the HTTP server pumps, minus socket noise). The trace is
+**repeat-heavy**: a bounded pool of distinct prompts, so a fraction of
+arrivals are byte-identical repeats of earlier requests — the traffic
+CacheWise (PAPERS.md) measures in coding agents and the exact-match
+response cache is built to absorb.
+
+Rows (same engine, same trace, one knob each):
+
+* ``quantum_nocache``     — per-quantum admission (legacy scheduling
+  granularity), no response cache.
+* ``continuous_nocache``  — token-level continuous batching: arrivals
+  join the next decode *iteration*; TTFT drops while throughput holds.
+* ``continuous_cache``    — continuous batching + exact-match response
+  cache: repeats skip the engine entirely (zero steps, TTFT 0).
+
+Reported per row: sustained QPS, p50/p99 TTFT and TPOT, mean/p99
+end-to-end latency, completions / rejections / cache hits.
+
+Standalone: ``python benchmarks/fig21_serving.py [--quick] [--json PATH]``
+(CI ``serve-smoke`` runs ``--quick`` and asserts the cache row has
+hits > 0 and lower mean latency than cache-off, and p99 TTFT finite.)
+"""
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import A100_PCIE, CsvWriter
+from repro.core.engine import Engine, EngineConfig
+from repro.launch.http_server import FrontDoor, synth_tokens
+from repro.launch.response_cache import ResponseCache
+
+
+def run_serving(continuous, cache_on, n_requests, qps, distinct,
+                prompt_len=64, max_tokens=64, quantum=16, seed=7,
+                max_pending=256):
+    """One serving run over a repeat-heavy Poisson trace; returns the
+    FrontDoor report."""
+    eng = Engine(EngineConfig.preset(
+        "tokencake", gpu_blocks=512, max_running=48, sched_quantum=quantum,
+        continuous_batching=continuous), A100_PCIE)
+    cache = ResponseCache(ttl=1e9, clock=lambda: eng.clock) \
+        if cache_on else None
+    fd = FrontDoor(eng, cache=cache, max_pending=max_pending)
+    prompts = [synth_tokens(f"fig21/{i}", prompt_len)
+               for i in range(distinct)]
+    rng = random.Random(seed)
+    t = 0.0
+    for _ in range(n_requests):
+        t += rng.expovariate(qps)
+        fd.submit({"prompt": prompts[rng.randrange(distinct)],
+                   "max_tokens": max_tokens}, arrival=t)
+    return fd.drive(max_time=1e6)
+
+
+ROWS = [
+    ("quantum_nocache", False, False),
+    ("continuous_nocache", True, False),
+    ("continuous_cache", True, True),
+]
+
+
+def run(csv: CsvWriter, quick: bool = False) -> dict:
+    # trace must be long relative to per-request service time, or repeats
+    # all arrive while their first instance is still decoding and the
+    # cache never gets a hit window
+    n, qps, distinct, mt = (160, 15.0, 8, 32) if quick \
+        else (500, 18.0, 16, 48)
+    out = {}
+    for name, continuous, cache_on in ROWS:
+        rep = run_serving(continuous, cache_on, n_requests=n, qps=qps,
+                          distinct=distinct, max_tokens=mt)
+        out[name] = rep
+        csv.row(f"fig21.{name}", rep["latency"]["mean"] * 1e6,
+                f"qps={rep['qps_sustained']:.2f};"
+                f"ttft_p50={rep['ttft']['p50'] * 1e3:.2f}ms;"
+                f"ttft_p99={rep['ttft']['p99'] * 1e3:.2f}ms;"
+                f"tpot_p50={rep['tpot']['p50'] * 1e3:.2f}ms;"
+                f"tpot_p99={rep['tpot']['p99'] * 1e3:.2f}ms;"
+                f"lat_p99={rep['latency']['p99'] * 1e3:.1f}ms;"
+                f"hits={rep['cache_hits']};"
+                f"done={rep['completed']};"
+                f"rej={rep['rejected']}")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_args, write_json
+    args = bench_args()
+    out = run(CsvWriter(), quick=args.quick)
+    rows = [dict(rep, row=name) for name, rep in out.items()]
+    if args.json:
+        write_json("fig21_serving", rows, args.json)

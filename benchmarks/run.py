@@ -32,6 +32,7 @@ FIGURES = [
     ("fig18_tiered", "Beyond-paper: tiered offload (paper §9)"),
     ("fig19_seeds", "Beyond-paper: seed robustness of the ablation"),
     ("fig20_cluster", "Beyond-paper: cluster routing policies"),
+    ("fig21_serving", "Beyond-paper: serving front door QPS/TTFT/TPOT"),
     ("roofline", "Roofline terms from dry-run"),
 ]
 

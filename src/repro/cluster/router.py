@@ -25,6 +25,23 @@ the replica with the earliest next virtual time, and every cross-replica
 message (external spawn, node finish, pull booking) lands as an event
 stamped with the sender's clock. Everything is virtual-time-driven, so
 a run is a pure function of (engines' seeds, arrival trace, policy).
+
+Key invariants:
+
+* **Source pins outlive the pull** — a booked pull pins the source
+  replica's radix run until the destination's ``pull_done`` (or a
+  booking-time void) releases it; the source can never reclaim blocks
+  a wire transfer is still reading.
+* **N=1 is bit-identical** — a single-replica cluster routes everything
+  home and must reproduce the bare engine's report exactly (fig20's
+  ``parity1`` row gates this); the router adds behavior only at N>1.
+* **Earliest-clock scheduling** — the co-simulation always advances the
+  replica with the smallest next virtual time, so cross-replica events
+  are never delivered into a replica's past.
+
+Layer placement (cluster above core, below launch) and the pull pricing
+table are in docs/ARCHITECTURE.md; the cluster frontend's serving
+surface is in docs/SERVING_API.md.
 """
 from __future__ import annotations
 

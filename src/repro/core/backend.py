@@ -46,6 +46,13 @@ class SimBackend:
     def invalidate(self, rid):
         pass
 
+    def generated_tokens(self, rid):
+        """Decoded token ids for a request, or None when this backend
+        does not materialize tokens (pure simulation — the serving front
+        door synthesizes deterministic placeholder ids instead; see
+        launch/http_server.py)."""
+        return None
+
 
 def _bucket(n: int) -> int:
     """Next power of two ≥ n — pad batch/table shapes so the jitted decode
@@ -189,6 +196,13 @@ class JaxBackend:
         (all layers in one ``block_scatter_layers`` launch per tensor,
         the same H2D data plane request uploads ride)."""
         self.cache.upload(host_blocks, gpu_blocks)
+
+    def generated_tokens(self, rid: str) -> Optional[List[int]]:
+        """Decoded token ids so far — the serving front door's streaming
+        source (``/generate`` chunks are cut from this list as it grows
+        between engine steps)."""
+        gen = self.generated.get(rid)
+        return list(gen) if gen is not None else None
 
     def invalidate(self, rid: str):
         """Engine hook: the request's device blocks were released (evicted)

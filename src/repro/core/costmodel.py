@@ -9,6 +9,23 @@ system decode throughput. Constants are calibrated per platform:
    (28.5x slower than the 63.7 ms round trip).
  * ``TPU_V5E`` is the target platform: same linear per-block model with the
    host-DMA bandwidth, plus ICI constants for the multi-pod path.
+
+Key invariants:
+
+* **One crossover rule everywhere** — ``promotion_cutoff`` (transfer
+  time vs recompute time per block run) is the single source of the
+  promote-vs-recompute decision; the host tier, the prefetcher and the
+  cluster router all call it, the latter two on a ``make_link``-derived
+  platform so the same rule prices PCIe, RDMA and TCP paths.
+* **Precision reprices, never re-models** — int8 host/wire blocks halve
+  ``block_bytes`` via ``KV_PRECISIONS``; every time formula is linear in
+  bytes, so quantization changes inputs, not equations.
+* **Virtual seconds only** — every function returns seconds on the
+  engine's virtual clock; nothing here reads wall time.
+
+The decision diagram lives in docs/ARCHITECTURE.md (promote vs
+recompute); serving-level latency percentiles derived from these times
+surface through ``GET /v1/report`` (docs/SERVING_API.md).
 """
 from __future__ import annotations
 

@@ -17,6 +17,35 @@ same machinery (§7.3): ``baseline`` (vLLM), ``vllm_prefix``, ``agent``
 
 Time is virtual: the execution backend returns per-iteration durations
 (cost model in simulation, wall clock for the JAX backend).
+
+Batching granularity: by default the 4-phase pass runs once per
+scheduling quantum (``sched_quantum`` decode iterations execute between
+passes). ``EngineConfig(continuous_batching=True)`` interleaves a light
+admission pass *between individual decode iterations* — arrivals, tool
+returns and transfer completions landing mid-quantum join the very next
+iteration's batch instead of waiting for the quantum boundary (the
+token-level continuous batching the serving front door runs on; see
+docs/SERVING_API.md). Both paths produce token-identical outputs on the
+real data plane: paged attention rows are independent, so batch
+composition never changes a request's decoded tokens
+(tests/test_http_server.py pins the equivalence).
+
+Key invariants this module maintains (details in docs/ARCHITECTURE.md):
+
+* **Pin-before-allocate** — admission pins matched prefix blocks (and
+  takes promotion holds on host sources) *before* allocating private
+  blocks, so an allocation can never reclaim the blocks the same
+  request is about to share; deferral rolls the pins back.
+* **Exactly-once cancel** — evicting a request with an in-flight
+  transfer cancels through ``TransferManager.cancel_owner``; teardown
+  (e.g. promotion host-pin release) runs exactly once whether the slot
+  was still pending or already copying.
+* **Compute gating** — a request whose prefix promotion is still on the
+  copy stream cannot prefill or decode until ``promo_ready_at``: the
+  transfer's latency lands on the requester, not just the stream.
+* **Unready-entry discipline** — published prefix entries flip ready
+  only after the publisher's prefill actually executed; sharers never
+  read unwritten KV.
 """
 from __future__ import annotations
 
@@ -89,6 +118,15 @@ class EngineConfig:
     # request overshoots a segment boundary and no pending event is skipped;
     # 1 = schedule every iteration (vLLM-exact), 4 = default speedup.
     sched_quantum: int = 8
+    # token-level continuous batching: run the quantum one decode
+    # iteration at a time, draining due events and re-running (light)
+    # admission between iterations, so arrivals / tool returns / transfer
+    # completions join the next iteration's batch instead of waiting for
+    # the quantum boundary. The heavyweight phases (spatial re-partition,
+    # temporal offload/upload planning, prefetch) still run once per
+    # quantum. Off by default: every figure row and test keeps the
+    # legacy per-quantum semantics bit-identical.
+    continuous_batching: bool = False
     spatial: SpatialConfig = field(default_factory=SpatialConfig)
     temporal: TemporalConfig = field(default_factory=TemporalConfig)
 
@@ -1200,7 +1238,14 @@ class Engine:
         at its own segment boundary); the step lasts a full quantum of batch
         iterations. Events landing mid-quantum are handled at the next step
         boundary (max skew = quantum * iter_time, well under tool latency).
+
+        With ``cfg.continuous_batching`` the quantum is executed one
+        iteration at a time instead (see :meth:`_execute_continuous`):
+        the clock advances *inside* the call and the return value is only
+        the minimum-progress epsilon when nothing could run.
         """
+        if self.cfg.continuous_batching:
+            return self._execute_continuous()
         prefill_tokens = 0
         # a request whose prefix promotion is still on the copy stream
         # cannot compute yet — its suffix prefill attends over KV the
@@ -1263,6 +1308,88 @@ class Engine:
                         self.prefix_store.mark_ready(rid)
             self._post_decode(decode_batch, q, grown=pre_grown)
         return max(duration, 1e-4)
+
+    def _execute_continuous(self) -> float:
+        """Token-level continuous batching: one decode iteration at a
+        time, with due events drained and a light admission pass run
+        *between* iterations — an arrival or tool return landing after
+        iteration ``i`` is in iteration ``i+1``'s batch, not next
+        quantum's. Shapes stay bucketed (``backend._bucket``), so a batch
+        that grows mid-quantum re-uses the existing (batch, table) jit
+        caches instead of retracing.
+
+        The clock advances in here (events must be compared against the
+        true mid-quantum time); the caller's ``clock += returned`` is a
+        no-op except for the minimum-progress epsilon when nothing was
+        computable at all."""
+        q = self.cfg.sched_quantum
+        advanced = 0.0
+        for _ in range(q):
+            # (re)compute prefills whose promotion gate has passed —
+            # newly admitted requests from the mid-quantum admission
+            # below land here on the next iteration
+            prefill_tokens = 0
+            for req in self.running:
+                if req.prefill_pending and req.promo_ready_at <= self.clock:
+                    prefill_tokens += req.prefill_pending
+                    self.metrics["prefill_tokens"] += req.prefill_pending
+                    self.metrics["recomputed_tokens"] += max(
+                        req.prefill_pending - len(req.prompt_tokens), 0)
+                    req.prefill_pending = 0
+            if prefill_tokens:
+                dt = self.platform.recompute_time(prefill_tokens)
+                self.clock += dt
+                advanced += dt
+            decode_batch = [r for r in self.running
+                            if r.promo_ready_at <= self.clock]
+            gated = [r.promo_ready_at for r in self.running
+                     if r.promo_ready_at > self.clock]
+            if not decode_batch:
+                if gated:
+                    # jump to the earliest promotion delivery; events due
+                    # in between (e.g. the promotion's own transfer_done)
+                    # are drained below before the next iteration
+                    dt = min(gated) - self.clock
+                    self.clock += dt
+                    advanced += dt
+                    self._process_events_until(self.clock)
+                    continue
+                break
+            pre_grown = self.backend is not None
+            if pre_grown:
+                for req in list(decode_batch):
+                    self._grow_blocks(req, 1)
+                decode_batch = [r for r in decode_batch
+                                if r.state == ReqState.RUNNING]
+                if not decode_batch:
+                    continue
+            dt = self.platform.decode_iter_time(len(decode_batch))
+            if self.backend is not None:
+                self.backend.decode(decode_batch)
+            # same unready-entry discipline as the quantum path: entries
+            # published by requests whose prefill just executed flip
+            # ready; promotion-gated publishers stay unready
+            if self._pending_ready:
+                pending, self._pending_ready = self._pending_ready, []
+                gated_rids = {r.rid for r in self.running
+                              if r.promo_ready_at > self.clock}
+                for rid in pending:
+                    if rid in gated_rids:
+                        self._pending_ready.append(rid)
+                    else:
+                        self.prefix_store.mark_ready(rid)
+            self._post_decode(decode_batch, 1, grown=pre_grown)
+            self.clock += dt
+            advanced += dt
+            # continuous admission: drain events that landed inside this
+            # iteration (call_finish, transfer_done, arrivals) and admit
+            # newly ready work into the NEXT iteration's batch. The
+            # heavyweight phases (spatial re-partition, offload/upload
+            # planning, prefetch) stay on the quantum boundary.
+            self._process_events_until(self.clock)
+            if self.waiting:
+                self._phase_admission()
+        return 1e-4 if advanced == 0.0 else 0.0
 
     def _grow_blocks(self, req: Request, q_step: int) -> bool:
         """Allocate the blocks ``req`` needs to decode its share of a
@@ -1350,6 +1477,13 @@ class Engine:
                 tr = self.transfers.on_event(payload)
                 if tr is not None:
                     self._transfer_done(tr)
+            elif kind == "callback":
+                # deferred external action on the virtual timeline (the
+                # serving front door schedules trace arrivals this way so
+                # admission — and its cache / backpressure decisions —
+                # happens at the arrival instant, mid-quantum under
+                # continuous batching, not at the next step boundary)
+                payload(self.clock)
 
     def _transfer_done(self, tr: Transfer) -> None:
         """Completion dispatch for the unified transfer plane. Cancelled

@@ -26,6 +26,24 @@ the engine's ``swap_blocks`` / ``h2d_bytes`` / ``d2h_bytes`` /
 ``stream_wait_s`` metrics, so the promote-vs-recompute crossover and the
 figure rows read one consistent ledger no matter which state machine
 issued the copy.
+
+Key invariants:
+
+* **Exactly-once cancel** — ``cancel`` on a pending slot unbooks it and
+  drops it from the queue; on an in-flight slot it marks the record and
+  lets the stream run it out (the completion event still fires, but the
+  per-kind finisher sees ``cancelled`` and releases only what the
+  transfer still holds). A second cancel of either is a no-op.
+* **Generation-checked completions** — every re-book bumps the slot's
+  generation; a completion event carrying a stale generation is ignored,
+  so displacement can never double-complete a transfer.
+* **Priority is strict, not aging** — upload > promotion > remote >
+  prefetch > offload, ties FIFO; only *pending* (not started) slots are
+  displaced, so booked start times never move backward.
+
+The priority table and its rationale live in docs/ARCHITECTURE.md; the
+serving frontend surfaces ``describe()`` via ``GET /v1/report``
+(docs/SERVING_API.md).
 """
 from __future__ import annotations
 

@@ -46,6 +46,23 @@ block *content* moves through the backend (``copy_blocks`` for COW clones,
 the chunked suffix prefill for everything past the match). Entries publish
 *unready* at admission and flip ready only after the publisher's prefill
 executed, so a sharer can never attend over unwritten KV.
+
+Key invariants:
+
+* **Pin-before-allocate** — a sharer acquires (pins) its matched path
+  *before* the engine allocates its private blocks, so allocation
+  pressure triggered by that very admission can never reclaim the
+  prefix it is about to share.
+* **Unready-entry discipline** — entries published at admission stay
+  unready until the publisher's prefill has actually executed (and, for
+  promotion-gated publishers, until the promotion delivered); matching
+  skips unready entries, so no request ever attends over unwritten KV.
+* **Path pinning** — a node's pin count is always >= the sum of its
+  descendants'; reclaim only ever takes refcount-0 frontier nodes, so a
+  pinned branch can never lose an ancestor.
+
+The radix-tree / two-tier lifecycle (device entries, host publishes,
+promotion gates) is diagrammed in docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 

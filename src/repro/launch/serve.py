@@ -193,6 +193,10 @@ def main():
                     choices=["rdma_100g", "tcp_25g", "none"],
                     help="inter-replica fabric for KV pulls")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the §6.2 endpoints + /generate over HTTP "
+                         "on PORT instead of running a simulated workload "
+                         "(see docs/SERVING_API.md)")
     args = ap.parse_args()
 
     plat = PLATFORMS[args.platform]
@@ -200,6 +204,15 @@ def main():
     if args.prefetch:
         kw.update(host_promotion=True,
                   temporal=TemporalConfig(prefetch=True))
+    if args.http is not None:
+        import asyncio
+
+        from repro.launch.http_server import HttpServer
+        srv = HttpServer(port=args.http,
+                         engine_kw=dict(kw, continuous_batching=True))
+        log.info("serving on http://%s:%d", srv.host, args.http)
+        asyncio.run(srv.serve_forever())
+        return
     if args.replicas > 1:
         _serve_cluster(args, plat, kw)
         return

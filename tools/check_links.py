@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo docs (CI ``link-check`` job).
+
+Checks, over README.md, ROADMAP.md and docs/**.md:
+
+* every relative markdown link ``[text](path)`` resolves to a file or
+  directory in the repo (http(s)/mailto links are skipped — CI runs
+  offline);
+* ``#anchor`` fragments resolve to a heading in the target file
+  (GitHub slugging: lowercase, spaces to dashes, punctuation dropped);
+* no reference to an absolute path outside the repository (the
+  dead-pointer class: docs citing ``/root/...`` file sets that are not
+  part of the checkout) — cite PAPERS.md entries instead.
+
+Exit 0 when clean; exit 1 with one line per broken reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ["README.md", "ROADMAP.md", "docs/*.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# absolute container paths are never valid in a checkout: the repo must
+# be location-independent
+ABS_RE = re.compile(r"(?<![\w./-])(/root/[\w./~-]+)")
+
+
+def slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"\s+", "-", s).strip("-")
+
+
+def headings(path: Path) -> set:
+    out = set()
+    in_code = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        elif not in_code and line.startswith("#"):
+            out.add(slug(line.lstrip("#")))
+    return out
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(REPO)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if not dest.exists():
+            errors.append(f"{rel}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md" and slug(frag) not in headings(dest):
+            errors.append(f"{rel}: broken anchor -> {target}")
+    for m in ABS_RE.finditer(text):
+        errors.append(f"{rel}: absolute path outside the checkout -> "
+                      f"{m.group(1)} (cite PAPERS.md instead)")
+    return errors
+
+
+def main() -> int:
+    files = sorted({f for g in DOC_GLOBS for f in REPO.glob(g)})
+    if not files:
+        print("check_links: no docs found", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{'CLEAN' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
