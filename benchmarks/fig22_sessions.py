@@ -1,0 +1,152 @@
+"""Beyond-paper: multi-turn agent sessions with TTL-scheduled KV.
+
+The paper's Time Scheduler reprices GPU memory across *function-call
+stalls*; the dominant deployment shape is the multi-turn session, where
+the same residency-vs-offload-vs-drop tradeoff plays out across
+*inter-turn think time* (Continuum in PAPERS.md). Each turn resends the
+whole conversation history, so whatever happened to the previous turn's
+KV decides the next turn's prefill bill.
+
+Three policies over the same session trace (chat-shaped conversations,
+lognormal think gaps, history resent every turn):
+
+* ``pin_always``   — every session's KV stays device-resident forever:
+  best latency, monotonically growing residency (the OOM-shaped curve).
+* ``drop_always``  — KV dropped at every turn end: minimal residency,
+  every turn pays a full-history recompute.
+* ``ttl_scheduled``— the tentpole: the TemporalScheduler prices each
+  turn end with the Forecaster's per-session gap distribution — short
+  predicted gap stays resident, medium offloads to the host tier with a
+  predictive warm-back ahead of the forecast next turn, and a TTL
+  (quantile of observed gaps, capped) bounds how long an absent user
+  can hold memory.
+
+Rows report end-to-end turn latency and device residency (peak + mean
+of the engine's utilization samples). The CI gate asserts the TTL row
+beats drop_always on mean latency while staying under pin_always's
+peak residency.
+
+Standalone: ``python benchmarks/fig22_sessions.py [--quick] [--json PATH]``
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import CsvWriter
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.temporal import TemporalConfig
+from repro.data.workloads import session_workload
+from repro.launch.http_server import FrontDoor
+
+POLICIES = [("pin_always", "pin"), ("drop_always", "drop"),
+            ("ttl_scheduled", "ttl")]
+
+SESSION_KEYS = ("session_turns", "session_resident", "session_offloads",
+                "session_warms", "session_drops", "session_expired")
+
+
+def drive_sessions(policy: str, quick: bool = False) -> dict:
+    """Run one policy over the fixed session trace; returns a flat row."""
+    if quick:
+        trace = dict(n_sessions=6, qps=0.05, turns=4, think_mean=30.0,
+                     prompt_len=768, user_len=64, gen_len=32, seed=7)
+        gpu_blocks = 640
+    else:
+        trace = dict(n_sessions=12, qps=0.05, turns=5, think_mean=45.0,
+                     prompt_len=1024, user_len=96, gen_len=48, seed=7)
+        # sized so pin_always's monotone pin set (~1300 blocks at the
+        # final turn) still fits: an overcommitted pin policy starves —
+        # which is the point of the TTL row, but not a runnable baseline
+        gpu_blocks = 2048
+    sessions = session_workload(**trace)
+    eng = Engine(EngineConfig.preset(
+        "tokencake", gpu_blocks=gpu_blocks, max_running=64,
+        continuous_batching=True, sessions=True,
+        temporal=TemporalConfig(session_policy=policy)), A100_PCIE)
+    fd = FrontDoor(eng, cache=None, max_pending=512)
+    pending = {}
+
+    def submit_turn(sess, j, prompt, when):
+        gen = fd.submit({"prompt": prompt,
+                         "max_tokens": sess["turns"][j]["max_tokens"],
+                         "session_id": sess["sid"]}, arrival=when)
+        pending[gen.gid] = (sess, j, prompt)
+
+    def on_finish(gen):
+        # chain turn j+1 at finish + think with the full resent history
+        ent = pending.pop(gen.gid, None)
+        if ent is None or gen.status != "finished":
+            return
+        sess, j, prompt = ent
+        nxt = j + 1
+        if nxt < len(sess["turns"]):
+            t = sess["turns"][nxt]
+            submit_turn(sess, nxt,
+                        prompt + gen.result["tokens"] + t["user_tokens"],
+                        gen.finish + t["think"])
+
+    fd.on_finish = on_finish
+    for sess in sessions:
+        submit_turn(sess, 0,
+                    sess["prompt"] + sess["turns"][0]["user_tokens"],
+                    sess["start"])
+    rep = fd.drive(max_time=1e6)
+    # flush the tail: pending TTL/warm events land so the drop ledger
+    # reflects conversation ends, not just mid-run decisions
+    eng.run(max_time=eng.clock + 600.0)
+    erep = eng.report()
+    util = [u for _, u, _ in eng.util_samples]
+    n_turns = sum(len(s["turns"]) for s in sessions)
+    row = {
+        "turns_submitted": n_turns,
+        "turns_completed": rep["completed"],
+        "mean_latency": rep["latency"]["mean"],
+        "p99_latency": rep["latency"]["p99"],
+        "ttft_mean": rep["ttft"]["mean"],
+        "peak_device_residency": max(util) if util else 0.0,
+        "avg_device_residency": (float(sum(util) / len(util))
+                                 if util else 0.0),
+        "prefill_tokens": erep["prefill_tokens"],
+    }
+    for k in SESSION_KEYS:
+        row[k] = erep[k]
+    return row
+
+
+def run(csv: CsvWriter, quick: bool = False):
+    out = {}
+    for name, policy in POLICIES:
+        row = drive_sessions(policy, quick=quick)
+        out[name] = row
+        csv.row(f"fig22.{name}", row["mean_latency"] * 1e6,
+                f"mean_s={row['mean_latency']:.3f};"
+                f"p99_s={row['p99_latency']:.3f};"
+                f"peak_resid={row['peak_device_residency']:.3f};"
+                f"avg_resid={row['avg_device_residency']:.3f};"
+                f"turns={row['turns_completed']}/{row['turns_submitted']};"
+                f"prefill={row['prefill_tokens']};"
+                + ";".join(f"{k}={row[k]}" for k in SESSION_KEYS))
+    ttl, drop, pin = (out["ttl_scheduled"], out["drop_always"],
+                      out["pin_always"])
+    csv.row("fig22.ttl_vs_drop_latency",
+            (1 - ttl["mean_latency"] / drop["mean_latency"]) * 100,
+            f"ttl_s={ttl['mean_latency']:.3f};"
+            f"drop_s={drop['mean_latency']:.3f}")
+    csv.row("fig22.ttl_vs_pin_residency",
+            (1 - ttl["peak_device_residency"]
+             / max(pin["peak_device_residency"], 1e-9)) * 100,
+            f"ttl_peak={ttl['peak_device_residency']:.3f};"
+            f"pin_peak={pin['peak_device_residency']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_args, write_json
+    args = bench_args()
+    out = run(CsvWriter(), quick=args.quick)
+    rows = [dict(rep, row=name) for name, rep in out.items()]
+    if args.json:
+        write_json("fig22_sessions", rows, args.json)

@@ -33,6 +33,7 @@ FIGURES = [
     ("fig19_seeds", "Beyond-paper: seed robustness of the ablation"),
     ("fig20_cluster", "Beyond-paper: cluster routing policies"),
     ("fig21_serving", "Beyond-paper: serving front door QPS/TTFT/TPOT"),
+    ("fig22_sessions", "Beyond-paper: multi-turn sessions, TTL-scheduled KV"),
     ("roofline", "Roofline terms from dry-run"),
 ]
 

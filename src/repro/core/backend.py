@@ -43,6 +43,9 @@ class SimBackend:
     def promote_blocks(self, host_blocks, gpu_blocks):
         pass
 
+    def offload_blocks(self, gpu_blocks, host_blocks):
+        pass
+
     def invalidate(self, rid):
         pass
 
@@ -196,6 +199,12 @@ class JaxBackend:
         (all layers in one ``block_scatter_layers`` launch per tensor,
         the same H2D data plane request uploads ride)."""
         self.cache.upload(host_blocks, gpu_blocks)
+
+    def offload_blocks(self, gpu_blocks: List[int], host_blocks: List[int]):
+        """Engine hook: session-tier D2H save — move a finished turn's KV
+        blocks (which no live request owns) to host pages, the same
+        device→host data plane ``copy_out`` uses for stalled requests."""
+        self.cache.offload(gpu_blocks, host_blocks)
 
     def generated_tokens(self, rid: str) -> Optional[List[int]]:
         """Decoded token ids so far — the serving front door's streaming

@@ -127,6 +127,13 @@ class EngineConfig:
     # quantum. Off by default: every figure row and test keeps the
     # legacy per-quantum semantics bit-identical.
     continuous_batching: bool = False
+    # multi-turn agent sessions (serving front door): requests tagged
+    # with a session_id keep their published KV alive across turns
+    # behind a session pin whose TTL the Temporal Scheduler prices over
+    # observed inter-turn gaps (see TemporalConfig.session_*). Off by
+    # default: the sessions-off engine path is byte-identical to the
+    # legacy figures.
+    sessions: bool = False
     spatial: SpatialConfig = field(default_factory=SpatialConfig)
     temporal: TemporalConfig = field(default_factory=TemporalConfig)
 
@@ -179,6 +186,42 @@ class AppState:
         return len(self.finished_nodes) / max(len(self.graph.nodes), 1)
 
 
+@dataclass
+class SessionState:
+    """One multi-turn agent session (cfg.sessions).
+
+    ``tokens`` is the block-aligned context the session keeps alive
+    between turns, capped at the turn's *prompt* block boundary: only
+    prefill-written KV is position-faithful under the decode plane's
+    re-feed convention, so the generated tail (plus the partial trailing
+    block) is recomputed by the next turn's suffix prefill. ``generation`` bumps on every turn start *and* end so
+    scheduled ``session_ttl`` / ``session_warm`` events carry the
+    generation they were priced for and go stale the moment the session
+    moves on. ``state`` walks idle → active → (resident | offloading →
+    offloaded) → … → dropped."""
+    sid: str
+    turn: int = 0
+    generation: int = 0
+    state: str = "idle"
+    tokens: List[int] = field(default_factory=list)
+    host_blocks: List[int] = field(default_factory=list)
+    planned_gen: List[int] = field(default_factory=list)
+    last_turn_end: float = 0.0
+    ttl_deadline: float = math.inf
+    active_rid: Optional[str] = None
+    warm_tag: Optional[str] = None
+
+    @property
+    def tag(self) -> str:
+        """Synthetic pin owner in the prefix store / transfer plane."""
+        return f"<session>/{self.sid}"
+
+    @property
+    def key(self) -> str:
+        """Forecast stream for this session's inter-turn gaps."""
+        return f"session:{self.sid}"
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -222,6 +265,20 @@ class Engine:
         self._fresh_stalled: List[Request] = []
         self._prefetched: set = set()              # (app_id, nid) issued
 
+        # multi-turn sessions (cfg.sessions): sid -> state, plus the
+        # rid -> sid map the finish hook consults. Metrics live in a
+        # SEPARATE dict merged into report() only when sessions are on,
+        # so the sessions-off report stays byte-identical.
+        self.sessions: Dict[str, SessionState] = {}
+        self._rid_session: Dict[str, str] = {}
+        self.session_metrics = {
+            "sessions_opened": 0, "session_turns": 0,
+            "session_resident": 0, "session_offloads": 0,
+            "session_offload_blocks": 0, "session_warms": 0,
+            "session_warm_skipped": 0, "session_drops": 0,
+            "session_expired": 0,
+        }
+
         # cluster plane (all inert in single-replica runs): the router
         # installs ``router_cb(app, nid, toks) -> bool`` to intercept node
         # spawns (False = placed on another replica); ``outbox`` carries
@@ -230,6 +287,14 @@ class Engine:
         self.router_cb = None
         self.outbox: List[tuple] = []
         self._pull_seq = itertools.count()
+
+        # live-serving flag (HTTP pump): when True, an idle engine whose
+        # only remaining work is future timer events (session TTL/warm
+        # deadlines) returns False from step() instead of jumping the
+        # clock onto them — the serving loop maps WALL time onto the
+        # virtual clock across the gap, so timers age at wall speed
+        # rather than firing the instant the engine drains
+        self.hold_clock = False
 
         # ---- metrics ----
         self.metrics = {
@@ -805,6 +870,230 @@ class Engine:
         wait."""
         self.prefix_store.prefetch_done(pid, self.clock)
 
+    # ---- multi-turn sessions (TTL-scheduled KV pinning) ----------------------
+    def session_open(self, sid: Optional[str] = None) -> str:
+        """Explicit session creation (POST /v1/session/open); ``/generate``
+        with an unseen session_id creates one implicitly via
+        :meth:`session_track`."""
+        sid = sid or f"s{len(self.sessions)}"
+        if sid not in self.sessions:
+            self.sessions[sid] = SessionState(sid)
+            self.session_metrics["sessions_opened"] += 1
+        return sid
+
+    def session_info(self, sid: str) -> Optional[dict]:
+        sess = self.sessions.get(sid)
+        if sess is None:
+            return None
+        return {
+            "sid": sid, "turns": sess.turn, "state": sess.state,
+            "context_tokens": len(sess.tokens),
+            "device_blocks": len(
+                self.prefix_store.session_blocks(sess.tag)),
+            "host_blocks": len(sess.host_blocks),
+            "ttl_deadline": (sess.ttl_deadline
+                             if math.isfinite(sess.ttl_deadline) else None),
+        }
+
+    def session_close(self, sid: str) -> bool:
+        """Drop the session's KV now (client hangup beats the TTL)."""
+        sess = self.sessions.get(sid)
+        if sess is None:
+            return False
+        if sess.state != "dropped":
+            self._session_drop(sess)
+        return True
+
+    def session_track(self, sid: str, rid: str,
+                      planned_tokens: Optional[List[int]] = None) -> None:
+        """Front-door hook: request ``rid`` is the next turn of session
+        ``sid``. Feeds the observed inter-turn gap into the per-session
+        forecast stream and invalidates any pending TTL/warm event — an
+        arriving turn always beats the clock that would have dropped it.
+        ``planned_tokens`` is the deterministic response the front door
+        will synthesize (sim mode); a real backend's decoded tokens take
+        precedence at turn end."""
+        if not self.cfg.sessions:
+            return
+        sess = self.sessions.get(sid)
+        if sess is None:
+            sess = self.sessions[sid] = SessionState(sid)
+            self.session_metrics["sessions_opened"] += 1
+        if sess.turn > 0 and sess.state != "active":
+            self.temporal.on_turn_start(
+                sess.key, max(self.clock - sess.last_turn_end, 0.0))
+        sess.generation += 1       # stale-out pending ttl/warm events
+        sess.state = "active"
+        sess.active_rid = rid
+        sess.planned_gen = list(planned_tokens or [])
+        self._rid_session[rid] = sid
+
+    def _session_turn_end(self, req: Request) -> Optional[List[int]]:
+        """The turn's request finished: decide — on the virtual timeline,
+        exactly like a function-call stall — what happens to its KV over
+        the predicted inter-turn gap. Runs BEFORE the request's pins are
+        released, so covered entries move seamlessly from the request pin
+        to the session pin and adopted blocks never transit the free
+        list. Returns a token path the caller must actively drop after
+        the request's own release (drop decision), else None."""
+        sid = self._rid_session.pop(req.rid, None)
+        sess = self.sessions.get(sid) if sid is not None else None
+        if sess is None:
+            return
+        gen_toks = None
+        if self.backend is not None:
+            gen_toks = self.backend.generated_tokens(req.rid)
+        if gen_toks is None:
+            gen_toks = sess.planned_gen[:req.generated_total]
+        context = list(req.prompt_tokens) + list(gen_toks)
+        bt = self.platform.block_tokens
+        # only prefill-written KV may be republished across requests: the
+        # decode data plane re-feeds the last prompt token, so a
+        # generated-token slot holds the KV of the token *before* it —
+        # adopting those blocks would poison the next turn's prefix match
+        # (greedy outputs silently diverge from a dense recompute). Cap
+        # the published run at the prompt's block boundary; the next turn
+        # re-prefills the generated tail as part of its suffix.
+        n = len(req.prompt_tokens) // bt
+        sess.tokens = context[:n * bt]
+        sess.turn += 1
+        sess.generation += 1
+        sess.last_turn_end = self.clock
+        sess.active_rid = None
+        self.session_metrics["session_turns"] += 1
+        dec = self.temporal.on_turn_end(sess.key, n, self.clock,
+                                        self.stream_backlog())
+        if dec.action == "drop" or n == 0:
+            self._session_drop(sess)
+            # the finishing request still holds refs on the prompt path,
+            # so the drop above skipped those nodes — return the path so
+            # _finish_request re-drops it AFTER the request's release
+            # (otherwise the "dropped" KV stays LRU-indexed and the next
+            # turn silently prefix-hits it)
+            return sess.tokens
+        adopted = self.prefix_store.session_publish(
+            sess.tag, sess.tokens, req.gpu_blocks_by_device,
+            agent_type=req.agent_type)
+        # strip the adopted ids from the request's tables: the finish
+        # path must free only what stayed private (the partial trailing
+        # block); covered ids are stripped by the request's own release
+        for d, ids in adopted.items():
+            lst = req.gpu_blocks_by_device.get(d)
+            if lst:
+                for bid in ids:
+                    if bid in lst:
+                        lst.remove(bid)
+        if math.isfinite(dec.ttl):
+            sess.ttl_deadline = self.clock + dec.ttl
+            self._push(sess.ttl_deadline, "session_ttl",
+                       (sess.sid, sess.generation))
+        else:
+            sess.ttl_deadline = math.inf
+        if dec.action == "resident":
+            sess.state = "resident"
+            self.session_metrics["session_resident"] += 1
+            return
+        self._session_start_offload(sess, n, dec)
+
+    def _session_start_offload(self, sess: SessionState, n: int,
+                               dec) -> None:
+        """Medium predicted gap: move the session KV to the host tier
+        (the device copy frees when the transfer lands) and schedule the
+        predictive warm-back ahead of the forecast next turn. Host copies
+        accumulate monotonically — a turn that extends an already-saved
+        context copies only the delta blocks."""
+        start = len(sess.host_blocks)
+        delta = n - start
+        if delta > 0 and self.host.free < delta:
+            sess.state = "resident"     # host full: stay pinned instead
+            self.session_metrics["session_resident"] += 1
+            return
+        if delta > 0:
+            new_hb = self.host.allocate(delta, sess.tag, group=sess.sid)
+            self.prefix_store.host_publish(sess.tokens, new_hb,
+                                           start=start)
+            if self.backend is not None:
+                dev0 = self.prefix_store.session_blocks(sess.tag)
+                self.backend.offload_blocks(dev0[start:n], new_hb)
+            sess.host_blocks.extend(new_hb)
+        sess.state = "offloading"
+        self.session_metrics["session_offloads"] += 1
+        self.session_metrics["session_offload_blocks"] += max(delta, 0)
+        self._submit_transfer("offload", max(delta, 1), sess.tag,
+                              owner=sess.tag)
+        if dec.warm_at > self.clock:
+            self._push(dec.warm_at, "session_warm",
+                       (sess.sid, sess.generation))
+
+    def _session_offload_done(self, tag: str) -> None:
+        """The session's D2H save landed: release the session pin and
+        actively free the now-redundant device copy. A turn that arrived
+        mid-transfer (state flipped back to active) keeps the pin — its
+        admission is about to re-use exactly those entries."""
+        sid = tag.split("/", 1)[1]
+        sess = self.sessions.get(sid)
+        if sess is None or sess.state != "offloading":
+            return
+        self.prefix_store.release(tag)
+        if sess.tokens:
+            self.prefix_store.drop_cached_path(sess.tokens)
+        sess.state = "offloaded"
+
+    def _session_warm(self, sid: str, gen: int) -> None:
+        """Predictive upload for the forecast next turn: promote the
+        session's host-saved run back into fresh device blocks under an
+        ownerless per-turn tag (the PR 6 prefetch discipline verbatim) so
+        the turn's admission pins ready resident blocks with zero stream
+        wait."""
+        sess = self.sessions.get(sid)
+        if sess is None or sess.generation != gen \
+                or sess.state != "offloaded":
+            return
+        m = self.prefix_store.match(sess.tokens, promote=True)
+        if not m.promo or m.pending_promo:
+            return
+        k = len(m.promo)
+        tag = f"<session-warm>/{sid}/{sess.turn}"
+        self.prefix_store.promote_hold(tag, m)
+        if any(p.free < k + self._headroom() for p in self.pools):
+            self.prefix_store.release(tag)
+            self.session_metrics["session_warm_skipped"] += 1
+            return
+        dests = {p.device: p.allocate(k, tag) for p in self.pools}
+        pid = self.prefix_store.promote(tag, m, dests, source="prefetch")
+        if self.backend is not None:
+            self.backend.promote_blocks([hb for _, hb in m.promo],
+                                        dests[0])
+        sess.warm_tag = tag
+        sess.state = "warming"
+        self.session_metrics["session_warms"] += 1
+        self.metrics["prefetch_issued"] += 1
+        self.temporal.prefetch_count += 1
+        self._submit_transfer("prefetch", k, pid, owner=tag)
+
+    def _session_drop(self, sess: SessionState) -> None:
+        """Past-TTL (or closed/drop-policy) teardown: cancel any transfer
+        the session still owns, release the pin, free the device copy and
+        the host-tier save. Exactly-once discipline mirrors ``_evict``:
+        a still-queued slot's teardown (host-pin release) runs here, an
+        in-flight slot's runs at its cancelled completion event."""
+        for owner in (sess.tag, sess.warm_tag):
+            if not owner:
+                continue
+            for tr in self.transfers.cancel_owner(owner):
+                if tr.kind in ("promotion", "prefetch"):
+                    self.prefix_store.promotion_done(tr.payload)
+            self.prefix_store.release(owner)
+        sess.warm_tag = None
+        if sess.tokens:
+            self.prefix_store.drop_cached_path(sess.tokens)
+        if sess.host_blocks:
+            self.host.release(sess.host_blocks)
+            sess.host_blocks = []
+        sess.state = "dropped"
+        sess.ttl_deadline = math.inf
+        self.session_metrics["session_drops"] += 1
+
     # ----------------------------------------------------------------- finish
     def _finish_request(self, req: Request) -> None:
         req.state = ReqState.FINISHED
@@ -812,6 +1101,11 @@ class Engine:
         if self.backend is not None:
             self.backend.invalidate(req.rid)   # prune per-request state
         self.req_latencies.append(self.clock - req.arrival)
+        # session turn boundary: runs BEFORE the pin release below, so the
+        # session pin takes over the request's entries without a gap
+        drop_path = None
+        if self.cfg.sessions and req.rid in self._rid_session:
+            drop_path = self._session_turn_end(req)
         # shared prefix blocks go back to the store (pins dropped; refcount-0
         # entries become LRU-reclaimable but stay indexed); private blocks
         # free normally. Prompt blocks were published at admission, so there
@@ -819,6 +1113,10 @@ class Engine:
         self.prefix_store.release(req.rid, req)
         req.shared_prefix_blocks = 0
         self.spatial.release(req, cache=False)
+        if drop_path:
+            # drop-policy turn end: now that the request's own refs are
+            # gone, actively free the cached path its KV left behind
+            self.prefix_store.drop_cached_path(drop_path)
         app = self.apps[req.app_id]
         app.finished_nodes.add(req.node.node_id)
         if app.external:
@@ -1011,7 +1309,7 @@ class Engine:
         # Scheduler against the pending predictive uploads that share the
         # transfer stream and the device headroom
         promo_budget = 0
-        if self.cfg.host_promotion:
+        if self.cfg.host_promotion or self.cfg.sessions:
             promo_budget = self.temporal.promotion_budget(
                 snap if snap is not None else self.snapshot())
         # refresh P_req (Eq. 5) before every batch decision
@@ -1158,10 +1456,11 @@ class Engine:
         is matched even when the vLLM-style device cache is off."""
         m = PrefixMatch()
         if (self.cfg.prefix_cache or self.cfg.host_promotion
-                or self.cfg.remote_pull):
+                or self.cfg.remote_pull or self.cfg.sessions):
             m = self.prefix_store.match(
                 req.prompt_tokens,
-                promote=self.cfg.host_promotion or self.cfg.remote_pull)
+                promote=(self.cfg.host_promotion or self.cfg.remote_pull
+                         or self.cfg.sessions))
         if self.cfg.cpu_prefix_cache and req.generated_total == 0:
             # carried on the match, counted only when admission commits —
             # a deferred request must not re-count its hit every retry
@@ -1477,6 +1776,15 @@ class Engine:
                 tr = self.transfers.on_event(payload)
                 if tr is not None:
                     self._transfer_done(tr)
+            elif kind == "session_ttl":
+                sid, gen = payload
+                sess = self.sessions.get(sid)
+                if (sess is not None and sess.generation == gen
+                        and sess.state not in ("active", "dropped")):
+                    self._session_drop(sess)
+                    self.session_metrics["session_expired"] += 1
+            elif kind == "session_warm":
+                self._session_warm(*payload)
             elif kind == "callback":
                 # deferred external action on the virtual timeline (the
                 # serving front door schedules trace arrivals this way so
@@ -1491,9 +1799,13 @@ class Engine:
         the per-kind finishers are cancel-aware — ``promotion_done``
         drops only the host pins of a cancelled promotion."""
         if tr.kind == "offload":
-            req = self._find(tr.payload)
-            if req is not None:
-                self._finish_offload(req)
+            if isinstance(tr.payload, str) \
+                    and tr.payload.startswith("<session>/"):
+                self._session_offload_done(tr.payload)
+            else:
+                req = self._find(tr.payload)
+                if req is not None:
+                    self._finish_offload(req)
         elif tr.kind == "upload":
             req = self._find(tr.payload)
             if req is not None:
@@ -1529,6 +1841,17 @@ class Engine:
         self.util_samples.append(
             (self.clock, used, len(active) / p.num_blocks))
 
+    def _wall_gated(self) -> bool:
+        """True when the earliest pending event is an inter-turn session
+        timer lying in the future and ``hold_clock`` is set: the engine
+        must not fast-forward onto it — in a live server those deadlines
+        age at wall speed (the serving pump parks and maps the wall gap
+        onto the virtual clock). Work events (transfers, simulated call
+        returns, arrivals) always free-run regardless."""
+        return (self.hold_clock and bool(self.events)
+                and self.events[0][2] in ("session_ttl", "session_warm")
+                and self.events[0][0] > self.clock)
+
     def step(self) -> bool:
         """One main-loop iteration (events -> schedule -> execute).
 
@@ -1549,6 +1872,10 @@ class Engine:
                 self.schedule_step()
                 self.clock += 1e-3
                 return True
+            if self._wall_gated():
+                # live serving: the next event is an inter-turn timer —
+                # let wall time carry the clock there (pump parks)
+                return False
             # idle: jump to next event
             self.clock = self.events[0][0]
             return True
@@ -1557,7 +1884,7 @@ class Engine:
             return False   # genuine starvation: nothing admissible
         dur = self.execute_iteration()
         self.clock += dur
-        if not self.running and self.events:
+        if not self.running and self.events and not self._wall_gated():
             # nothing runnable (e.g. pool held by stalled agents):
             # jump to the next event instead of micro-stepping
             self.clock = max(self.clock, self.events[0][0])
@@ -1585,7 +1912,7 @@ class Engine:
         util = [u for _, u, _ in self.util_samples]
         eff = [e for _, _, e in self.util_samples]
         elapsed = max(self.clock, 1e-9)
-        return {
+        rep = {
             "apps_finished": len(lat),
             "total_latency": sum(lat),
             "avg_latency": sum(lat) / len(lat) if lat else 0.0,
@@ -1603,3 +1930,8 @@ class Engine:
             "pull_wasted": self.prefix_store.stats["pull_wasted"],
             **self.metrics,
         }
+        if self.cfg.sessions:
+            # merged conditionally: the sessions-off report dict stays
+            # byte-identical to the legacy figures
+            rep.update(self.session_metrics)
+        return rep

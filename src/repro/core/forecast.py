@@ -57,6 +57,13 @@ class Forecaster:
     def std(self, func_type: str) -> float:
         return self.var.get(func_type, 0.0) ** 0.5
 
+    def n_obs(self, func_type: str) -> int:
+        """Observations recorded for this stream — callers branch on
+        cold start (0) vs priced history (e.g. a session's first
+        turn-end must not trust the synthetic default gap's tight
+        quantiles)."""
+        return self.counts.get(func_type, 0)
+
     def predict_interval(self, func_type: str, q: float,
                          user_estimate: Optional[float] = None) -> float:
         """Quantile ``q`` of the tool's duration under a normal model

@@ -22,6 +22,7 @@ Example (paper Fig. 5)::
 from __future__ import annotations
 
 import itertools
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -130,12 +131,21 @@ class AgentNode:
 class AppGraph:
     """Application DAG + structural metrics used by both schedulers."""
 
+    # distinct `finished` frontiers memoized per graph: a DAG of N nodes
+    # has at most N+1 frontiers on any one execution, but long-lived
+    # graphs (multi-turn sessions, reused templates) see many — bound
+    # the memo so it cannot grow monotonically with session length
+    _STE_CACHE_MAX = 64
+
     def __init__(self, name: str):
         self.name = name
         self._ids = itertools.count()
         self.nodes: Dict[int, AgentNode] = {}
         self.children: Dict[int, List[int]] = {}
         self._cache: Dict[str, object] = {}   # metrics cache (graph is static)
+        # per-frontier steps-to-execution memo, LRU-bounded (see above)
+        self._ste_cache: "OrderedDict[frozenset, Dict[int, float]]" = \
+            OrderedDict()
 
     def _cached(self, key: str, fn):
         if key not in self._cache:
@@ -160,6 +170,7 @@ class AppGraph:
         node = AgentNode(nid, name, agent_type, prompt_len, segs, fcs,
                          dep_ids)
         self._cache.clear()
+        self._ste_cache.clear()
         self.nodes[nid] = node
         self.children[nid] = []
         for d in dep_ids:
@@ -240,16 +251,23 @@ class AppGraph:
         ``node_cost`` prices one ancestor's remaining work (defaults to
         :meth:`work_estimate`); a node in ``finished`` contributes
         nothing and cuts the paths through it. A ready node (every dep
-        finished) is at distance 0. The default-cost variant is cached
-        per ``finished`` frontier like the other structural metrics —
-        callers with a live cost function (forecaster-priced, progress-
-        scaled) bypass the cache."""
+        finished) is at distance 0. The default-cost variant is memoized
+        per ``finished`` frontier in an LRU bounded at
+        ``_STE_CACHE_MAX`` — long-lived graphs (multi-turn sessions)
+        must not grow the memo monotonically; callers with a live cost
+        function (forecaster-priced, progress-scaled) bypass it."""
         if node_cost is not None:
             return self._steps_to_execution(finished, node_cost)[nid]
-        return self._cached(
-            ("ste", finished),
-            lambda: self._steps_to_execution(
-                finished, lambda n: self.work_estimate(self.nodes[n])))[nid]
+        eta = self._ste_cache.get(finished)
+        if eta is None:
+            eta = self._steps_to_execution(
+                finished, lambda n: self.work_estimate(self.nodes[n]))
+            self._ste_cache[finished] = eta
+            while len(self._ste_cache) > self._STE_CACHE_MAX:
+                self._ste_cache.popitem(last=False)
+        else:
+            self._ste_cache.move_to_end(finished)
+        return eta[nid]
 
     def _steps_to_execution(self, finished, node_cost) -> Dict[int, float]:
         eta: Dict[int, float] = {}

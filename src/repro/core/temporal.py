@@ -75,6 +75,20 @@ class TemporalConfig:
     # fixed upload_safety multiplier with a conservative completion-time
     # quantile (None keeps the legacy multiplier rule bit-identically)
     upload_quantile: Optional[float] = None
+    # multi-turn sessions (ROADMAP "Multi-turn sessions with KV TTL"):
+    # at each turn boundary the scheduler prices the *inter-turn gap*
+    # exactly like a function-call stall — short predicted gap keeps the
+    # session KV resident, a medium gap offloads it to the host tier
+    # with a predictive upload scheduled ahead of the expected next
+    # turn, and a gap past the TTL drops it. The gap forecast rides the
+    # same Forecaster the tools use, keyed per session.
+    session_policy: str = "ttl"              # "ttl" | "pin" | "drop"
+    session_ttl: float = 120.0               # hard cap on the pin TTL (s)
+    session_ttl_quantile: float = 0.9        # gap quantile the TTL prices
+    session_gap_quantile: float = 0.5        # gap quantile decisions use
+    session_ttl_safety: float = 2.0          # x quantile gap -> TTL
+    session_default_gap: float = 10.0        # prior before any observation
+    session_resident_margin: float = 2.0     # gap <= margin x roundtrip stays
     # precision tier of the host-cached KV (ROADMAP "Quantized KV tier"):
     # "fp16" keeps every legacy row bit-identical; "int8_host" quantizes
     # blocks as they cool — fp16 hot on device, int8 payload + per-(block,
@@ -90,6 +104,20 @@ class OffloadDecision:
     reason: str
     score: float = 0.0
     fit_request: Optional[str] = None
+
+
+@dataclass
+class SessionDecision:
+    """Turn-boundary verdict for a session's published KV.
+
+    ``action`` is one of ``resident`` (stay pinned on device until
+    ``ttl``), ``offload`` (move to the host tier now, warm it back at
+    ``warm_at``), or ``drop`` (release everything). ``gap`` is the
+    forecast inter-turn gap the decision was priced on."""
+    action: str
+    ttl: float = math.inf
+    warm_at: float = 0.0
+    gap: float = 0.0
 
 
 class TemporalScheduler:
@@ -224,6 +252,55 @@ class TemporalScheduler:
         if req.current_fc is not None:
             self.forecaster.observe(req.current_fc.tool, now - req.fc_start)
         req.fc_actual_end = now
+
+    # --------------------------------------------- inter-turn scheduling
+    def on_turn_start(self, key: str, gap: float) -> None:
+        """A session's next turn arrived ``gap`` seconds after the last
+        one ended: feed the observation into the per-session forecast
+        stream so later turn-end decisions price the real think time."""
+        self.forecaster.observe(key, gap)
+
+    def on_turn_end(self, key: str, n_blocks: int, now: float,
+                    stream_backlog: float) -> SessionDecision:
+        """Price the inter-turn gap like a function-call stall (§4).
+
+        The TTL is a conservative quantile of the session's observed
+        gap distribution (capped by ``session_ttl``); the action
+        compares the median-ish gap against the host round-trip the
+        same way the offload gate compares a stall against its
+        transfer time."""
+        c = self.cfg
+        if c.session_policy == "pin":
+            return SessionDecision("resident", ttl=math.inf)
+        if c.session_policy == "drop":
+            return SessionDecision("drop")
+        if self.forecaster.n_obs(key) == 0:
+            # cold start: no observed gap yet — plan transfers around the
+            # default gap but keep the TTL at the generous cap; a tight
+            # quantile of a synthetic number would drop first-time users
+            # whose think time merely exceeds it
+            gap = c.session_default_gap
+            ttl = c.session_ttl
+        else:
+            gap = self.forecaster.predict_interval(
+                key, c.session_gap_quantile, c.session_default_gap)
+            ttl = min(c.session_ttl,
+                      self.forecaster.predict_interval(
+                          key, c.session_ttl_quantile,
+                          c.session_default_gap)
+                      * c.session_ttl_safety)
+        if gap >= ttl or n_blocks == 0:
+            return SessionDecision("drop", gap=gap)
+        t_off = self.platform.offload_time(n_blocks, c.kv_precision)
+        roundtrip = t_off + self.platform.upload_time(n_blocks,
+                                                      c.kv_precision)
+        if (gap <= roundtrip * c.session_resident_margin
+                or self.host is None or self.host.free < n_blocks):
+            return SessionDecision("resident", ttl=ttl, gap=gap)
+        lead = self.platform.upload_lead_time(n_blocks, stream_backlog,
+                                              c.kv_precision)
+        warm_at = now + max(gap - lead * c.prefetch_safety, t_off)
+        return SessionDecision("offload", ttl=ttl, warm_at=warm_at, gap=gap)
 
     # ------------------------------------------------- Eq. 3/4 upload planning
     def upload_budget(self, snapshot: PressureSnapshot) -> int:

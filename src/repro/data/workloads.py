@@ -134,3 +134,51 @@ def build_workload(app: str = "code_writer", dataset: str = "d1",
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(rng, qps, n_apps)
     return [(t, APPS[app](rng, dataset)) for t in arrivals]
+
+
+def session_workload(n_sessions: int = 8, qps: float = 0.2,
+                     turns: int = 4, think_mean: float = 30.0,
+                     think_sigma: float = 0.8, prompt_len: int = 384,
+                     user_len: int = 64, gen_len: int = 32,
+                     seed: int = 0) -> List[dict]:
+    """Multi-turn agent sessions for the front door (fig22).
+
+    Each session is a chat-shaped conversation: a system prompt, then
+    ``~turns`` user turns whose full history is resent every turn (the
+    prompt-caching deployment shape — see SNIPPETS.md). ``think`` is the
+    gap between a turn's completion and the next submission, sampled
+    lognormal around ``think_mean`` so the population spans the three
+    TTL regimes: short gaps (stay resident), medium gaps (offload +
+    predictive upload), and the conversation end (no next turn — only a
+    TTL can reclaim the pin).
+
+    Returns a list of session dicts::
+
+        {"sid": str, "start": float, "prompt": [tok, ...],
+         "turns": [{"user_tokens": [...], "max_tokens": int,
+                    "think": float}, ...]}
+
+    The driver chains turn ``j+1`` at ``finish(turn j) + think`` with
+    prompt = previous prompt + previous response + new user tokens.
+    """
+    rng = np.random.default_rng(seed)
+    starts = poisson_arrivals(rng, qps, n_sessions)
+    sessions: List[dict] = []
+    for i, t0 in enumerate(starts):
+        n_turns = max(2, 1 + int(rng.poisson(max(turns - 1, 1))))
+        turn_specs = []
+        for j in range(n_turns):
+            think = (float(rng.lognormal(np.log(think_mean), think_sigma))
+                     if j else 0.0)
+            turn_specs.append({
+                "user_tokens": [int(x) for x in
+                                rng.integers(0, 50000, user_len)],
+                "max_tokens": int(gen_len),
+                "think": think,
+            })
+        sessions.append({
+            "sid": f"sess{i}", "start": float(t0),
+            "prompt": [int(x) for x in rng.integers(0, 50000, prompt_len)],
+            "turns": turn_specs,
+        })
+    return sessions

@@ -524,6 +524,104 @@ class PrefixStore:
         for e in self.unready.pop(rid, []):
             e.ready = True
 
+    # ---- multi-turn sessions -------------------------------------------------
+    def session_publish(self, tag: str, context_tokens: Sequence[int],
+                        blocks_by_device: Dict[int, List[int]],
+                        agent_type: Optional[str] = None
+                        ) -> Dict[int, List[int]]:
+        """Keep a finished turn's KV alive under a session pin.
+
+        Walks/inserts the context token path and, per full block index
+        from 0: an index already backed by a ready device entry is
+        *pinned* for ``tag`` (the prefix a later turn extends — turn-1
+        blocks, or a warmed promotion); an uncovered index *adopts* the
+        finishing request's block as a new entry, ready immediately (the
+        KV was just computed — unlike :meth:`publish` there is no
+        prefill still pending). Returns the per-device block ids adopted
+        so the caller can strip them from the request's tables — the
+        finish path then frees only what stayed private (the partial
+        trailing block). Idempotent across turns: re-pinning a covered
+        node is a no-op and block ids are never double-recorded."""
+        T = len(context_tokens) - len(context_tokens) % self.bt
+        out: Dict[int, List[int]] = {d: [] for d in self.pools}
+        if T == 0:
+            return out
+        path = self.tree.insert(context_tokens[:T])
+        avail: Dict[int, BlockEntry] = {}
+        for node in path:
+            avail.update(node.entries)
+        pb = self.pin_blocks.setdefault(tag, {d: [] for d in self.pools})
+        seen = {d: set(ids) for d, ids in pb.items()}
+        adopted = 0
+        for idx in range(T // self.bt):
+            prev = avail.get(idx)
+            if prev is not None:
+                if (not prev.ready or prev.tokens < self.bt
+                        or any(d not in prev.blocks for d in self.pools)):
+                    break       # unready/partial foreign coverage: stop
+                for nd in path:
+                    self._pin(tag, nd)
+                    if nd is prev.node:
+                        break
+                for d, bid in prev.blocks.items():
+                    if bid not in seen[d]:
+                        pb[d].append(bid)
+                        seen[d].add(bid)
+                continue
+            if any(idx >= len(blocks_by_device.get(d, []))
+                   for d in self.pools):
+                break           # table under-sized (defensive; engine bug)
+            last = (idx + 1) * self.bt - 1
+            node = next(nd for nd in path if nd.start <= last < nd.end)
+            e = BlockEntry(idx, {d: blocks_by_device[d][idx]
+                                 for d in self.pools}, self.bt,
+                           ready=True, node=node)
+            node.entries[idx] = e
+            for nd in path:     # pin the path down to the adopting node
+                self._pin(tag, nd)
+                if nd is node:
+                    break
+            for d, bid in e.blocks.items():
+                self.by_block[(d, bid)] = e
+                p = self.pools[d]
+                p.meta[bid].owner = SHARED_OWNER
+                if agent_type is not None:
+                    p.type_held[agent_type] = max(
+                        0, p.type_held.get(agent_type, 0) - 1)
+                pb[d].append(bid)
+                seen[d].add(bid)
+                out[d].append(bid)
+            adopted += 1
+        if adopted:
+            self.stats["published"] += adopted
+        self.tree.maybe_remove(path[-1])
+        return out
+
+    def session_blocks(self, tag: str, device: int = 0) -> List[int]:
+        """Session-pinned block ids on ``device``, in context order."""
+        pb = self.pin_blocks.get(tag)
+        return list(pb[device]) if pb else []
+
+    def drop_cached_path(self, context_tokens: Sequence[int]) -> int:
+        """Actively free the refcount-0 cached entries along a token path
+        (session drop, and device-side eviction after a session offload
+        lands): unlike pressure-driven reclaim this targets exactly the
+        released session's blocks, so its device memory comes back
+        immediately instead of waiting for allocation pressure to sweep
+        the LRU frontier. Entries on nodes still pinned by anyone else
+        are left alone. Returns the number of entries freed."""
+        path, _ = self.tree.walk(context_tokens)
+        n = 0
+        for node in reversed(path):     # deepest-first: hollow leaves drop
+            if node.refs:
+                continue
+            for e in list(node.entries.values()):
+                if e.ready:
+                    self._drop_entry(e)
+                    n += 1
+        self.stats["reclaimed"] += n
+        return n
+
     # ---- release / refcounts -------------------------------------------------
     def release(self, rid: str, req=None) -> None:
         """Drop every pin held by ``rid`` (finish / eviction / rollback).

@@ -27,8 +27,12 @@ Endpoints (full schemas in docs/SERVING_API.md):
     POST /v1/call_start         tool departure   (§6.2)
     POST /v1/call_finish        tool return      (§6.2)
     POST /generate              prompt -> tokens; ?stream / ?async forms
+                                (+ ``session_id``: multi-turn KV session)
     GET  /v1/result/{id}        poll an async generation
     POST /v1/cache/flush        drop every cached response
+    POST /v1/session/open       open a multi-turn session explicitly
+    GET  /v1/session/{sid}      session state: turns, KV residency, TTL
+    POST /v1/session/{sid}/close  drop the session's pinned KV now
 
 Two drivers share the same :class:`FrontDoor` state machine: the HTTP
 server pumps the engine from an asyncio task (wall-clock service), and
@@ -48,6 +52,7 @@ import asyncio
 import itertools
 import json
 import threading
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -118,15 +123,21 @@ class GenRequest:
         return self.status in ("finished", "cached", "rejected")
 
     def ttft(self) -> Optional[float]:
+        # Cache hits have no first DECODED token, so they carry no TTFT
+        # sample: returning None keeps them out of the report()
+        # distributions (which would otherwise collapse toward 0 as the
+        # hit rate rises), while the response bodies still state the
+        # client-observed ``"ttft": 0.0`` explicitly. One semantics,
+        # documented in docs/SERVING_API.md.
         if self.status == "cached":
-            return 0.0
+            return None
         if self.first_token is None:
             return None
         return self.first_token - self.arrival
 
     def tpot(self) -> Optional[float]:
         if self.status == "cached":
-            return 0.0
+            return None
         if self.finish is None or self.first_token is None:
             return None
         return (self.finish - self.first_token) / max(self.n_tokens - 1, 1)
@@ -240,6 +251,16 @@ class FrontDoor:
         gen.app_id = self.engine.submit_app(
             g, now, prompt_tokens={0: list(payload["prompt"])})
         gen.rid = f"{gen.app_id}/r"
+        # session turn: tie the request to its session so the engine's
+        # turn-end hook prices the KV pin. ``session_id`` stays in the
+        # payload, so it is part of the cache key — turns of different
+        # sessions never share a cached response. Planned tokens let the
+        # sim backend publish the full turn context at turn end.
+        sid = payload.get("session_id")
+        if sid is not None:
+            self.engine.session_track(
+                str(sid), gen.rid,
+                synth_tokens(gen.key, payload["max_tokens"]))
         gen.status = "queued"
         self.metrics["accepted"] += 1
         return gen
@@ -255,8 +276,10 @@ class FrontDoor:
         """Advance front-door state to the engine's clock: admit due
         scheduled arrivals, move first-token / progress / finish marks,
         populate the cache from completions. Called after every engine
-        step by whichever driver owns the loop."""
-        for gen in self.gens.values():
+        step by whichever driver owns the loop. Iterates a snapshot:
+        an ``on_finish`` hook may submit follow-up work (turn chaining)
+        mid-sweep."""
+        for gen in list(self.gens.values()):
             if gen.done or gen.status == "scheduled":
                 continue
             app = self.engine.apps.get(gen.app_id)
@@ -377,6 +400,11 @@ class HttpServer:
         self.host, self.port = host, port
         self.steps = 0                   # engine steps pumped (tests)
         self.paused = False
+        # (wall monotonic, engine clock) captured when the pump parks
+        # idle: the engine's virtual clock only advances while events
+        # drain, so without this anchor an idle server's response cache
+        # never ages — TTL expiry between bursts relies on it
+        self._idle_anchor: Optional[tuple] = None
         self._streams: Dict[str, asyncio.Queue] = {}
         self._waiters: Dict[str, List[asyncio.Event]] = {}
         self._wake: Optional[asyncio.Event] = None
@@ -402,17 +430,60 @@ class HttpServer:
         if self._wake is not None:
             self._wake.set()
 
+    def _sync_idle_clock(self) -> None:
+        """Advance the engine's virtual clock across a wall-clock idle
+        gap and sweep the response cache on the same tick. The virtual
+        clock is the timeline cached entries age on; while the pump is
+        parked it stands still, so a TTL'd entry would otherwise stay
+        fresh through an arbitrarily long quiet period. Runs at the top
+        of request handling (so an arriving request — and its cache
+        lookup — sees the advanced clock *before* its arrival stamp is
+        taken) and again when the pump wakes."""
+        anchor, self._idle_anchor = self._idle_anchor, None
+        if anchor is None:
+            return
+        wall0, clk0 = anchor
+        idle = time.monotonic() - wall0
+        if idle > 0:
+            self.engine.clock = max(self.engine.clock, clk0 + idle)
+        if self.front.cache is not None:
+            self.front.cache.sweep()
+
     async def _pump(self) -> None:
         self._wake = asyncio.Event()
+        # session TTL/warm deadlines age at WALL speed in a live server:
+        # the engine refuses to fast-forward onto them (hold_clock) and
+        # the timed park below carries the clock across the gap instead
+        self.engine.hold_clock = True
         while True:
             if self.paused:
                 await self._wake.wait()
                 self._wake.clear()
                 continue
-            progressed = self.engine.step()
+            self._sync_idle_clock()
+            eng = self.engine
+            if eng._wall_gated():
+                # drained down to future inter-turn timers (session
+                # TTL/warm deadlines): park and let WALL time carry the
+                # virtual clock to the next deadline instead of
+                # free-running through it — this is what makes
+                # inter-turn gaps age sessions (and the response cache)
+                # at wall speed in the live server
+                self._idle_anchor = (time.monotonic(), eng.clock)
+                try:
+                    await asyncio.wait_for(self._wake.wait(),
+                                           eng.events[0][0] - eng.clock)
+                except asyncio.TimeoutError:
+                    pass
+                self._wake.clear()
+                continue
+            progressed = eng.step()
             self.steps += 1
             self.front.poll()
             if not progressed and not self.front.outstanding():
+                if eng._wall_gated():
+                    continue    # future timers: timed park at loop top
+                self._idle_anchor = (time.monotonic(), self.engine.clock)
                 await self._wake.wait()
                 self._wake.clear()
             else:
@@ -475,6 +546,10 @@ class HttpServer:
         except json.JSONDecodeError:
             self._send(writer, 400, {"ok": False, "error": "invalid JSON"})
             return
+        # first thing, before any clock read: fold the wall-clock idle
+        # gap into the virtual timeline, so this request's arrival stamp
+        # and cache lookup land *after* the gap, not before it
+        self._sync_idle_clock()
         if path == "/healthz" and method == "GET":
             self._send(writer, 200, {"ok": True, "clock": self.engine.clock,
                                      "steps": self.steps})
@@ -511,13 +586,46 @@ class HttpServer:
         elif path == "/v1/cache/flush" and method == "POST":
             n = self.front.cache.flush() if self.front.cache else 0
             self._send(writer, 200, {"ok": True, "flushed": n})
+        elif path == "/v1/session/open" and method == "POST":
+            if not self.engine.cfg.sessions:
+                self._send(writer, 400,
+                           {"ok": False, "op": "session_open",
+                            "error": "sessions disabled "
+                                     "(EngineConfig.sessions=False)"})
+                return
+            sid = self.engine.session_open(payload.get("sid"))
+            self._kick()
+            self._send(writer, 200, {"ok": True, "op": "session_open",
+                                     "sid": sid})
+        elif path.startswith("/v1/session/") and method == "GET":
+            info = self.engine.session_info(path[len("/v1/session/"):])
+            if info is None:
+                self._send(writer, 404,
+                           {"ok": False, "error": "unknown session"})
+            else:
+                self._send(writer, 200, dict(info, ok=True))
+        elif (path.startswith("/v1/session/") and path.endswith("/close")
+              and method == "POST"):
+            sid = path[len("/v1/session/"):-len("/close")]
+            if not self.engine.session_close(sid):
+                self._send(writer, 404,
+                           {"ok": False, "op": "session_close",
+                            "error": "unknown session"})
+            else:
+                self._kick()
+                self._send(writer, 200, {"ok": True, "op": "session_close",
+                                         "sid": sid})
         elif path.startswith("/v1/result/") and method == "GET":
             gen = self.front.gens.get(path[len("/v1/result/"):])
             if gen is None:
                 self._send(writer, 404, {"ok": False, "error": "unknown id"})
             elif gen.done:
+                # client-observed TTFT: a cache hit served its bytes
+                # immediately (0.0); ttft() is None for hits because
+                # they carry no decode sample for the distributions
+                ttft = 0.0 if gen.status == "cached" else gen.ttft()
                 self._send(writer, 200, dict(gen.result, status=gen.status,
-                                             ttft=gen.ttft(),
+                                             ttft=ttft,
                                              latency=gen.latency()))
             else:
                 self._send(writer, 200, {"ok": True, "id": gen.gid,

@@ -59,6 +59,15 @@ class ResponseCache:
     def __init__(self, ttl: Optional[float] = 600.0,
                  max_entries: int = 4096,
                  clock: Callable[[], float] = None):
+        if ttl is not None and clock is None:
+            # a constant clock never advances, so `clock() - inserted_at`
+            # is forever 0 and expiry silently never fires — refuse the
+            # footgun instead of caching stale responses indefinitely
+            raise ValueError(
+                "ResponseCache(ttl=...) requires a clock: entries age on "
+                "the injected timeline (engine virtual clock or "
+                "time.monotonic). Pass clock=..., or ttl=None to disable "
+                "expiry.")
         self.ttl = ttl
         self.max_entries = max_entries
         self.clock = clock or (lambda: 0.0)

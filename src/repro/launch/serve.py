@@ -184,6 +184,10 @@ def main():
                     help="tiny model + real paged KV + Pallas kernels")
     ap.add_argument("--prefetch", action="store_true",
                     help="host-tier promotion + workflow-aware KV prefetch")
+    ap.add_argument("--sessions", action="store_true",
+                    help="multi-turn sessions with TTL-scheduled KV "
+                         "pinning (session_id on /generate + "
+                         "/v1/session/* endpoints)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="cluster mode: route over N engine replicas")
     ap.add_argument("--route", default="affinity",
@@ -204,6 +208,8 @@ def main():
     if args.prefetch:
         kw.update(host_promotion=True,
                   temporal=TemporalConfig(prefetch=True))
+    if args.sessions:
+        kw.update(sessions=True)
     if args.http is not None:
         import asyncio
 

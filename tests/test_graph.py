@@ -134,13 +134,13 @@ def test_steps_to_execution_custom_cost_bypasses_cache():
 
 def test_steps_to_execution_cached_per_frontier():
     g, (a, b, c, d) = diamond()
-    key = ("ste", frozenset())
+    key = frozenset()
     g.steps_to_execution(d.node_id)
-    assert key in g._cache
-    eta = g._cache[key]
+    assert key in g._ste_cache
+    eta = g._ste_cache[key]
     # repeat call returns the same dict (no recompute), and distinct
     # frontiers get distinct cache entries
     g.steps_to_execution(b.node_id)
-    assert g._cache[key] is eta
+    assert g._ste_cache[key] is eta
     g.steps_to_execution(d.node_id, finished=frozenset({a.node_id}))
-    assert ("ste", frozenset({a.node_id})) in g._cache
+    assert frozenset({a.node_id}) in g._ste_cache

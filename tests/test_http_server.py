@@ -70,8 +70,16 @@ def test_cache_ttl_and_lru():
     assert len(c) == 0 and c.metrics["cached_bytes"] == 0
 
 
+def test_ttl_without_clock_rejected():
+    # a TTL on the default constant clock would never expire anything:
+    # the constructor refuses the silent footgun outright
+    with pytest.raises(ValueError):
+        ResponseCache(ttl=5.0)
+    ResponseCache(ttl=None)                            # no TTL: no clock ok
+
+
 def test_cache_report_shape():
-    c = ResponseCache(ttl=5.0)
+    c = ResponseCache(ttl=5.0, clock=lambda: 0.0)
     c.put("k", {"v": 1})
     c.get("k")
     c.get("missing")
@@ -92,7 +100,10 @@ def test_cache_hit_zero_engine_work():
     first = next(iter(fd.gens.values()))
     gen = fd.submit({"prompt": PROMPT, "max_tokens": 8})
     assert gen.status == "cached"
-    assert gen.ttft() == 0.0 and gen.latency() == 0.0
+    # hits carry no TTFT/TPOT sample (docs/SERVING_API.md semantics);
+    # end-to-end latency still counts the (instant) hit
+    assert gen.ttft() is None and gen.tpot() is None
+    assert gen.latency() == 0.0
     assert gen.result["tokens"] == first.result["tokens"]
     # the hit never touched the engine: no app, no decode step
     assert len(fd.engine.apps) == n_apps

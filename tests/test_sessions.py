@@ -1,0 +1,375 @@
+"""Multi-turn sessions: TTL-scheduled KV pinning across inter-turn gaps.
+
+Covers the ISSUE-10 acceptance points:
+  * lifecycle on the virtual timeline: turn end -> offload to the host
+    tier -> predictive warm-back -> turn 2 pays only a suffix prefill;
+  * a pending TTL goes stale the moment the next turn arrives
+    (generation counter), and fires when the user never comes back;
+  * drop/pin policy baselines actually drop / actually stay resident;
+  * token identity under the real JAX backend: turn-2 decode over
+    pinned-then-restored KV equals a fresh dense recompute of the full
+    history;
+  * front-door wiring: session endpoints over a real socket, and the
+    idle wall-clock gap driving response-cache expiry (satellite 1);
+  * the steps-to-execution memo stays bounded over long-lived graphs
+    (satellite 4).
+"""
+import http.client
+import json
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import A100_PCIE
+from repro.core.engine import Engine, EngineConfig
+from repro.core.graph import AppGraph
+from repro.core.temporal import TemporalConfig
+from repro.launch.http_server import FrontDoor, HttpServer, synth_tokens
+
+BT = A100_PCIE.block_tokens
+
+
+def mk_session_engine(policy="ttl", **kw):
+    tcfg = kw.pop("temporal", TemporalConfig(session_policy=policy))
+    ekw = dict(gpu_blocks=256, max_running=8, continuous_batching=True,
+               sessions=True, temporal=tcfg)
+    ekw.update(kw)
+    eng = Engine(EngineConfig.preset("tokencake", **ekw), A100_PCIE)
+    return eng, FrontDoor(eng, cache=None)
+
+
+def run_turn(fd, prompt, sid="A", max_tokens=16, arrival=None):
+    gen = fd.submit({"prompt": prompt, "max_tokens": max_tokens,
+                     "session_id": sid}, arrival=arrival)
+    fd.drive()
+    assert gen.status == "finished"
+    return gen
+
+
+# ------------------------------------------------------------- lifecycle sim
+
+def test_turn_end_offloads_then_warms_then_suffix_prefill():
+    """The full inter-turn arc: cold-start turn end picks offload (the
+    default 10s gap prior dwarfs the PCIe roundtrip), the D2H save frees
+    the device copy, the predictive warm lands the KV back ahead of the
+    forecast next turn, and turn 2's prefill bill is the suffix only."""
+    eng, fd = mk_session_engine()
+    p1 = synth_tokens("sess/p", 8 * BT)
+    g1 = run_turn(fd, p1)
+
+    info = eng.session_info("A")
+    assert info["turns"] == 1
+    assert info["state"] == "offloaded"
+    # published context caps at the PROMPT block boundary: generated
+    # slots carry re-feed-shifted KV and must not be republished
+    n_ctx = len(p1) // BT
+    assert info["host_blocks"] == n_ctx
+    assert info["context_tokens"] == n_ctx * BT
+    assert info["device_blocks"] == 0      # D2H landed, device copy freed
+    assert eng.session_metrics["session_offloads"] == 1
+    # TTL priced off the cold-start cap, not the synthetic default gap,
+    # and anchored at the turn's end on the virtual timeline
+    assert info["ttl_deadline"] == pytest.approx(
+        g1.finish + eng.cfg.temporal.session_ttl, abs=1.0)
+
+    # turn 2 resends the whole history + new user tokens, arriving past
+    # the forecast gap: the warm event (scheduled ahead of it on the
+    # same heap) restores the KV before admission sees the prompt
+    p2 = p1 + g1.result["tokens"] + synth_tokens("sess/u2", 2 * BT)
+    before = eng.metrics["prefill_tokens"]
+    run_turn(fd, p2, arrival=g1.finish + 12.0)
+    assert eng.session_metrics["session_warms"] == 1
+    assert eng.metrics["prefetch_hits"] >= 1     # warm blocks got pinned
+    suffix = eng.metrics["prefill_tokens"] - before
+    # only the un-pinned tail reprefills: turn 1's generated tokens +
+    # the new user tokens (the pinned prompt blocks are skipped)
+    assert suffix == len(p2) - n_ctx * BT
+    assert eng.session_metrics["session_turns"] == 2
+
+
+def test_arriving_turn_stales_pending_ttl():
+    """A turn that shows up before the deadline must beat the clock:
+    the TTL event scheduled at turn 1's end still fires later, but its
+    generation no longer matches and it is discarded."""
+    eng, fd = mk_session_engine(
+        temporal=TemporalConfig(session_ttl=20.0))
+    p1 = synth_tokens("stale/p", 4 * BT)
+    g1 = run_turn(fd, p1)
+    deadline1 = eng.session_info("A")["ttl_deadline"]
+    # next turn arrives comfortably inside the window
+    p2 = p1 + g1.result["tokens"] + synth_tokens("stale/u", BT)
+    run_turn(fd, p2, arrival=g1.finish + 12.0)
+    # run PAST turn 1's (stale) deadline: the session must survive it
+    eng.run(max_time=deadline1 + 5.0)
+    assert eng.session_info("A")["state"] != "dropped"
+    assert eng.session_metrics["session_expired"] == 0
+
+
+def test_ttl_expiry_frees_everything():
+    """Past-TTL with no returning turn: KV dropped on both tiers and the
+    pools return to their empty-state accounting (no leaked pin, no
+    leaked host save, nothing left LRU-indexed)."""
+    # TTL above the default-gap prior (a gap >= TTL prices as an
+    # immediate drop, which is a different decision than expiry)
+    eng, fd = mk_session_engine(
+        temporal=TemporalConfig(session_ttl=15.0))
+    run_turn(fd, synth_tokens("ttl/p", 6 * BT))
+    assert eng.session_info("A")["state"] != "dropped"
+    eng.run(max_time=eng.clock + 60.0)
+    assert eng.session_info("A")["state"] == "dropped"
+    assert eng.session_metrics["session_expired"] == 1
+    # full teardown: every device block back on the raw free list
+    # (nothing pinned AND nothing cached), host tier empty
+    for p in eng.pools:
+        assert len(p.free_list) == p.num_blocks
+    assert eng.host.free == eng.cfg.host_blocks
+    assert eng.session_info("A")["host_blocks"] == 0
+
+
+def test_session_close_beats_ttl():
+    eng, fd = mk_session_engine()
+    run_turn(fd, synth_tokens("close/p", 4 * BT))
+    assert eng.session_close("A") is True
+    assert eng.session_info("A")["state"] == "dropped"
+    for p in eng.pools:
+        assert len(p.free_list) == p.num_blocks
+    assert eng.host.free == eng.cfg.host_blocks
+    assert eng.session_close("nope") is False
+
+
+def test_drop_policy_recomputes_full_history():
+    """drop_always is only an honest baseline if the dropped KV is
+    actually gone: turn 2 must pay the full-history prefill, not
+    silently prefix-hit blocks the finishing request left LRU-indexed
+    (the ordering bug this PR fixes: the drop now re-runs after the
+    request's own refs release)."""
+    eng, fd = mk_session_engine(policy="drop")
+    p1 = synth_tokens("drop/p", 6 * BT)
+    g1 = run_turn(fd, p1)
+    assert eng.session_info("A")["state"] == "dropped"
+    for p in eng.pools:
+        assert len(p.free_list) == p.num_blocks
+    p2 = p1 + g1.result["tokens"] + synth_tokens("drop/u", BT)
+    before = eng.metrics["prefill_tokens"]
+    run_turn(fd, p2, arrival=eng.clock + 5.0)
+    assert eng.metrics["prefill_tokens"] - before == len(p2)
+    assert eng.session_metrics["session_drops"] >= 1
+    assert eng.session_metrics["session_offloads"] == 0
+
+
+def test_pin_policy_stays_resident_no_ttl():
+    eng, fd = mk_session_engine(policy="pin")
+    p1 = synth_tokens("pin/p", 6 * BT)
+    g1 = run_turn(fd, p1)
+    info = eng.session_info("A")
+    assert info["state"] == "resident"
+    assert info["ttl_deadline"] is None           # pinned forever
+    assert info["device_blocks"] > 0 and info["host_blocks"] == 0
+    # survives an arbitrarily long idle stretch
+    eng.run(max_time=eng.clock + 1e4)
+    assert eng.session_info("A")["state"] == "resident"
+    p2 = p1 + g1.result["tokens"] + synth_tokens("pin/u", BT)
+    before = eng.metrics["prefill_tokens"]
+    run_turn(fd, p2, arrival=eng.clock + 1.0)
+    assert eng.metrics["prefill_tokens"] - before < len(p2)
+
+
+def test_sessions_off_report_untouched():
+    """Byte-identity guard: the sessions-off report has no session keys
+    and session_id payloads are ignored by the engine."""
+    eng = Engine(EngineConfig.preset("tokencake", gpu_blocks=256,
+                                     continuous_batching=True), A100_PCIE)
+    fd = FrontDoor(eng, cache=None)
+    fd.submit({"prompt": synth_tokens("off/p", 2 * BT), "max_tokens": 8,
+               "session_id": "A"})
+    fd.drive()
+    rep = eng.report()
+    assert not any(k.startswith("session") for k in rep)
+    assert eng.sessions == {}
+
+
+# --------------------------------------------------- JAX backend identity
+
+def test_turn2_tokens_identical_to_dense_recompute_jax():
+    """Acceptance: decoding turn 2 over session KV that round-tripped
+    device -> host -> device (offload + predictive warm) produces the
+    exact token sequence a fresh engine computes densely over the same
+    full history. Greedy decode makes any KV corruption visible."""
+    from repro.core.backend import JaxBackend
+    cfg = ModelConfig(name="tiny-f32", arch_type="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    rng = np.random.default_rng(23)
+    p1 = [int(t) for t in rng.integers(0, 128, 3 * BT - 4)]
+    user2 = [int(t) for t in rng.integers(0, 128, BT)]
+
+    ecfg = EngineConfig.preset(
+        "tokencake", gpu_blocks=96, host_blocks=64, max_running=8,
+        sched_quantum=8, continuous_batching=True, sessions=True)
+    backend = JaxBackend(cfg, ecfg, A100_PCIE)
+    eng = Engine(ecfg, A100_PCIE, backend=backend)
+    fd = FrontDoor(eng, cache=None)
+    g1 = fd.submit({"prompt": p1, "max_tokens": 8, "session_id": "s"})
+    fd.drive()
+    resp1 = backend.generated[g1.rid]
+    assert len(resp1) == 8
+    assert eng.session_info("s")["state"] in ("offloading", "offloaded")
+    # turn 2 arrives past the forecast gap: the scheduled warm-back
+    # restores the real KV bytes host -> device ahead of admission
+    p2 = p1 + resp1 + user2
+    before = eng.metrics["prefill_tokens"]
+    g2 = fd.submit({"prompt": p2, "max_tokens": 8, "session_id": "s"},
+                   arrival=g1.finish + 12.0)
+    fd.drive()
+    assert g2.status == "finished"
+    assert eng.session_metrics["session_warms"] == 1
+    session_tokens = backend.generated[g2.rid]
+    # the session run really skipped the pinned prefix
+    assert eng.metrics["prefill_tokens"] - before < len(p2)
+
+    # fresh dense recompute of the identical history, sessions off
+    ecfg2 = EngineConfig.preset(
+        "tokencake", gpu_blocks=96, host_blocks=64, max_running=8,
+        sched_quantum=8, continuous_batching=True)
+    backend2 = JaxBackend(cfg, ecfg2, A100_PCIE)
+    eng2 = Engine(ecfg2, A100_PCIE, backend=backend2)
+    fd2 = FrontDoor(eng2, cache=None)
+    ref = fd2.submit({"prompt": p2, "max_tokens": 8})
+    fd2.drive()
+    dense_tokens = backend2.generated[ref.rid]
+    assert session_tokens == dense_tokens
+    assert len(session_tokens) == 8
+
+
+# ----------------------------------------------------- front door / HTTP
+
+def test_idle_wall_gap_drives_cache_expiry():
+    """Satellite 1: the engine's virtual clock does not tick while the
+    server is parked, so the pump anchors wall time when it idles and
+    folds the gap back in on wake — a TTL'd response must expire across
+    a quiet stretch even though no engine event ever advanced the
+    clock."""
+    srv = HttpServer(engine_kw=dict(gpu_blocks=128), cache_ttl=5.0)
+    srv.front.cache.put("k", {"v": 1})
+    clk0 = srv.engine.clock
+    srv._idle_anchor = (time.monotonic() - 10.0, clk0)   # parked 10s ago
+    srv._sync_idle_clock()
+    assert srv.engine.clock >= clk0 + 10.0
+    assert len(srv.front.cache) == 0                     # swept on wake
+    assert srv.front.cache.metrics["expirations"] == 1
+    assert srv._idle_anchor is None                      # consumed
+
+
+def _req(port, method, path, body=None):
+    c = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+    c.request(method, path,
+              json.dumps(body) if body is not None else None,
+              {"Content-Type": "application/json"})
+    r = c.getresponse()
+    raw = r.read()
+    c.close()
+    return r.status, json.loads(raw)
+
+
+def _drain(srv, port, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        _, rep = _req(port, "GET", "/v1/report")
+        if rep["serving"]["outstanding"] == 0:
+            return rep
+        time.sleep(0.02)
+    raise AssertionError("server did not drain")
+
+
+@pytest.fixture(scope="module")
+def session_server():
+    srv = HttpServer(engine_kw=dict(gpu_blocks=256, sessions=True),
+                     cache_ttl=0.75)
+    port = srv.start_background()
+    yield srv, port
+    srv.stop()
+
+
+def test_http_session_endpoints_roundtrip(session_server):
+    srv, port = session_server
+    status, out = _req(port, "POST", "/v1/session/open", {"sid": "chat1"})
+    assert status == 200 and out["ok"] and out["sid"] == "chat1"
+    status, out = _req(port, "POST", "/generate",
+                       {"prompt": synth_tokens("http/p", 4 * BT),
+                        "max_tokens": 8, "session_id": "chat1"})
+    assert status == 200 and out["ok"]
+    _drain(srv, port)
+    status, info = _req(port, "GET", "/v1/session/chat1")
+    assert status == 200 and info["turns"] == 1
+    assert info["state"] in ("resident", "offloading", "offloaded",
+                             "warming")
+    assert info["context_tokens"] > 0
+    status, _ = _req(port, "GET", "/v1/session/nope")
+    assert status == 404
+    status, out = _req(port, "POST", "/v1/session/chat1/close")
+    assert status == 200 and out["ok"]
+    status, info = _req(port, "GET", "/v1/session/chat1")
+    assert status == 200 and info["state"] == "dropped"
+    status, _ = _req(port, "POST", "/v1/session/nope/close")
+    assert status == 404
+
+
+def test_http_sessions_disabled_rejected():
+    srv = HttpServer(engine_kw=dict(gpu_blocks=128))   # sessions off
+    port = srv.start_background()
+    try:
+        status, out = _req(port, "POST", "/v1/session/open", {})
+        assert status == 400 and out["ok"] is False
+        assert "disabled" in out["error"]
+    finally:
+        srv.stop()
+
+
+def test_http_idle_server_expires_cached_response(session_server):
+    """End-to-end satellite 1: hit inside the TTL, then a wall-clock
+    quiet period longer than the TTL turns the same request back into a
+    miss — the parked pump's anchor carried the gap into the virtual
+    clock that prices the cache."""
+    srv, port = session_server
+    _drain(srv, port)
+    body = {"prompt": synth_tokens("idle/p", 3 * BT), "max_tokens": 6}
+    status, out = _req(port, "POST", "/generate", body)
+    assert status == 200 and out["cached"] is False
+    status, hit = _req(port, "POST", "/generate", body)
+    assert status == 200 and hit["cached"] is True
+    time.sleep(1.5)                        # wall idle > cache_ttl=0.75
+    status, out2 = _req(port, "POST", "/generate", body)
+    assert status == 200 and out2["cached"] is False
+    assert srv.front.cache.metrics["expirations"] >= 1
+
+
+# -------------------------------------------------------- graph memo bound
+
+def test_steps_to_execution_memo_bounded():
+    """Satellite 4: one distinct ``finished`` frontier per turn used to
+    grow the memo forever on long-lived session graphs; the LRU bound
+    caps it while still serving repeat frontiers from cache."""
+    g = AppGraph("long-lived")
+    prev = []
+    for i in range(8):
+        prev = [g.add_agent(f"n{i}", "worker", 32, 4, deps=prev)]
+    last = prev[0].node_id
+    for i in range(300):
+        # bitmask-derived frontiers: far more distinct sets than the bound
+        frontier = frozenset(j for j in range(7) if (i >> j) & 1)
+        g.steps_to_execution(last, frontier)
+        assert len(g._ste_cache) <= AppGraph._STE_CACHE_MAX
+    # repeat lookups still hit: cached result is reused, not recomputed
+    eta_a = g.steps_to_execution(last, frozenset())
+    assert frozenset() in g._ste_cache
+    assert g.steps_to_execution(last, frozenset()) == eta_a
+    # memoized answer matches the uncached live-cost path
+    live = g.steps_to_execution(
+        last, frozenset(), node_cost=lambda n: g.work_estimate(g.nodes[n]))
+    assert eta_a == pytest.approx(live)
+    # graph mutation invalidates the memo wholesale
+    g.add_agent("tail", "worker", 16, 2, deps=[last])
+    assert len(g._ste_cache) == 0
